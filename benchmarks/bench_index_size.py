@@ -1,0 +1,46 @@
+"""Paper table: SIZE OF THE INDEXES.
+
+Reports bytes for each additional index and the ordinary index, plus the
+ratios the paper's claim rests on (total additional-index size vs corpus,
+~5.7x in the paper at 259 GB / 45 GB)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_world
+
+
+def run(n_docs: int = 1200) -> dict:
+    w = bench_world(n_docs)
+    idx = w["index"]
+    corpus = w["corpus"]
+    rep = idx.size_report()
+    corpus_bytes = int(corpus.n_tokens) * 6     # ~6 bytes/token as stored text
+    rows = {
+        "stop_phrase_index_bytes": rep["stop_phrase_index_bytes"],
+        "expanded_index_bytes": rep["expanded_index_bytes"],
+        "basic_index_bytes": rep["basic_index_bytes"],
+        "additional_total_bytes": (rep["stop_phrase_index_bytes"]
+                                   + rep["expanded_index_bytes"]
+                                   + rep["basic_index_bytes"]),
+        "ordinary_index_bytes": rep["ordinary_index_bytes"],
+        "corpus_bytes_est": corpus_bytes,
+        "n_tokens": int(corpus.n_tokens),
+        "n_docs": corpus.n_docs,
+        "stop_phrase_postings": rep["stop_phrase_postings"],
+        "expanded_postings": rep["expanded_postings"],
+        "basic_postings": rep["basic_postings"],
+        "ordinary_postings": rep["ordinary_postings"],
+    }
+    rows["additional_over_corpus"] = rows["additional_total_bytes"] / corpus_bytes
+    rows["ordinary_over_corpus"] = rows["ordinary_index_bytes"] / corpus_bytes
+    rows["paper_additional_over_corpus"] = 259.0 / 45.0      # 5.76x
+    rows["paper_ordinary_over_corpus"] = 18.7 / 45.0         # Sphinx 0.42x
+    return rows
+
+
+def main():
+    for k, v in run().items():
+        print(f"index_size.{k},{v:.4g}" if isinstance(v, float) else f"index_size.{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper tables: SEARCH SPEED — mean/max query time and postings read, for
+the additional-index engine vs the ordinary (Sphinx-style) inverted index,
+on the paper's query workload.  Also verifies every query finds its source
+document (the paper's correctness check)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_world, paper_query_stream
+
+
+def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1) -> dict:
+    w = bench_world(n_docs)
+    eng, base = w["engine"], w["ordinary"]
+    queries = paper_query_stream(w["corpus"], n_queries, seed=seed)
+
+    stats = {"add": {"postings": [], "time": []},
+             "ord": {"postings": [], "time": []}}
+    missed = 0
+    # warm pass (jit compile per shape bucket), then timed pass
+    for q, mode, _src in queries[: min(len(queries), 64)]:
+        eng.search(q, mode=mode)
+        base.search(q, mode=mode)
+    for q, mode, src in queries:
+        t0 = time.perf_counter()
+        r = eng.search(q, mode=mode)
+        stats["add"]["time"].append(time.perf_counter() - t0)
+        stats["add"]["postings"].append(r.postings_read)
+        if src not in set(r.doc.tolist()):
+            missed += 1
+        t0 = time.perf_counter()
+        r2 = base.search(q, mode=mode)
+        stats["ord"]["time"].append(time.perf_counter() - t0)
+        stats["ord"]["postings"].append(r2.postings_read)
+
+    out = {"n_queries": len(queries), "missed_source_docs": missed}
+    for k in ("add", "ord"):
+        p = np.array(stats[k]["postings"], np.float64)
+        t = np.array(stats[k]["time"], np.float64)
+        out[f"{k}_postings_mean"] = float(p.mean())
+        out[f"{k}_postings_max"] = float(p.max())
+        out[f"{k}_time_mean_ms"] = float(t.mean() * 1e3)
+        out[f"{k}_time_max_ms"] = float(t.max() * 1e3)
+    out["postings_mean_ratio"] = out["ord_postings_mean"] / out["add_postings_mean"]
+    out["postings_max_ratio"] = out["ord_postings_max"] / out["add_postings_max"]
+    out["time_mean_ratio"] = out["ord_time_mean_ms"] / out["add_time_mean_ms"]
+    out["time_max_ratio"] = out["ord_time_max_ms"] / out["add_time_max_ms"]
+    # the paper's measured ratios (45 GB corpus, HDD, single thread)
+    out["paper_postings_mean_ratio"] = 112e6 / 274e3      # ~409x
+    out["paper_postings_max_ratio"] = 505e6 / 6e6         # ~84x
+    out["paper_time_mean_ratio"] = 1.01 / 0.13            # ~7.8x
+    out["paper_time_max_ratio"] = 17.82 / 1.31            # ~13.6x
+    return out
+
+
+def main():
+    for k, v in run().items():
+        print(f"search_speed.{k},{v:.6g}" if isinstance(v, float) else f"search_speed.{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Shared benchmark world: a corpus + built indexes at a configurable scale.
+
+Default scale keeps the full benchmark run in minutes on one CPU core while
+preserving the paper's regime (Zipf tiers, multi-form words, stop mass).
+The paper's absolute scale (45 GB, 130k docs) is exercised structurally by
+the dry-run arenas; latency/postings ratios are scale-stable (they depend on
+posting-list length ratios, not corpus size).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core import (AdditionalIndexEngine, CorpusConfig, IndexParams,
+                        LexiconConfig, OrdinaryEngine, build_all,
+                        generate_corpus, make_lexicon_and_analyzer)
+
+
+@functools.lru_cache(maxsize=2)
+def bench_world(n_docs: int = 1200, mean_doc_len: float = 800.0, seed: int = 0):
+    lc = LexiconConfig(seed=seed)         # 50k surface / 40k base / 700 / 2100
+    lex, ana = make_lexicon_and_analyzer(lc)
+    corpus = generate_corpus(lc, CorpusConfig(n_docs=n_docs,
+                                              mean_doc_len=mean_doc_len,
+                                              seed=seed))
+    index = build_all(corpus, lex, ana, IndexParams())
+    return {"lex": lex, "ana": ana, "corpus": corpus, "index": index,
+            "engine": AdditionalIndexEngine(index),
+            "ordinary": OrdinaryEngine(index)}
+
+
+def paper_query_stream(corpus, n_queries: int, seed: int = 1):
+    """The paper's experiment procedure (STRUCTURE OF SEARCH EXPERIMENTS):
+    random indexed document; 2.1 = consecutive words, 2.2 = every other
+    word; 3..5 words per query."""
+    rng = np.random.default_rng(seed)
+    out = []
+    while len(out) < n_queries:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        n = int(rng.integers(3, 6))
+        if len(toks) < 2 * n + 2:
+            continue
+        st = int(rng.integers(0, len(toks) - 2 * n))
+        out.append((toks[st:st + n].tolist(), "phrase", d))
+        if len(out) < n_queries:
+            out.append((toks[st:st + 2 * n:2].tolist(), "near", d))
+    return out

@@ -1,0 +1,128 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver for gin-tu / ogb_products (collective-bound).
+
+Variants: baseline (f32 messages), bf16 messages, halo (boundary-only
+exchange — measured separately via the shard_map path in models/gnn.py).
+"""
+import dataclasses
+import functools
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks import roofline as rl
+from repro.configs.registry import get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+
+def measure_cell(arch, shape, mesh):
+    cell = build_cell(arch, shape, mesh)
+    with mesh:
+        compiled = jax.jit(cell.step, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate).lower(*cell.in_specs).compile()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+    looped = rl.parse_hlo_costs(hlo)
+    terms = rl.roofline_terms(looped["flops"], looped["bytes"],
+                              float(coll.total_bytes), mesh.size)
+    mem = compiled.memory_analysis()
+    return terms, coll, mem
+
+
+def measure_halo(mesh, n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                 n_classes=47, boundary_frac=1.0, edge_imbalance=1.3):
+    """Structural dry-run of the halo-exchange GIN train step at ogb scale.
+
+    boundary_frac = B / Nl (1.0 = worst case: every local node is boundary;
+    locality-aware partitions measured on scaled graphs reach ~0.6)."""
+    from jax import shard_map
+    from repro.models import gnn
+    from repro.train import optimizer as opt
+    from repro.launch.steps import OPT_CFG
+
+    S = mesh.shape["data"] * mesh.shape["model"] * \
+        (mesh.shape["pod"] if "pod" in mesh.axis_names else 1)
+    Nl = (n_nodes + S - 1) // S
+    El = int(n_edges / S * edge_imbalance)
+    B = max(int(Nl * boundary_frac), 1)
+    cfg = dataclasses.replace(get_arch("gin-tu").make_config(),
+                              d_feat=d_feat, n_classes=n_classes,
+                              message_dtype=jnp.bfloat16)
+    params_struct = jax.eval_shape(
+        functools.partial(gnn.init_params, cfg), jax.random.PRNGKey(0))
+    f32, i32 = jnp.float32, jnp.int32
+    shard_struct = {
+        "nodes": jax.ShapeDtypeStruct((S, Nl, d_feat), f32),
+        "src": jax.ShapeDtypeStruct((S, El), i32),
+        "dst": jax.ShapeDtypeStruct((S, El), i32),
+        "edge_mask": jax.ShapeDtypeStruct((S, El), jnp.bool_),
+        "labels": jax.ShapeDtypeStruct((S, Nl), i32),
+        "label_mask": jax.ShapeDtypeStruct((S, Nl), jnp.bool_),
+        "send_idx": jax.ShapeDtypeStruct((S, B), i32),
+    }
+    opt_struct = jax.eval_shape(
+        functools.partial(opt.init_state, OPT_CFG), params_struct)
+    axes = tuple(mesh.axis_names)
+
+    def local_step(params, opt_state, shard):
+        def loss(p):
+            return gnn.halo_loss_fn(cfg, p, shard, axis_name=axes)
+        (l, m), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        grads = jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g, axes) / S, grads)
+        new_p, new_o, om = opt.apply_updates(OPT_CFG, params, grads, opt_state)
+        return new_p, new_o, dict(m, loss=l, **om)
+
+    fn = shard_map(local_step, mesh=mesh,
+                   in_specs=(P(), P(), {k: P(axes) for k in shard_struct}),
+                   out_specs=(P(), P(), P()), check_vma=False)
+    rep = NamedSharding(mesh, P())
+    p_sh = jax.tree_util.tree_map(lambda _: rep, params_struct)
+    o_sh = jax.tree_util.tree_map(lambda _: rep, opt_struct)
+    s_sh = {k: NamedSharding(mesh, P(axes)) for k in shard_struct}
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=(p_sh, o_sh, s_sh)).lower(
+            params_struct, opt_struct, shard_struct).compile()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+    looped = rl.parse_hlo_costs(hlo)
+    terms = rl.roofline_terms(looped["flops"], looped["bytes"],
+                              float(coll.total_bytes), mesh.size)
+    return terms, coll
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+    import repro.configs.gin_tu as gin_cfg
+    base_make = gin_cfg.make_config
+
+    def report(tag):
+        terms, coll, mem = measure_cell("gin-tu", "ogb_products", mesh)
+        print(f"{tag:30s} coll={terms['t_collective_s']*1e3:8.2f} ms "
+              f"mem={terms['t_memory_s']*1e3:8.2f} ms "
+              f"compute={terms['t_compute_s']*1e3:6.3f} ms "
+              f"bytes={ {k: round(v/1e9,2) for k,v in coll.bytes_by_type.items() if v} }")
+
+    report("baseline f32 messages")
+
+    gin_cfg.SPEC = dataclasses.replace(
+        gin_cfg.SPEC, make_config=lambda: dataclasses.replace(
+            base_make(), message_dtype=jnp.bfloat16))
+    report("bf16 messages (SPMD)")
+
+    for bf, tag in ((1.0, "halo worst-case B=Nl"), (0.6, "halo B=0.6*Nl")):
+        terms, coll = measure_halo(mesh, boundary_frac=bf)
+        print(f"{tag:30s} coll={terms['t_collective_s']*1e3:8.2f} ms "
+              f"mem={terms['t_memory_s']*1e3:8.2f} ms "
+              f"compute={terms['t_compute_s']*1e3:6.3f} ms "
+              f"bytes={ {k: round(v/1e9,2) for k,v in coll.bytes_by_type.items() if v} }")
+
+
+if __name__ == "__main__":
+    main()

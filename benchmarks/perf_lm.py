@@ -1,0 +1,69 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver for llama3-8b / train_4k (collective-bound)."""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+
+def measure(mesh, arch="llama3-8b", shape="train_4k", layout="2d"):
+    cell = build_cell(arch, shape, mesh, layout=layout)
+    with mesh:
+        compiled = jax.jit(cell.step, in_shardings=cell.in_shardings,
+                           out_shardings=cell.out_shardings,
+                           donate_argnums=cell.donate).lower(*cell.in_specs).compile()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+    looped = rl.parse_hlo_costs(hlo)
+    terms = rl.roofline_terms(looped["flops"], looped["bytes"],
+                              float(coll.total_bytes), mesh.size)
+    mem = compiled.memory_analysis()
+    return terms, coll, mem
+
+
+def report(tag, mesh, arch="llama3-8b", layout="2d"):
+    terms, coll, mem = measure(mesh, arch, layout=layout)
+    frac = terms["t_compute_s"] / max(terms["t_dominant_s"], 1e-12)
+    print(f"{tag:34s} coll={terms['t_collective_s']:7.2f} s "
+          f"mem={terms['t_memory_s']:6.2f} s compute={terms['t_compute_s']:5.2f} s "
+          f"peak={mem.temp_size_in_bytes/1e9:5.1f} GB "
+          f"frac={frac:.3f} "
+          f"bytes={ {k: round(v/1e9) for k, v in coll.bytes_by_type.items() if v} }")
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+    import repro.configs.llama3_8b as cfg_mod
+    base_make = cfg_mod.make_config
+
+    report("baseline (f32 FSDP gathers)", mesh)
+
+    cfg_mod.SPEC = dataclasses.replace(
+        cfg_mod.SPEC, make_config=lambda: dataclasses.replace(
+            base_make(), pre_cast_layers=True))
+    report("pre-cast layers to bf16", mesh)
+
+    cfg_mod.SPEC = dataclasses.replace(
+        cfg_mod.SPEC, make_config=lambda: dataclasses.replace(
+            base_make(), pre_cast_layers=True, bf16_grads=True))
+    report("pre-cast + bf16 backward", mesh)
+
+    cfg_mod.SPEC = dataclasses.replace(
+        cfg_mod.SPEC, make_config=base_make)
+    report("pure ZeRO-3 FSDP (no TP)", mesh, layout="fsdp")
+
+    cfg_mod.SPEC = dataclasses.replace(
+        cfg_mod.SPEC, make_config=lambda: dataclasses.replace(
+            base_make(), bf16_grads=True))
+    report("ZeRO-3 + bf16 backward", mesh, layout="fsdp")
+
+
+if __name__ == "__main__":
+    main()

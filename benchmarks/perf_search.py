@@ -1,0 +1,60 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver for the paper's serve cell (veretennikov).
+
+Sweeps the serve-step variants and reports the three roofline terms per
+variant.  Usage: PYTHONPATH=src python -m benchmarks.perf_search
+"""
+import dataclasses
+import sys
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.serve import search_serve as ss
+
+
+def measure(cfg, mesh):
+    n_dp = mesh.shape["data"] * (mesh.shape["pod"] if "pod" in mesh.axis_names else 1)
+    arenas = ss.arena_specs(cfg, n_dp)
+    queries = ss.query_table_specs(cfg)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    a_sh = {k: NamedSharding(mesh, P(dp)) for k in arenas}
+    q_sh = {k: NamedSharding(mesh, P()) for k in queries}
+    step = ss.make_search_serve_step(cfg, mesh)
+    with mesh:
+        compiled = jax.jit(step, in_shardings=(a_sh, q_sh)).lower(
+            arenas, queries).compile()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+    looped = rl.parse_hlo_costs(hlo)
+    terms = rl.roofline_terms(looped["flops"], looped["bytes"],
+                              float(coll.total_bytes), mesh.size)
+    return terms
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+    variants = [
+        ("baseline (P0=32k, sort)", dict(seed_pad=0, sort_free=False)),
+        ("seed_pad=8k", dict(seed_pad=8192, sort_free=False)),
+        ("seed_pad=8k + sort-free", dict(seed_pad=8192, sort_free=True)),
+        ("seed_pad=4k + sort-free", dict(seed_pad=4096, sort_free=True)),
+        ("seed_pad=2k + sort-free", dict(seed_pad=2048, sort_free=True)),
+        ("seed4k + packed keys", dict(seed_pad=4096, packed_keys=True)),
+        ("seed4k + packed + sortfree", dict(seed_pad=4096, packed_keys=True,
+                                            sort_free=True)),
+    ]
+    for name, kw in variants:
+        cfg = dataclasses.replace(ss.SearchServeConfig(), **kw)
+        t = measure(cfg, mesh)
+        print(f"{name:28s} mem={t['t_memory_s']*1e3:8.2f} ms  "
+              f"coll={t['t_collective_s']*1e3:6.3f} ms  "
+              f"compute={t['t_compute_s']*1e3:6.3f} ms  dom={t['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

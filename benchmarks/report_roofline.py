@@ -1,0 +1,63 @@
+"""Render the §Roofline table from the dry-run JSON records.
+
+Usage:  PYTHONPATH=src python -m benchmarks.report_roofline [dir] [--md]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load_records(d: str = "experiments/dryrun") -> list[dict]:
+    out = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def fmt_row(r: dict) -> dict:
+    t = r["roofline"]
+    ratio = r.get("useful_ratio")
+    peak = r["memory"].get("peak_bytes") or 0
+    arch = r["arch"]
+    if r.get("layout", "2d") != "2d":
+        arch += f" [{r['layout']}]"
+    return {
+        "arch": arch, "shape": r["shape"], "mesh": r["mesh"],
+        "kind": r["kind"],
+        "t_compute_s": t["t_compute_s"], "t_memory_s": t["t_memory_s"],
+        "t_collective_s": t["t_collective_s"], "dominant": t["dominant"],
+        "model_flops": r.get("model_flops"),
+        "useful_ratio": ratio,
+        "peak_gb": peak / 1e9,
+        "frac_of_roofline": (t["t_compute_s"] / t["t_dominant_s"]
+                             if t["t_dominant_s"] else None),
+    }
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 and not sys.argv[1].startswith("-") \
+        else "experiments/dryrun"
+    md = "--md" in sys.argv
+    rows = [fmt_row(r) for r in load_records(d)]
+    hdr = ["arch", "shape", "mesh", "dominant", "t_compute_s", "t_memory_s",
+           "t_collective_s", "useful_ratio", "frac_of_roofline", "peak_gb"]
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for r in rows:
+        vals = []
+        for h in hdr:
+            v = r[h]
+            vals.append(f"{v:.3g}" if isinstance(v, float) and v is not None
+                        else str(v))
+        print(("| " + " | ".join(vals) + " |") if md else ",".join(vals))
+
+
+if __name__ == "__main__":
+    main()

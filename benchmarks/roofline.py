@@ -1,0 +1,380 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the task spec:
+
+    compute    = HLO_FLOPs / (chips * 197e12)          [bf16 peak / chip]
+    memory     = HLO_bytes / (chips * 819e9)           [HBM bw / chip]
+    collective = collective_bytes / (chips * 50e9)     [ICI link bw]
+
+cost_analysis() reports the per-device SPMD program; we normalize to global
+(x chips) so the formulas above apply directly.  collective_bytes is parsed
+from the optimized HLO text, with while-loop bodies scaled by their trip
+count (recovered from the loop-condition constant — scans have static trip
+counts in this framework).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum sizes of every dtype[shape] group in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_type: dict
+    total_bytes: int
+    op_counts: dict
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    """Parse per-device collective bytes from optimized HLO text, scaling
+    while-body collectives by loop trip count."""
+    # 1. split into computations: headers are column-0 lines ending in "{"
+    #    (signatures may contain /*index=N*/ comments, so no "=" heuristics)
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if line and not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", line.strip())
+            if m and not line.startswith("HloModule"):
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # 2. while ops: body -> trip count (max s32 constant in the condition)
+    body_trip: dict[str, int] = {}
+    cond_of_body: dict[str, str] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)", line)
+            if not m:
+                m2 = re.search(r"body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)", line)
+                if m2:
+                    cond_of_body[m2.group(1)] = m2.group(2)
+                continue
+            cond_of_body[m.group(2)] = m.group(1)
+    for body, cond in cond_of_body.items():
+        trip = 1
+        for line in comps.get(cond, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                trip = max(trip, int(c))
+        body_trip[body] = trip
+
+    # 3. multiplier per computation: entry = 1; while bodies multiply
+    mult: dict[str, int] = {}
+
+    def resolve(name: str, seen=()) -> int:
+        if name in mult:
+            return mult[name]
+        if name in seen:
+            return 1
+        m = 1
+        # find callers: computations whose while op uses this body
+        for caller, lines in comps.items():
+            if caller == name:
+                continue
+            for line in lines:
+                if f"body=%{name}" in line or f"body={name}" in line:
+                    m = resolve(caller, seen + (name,)) * body_trip.get(name, 1)
+                    mult[name] = m
+                    return m
+                if f"to_apply=%{name}" in line or re.search(
+                        rf"calls=%?{re.escape(name)}\b", line):
+                    m = resolve(caller, seen + (name,))
+                    mult[name] = m
+                    return m
+        mult[name] = 1
+        return 1
+
+    bytes_by_type: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    op_counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        k = resolve(name)
+        for line in lines:
+            if "-done(" in line:
+                continue           # async start/done pairs: count start only
+            for coll in _COLLECTIVES:
+                if re.search(rf"\b{coll}(?:-start)?\(", line) and "=" in line:
+                    # output + any printed operand shapes after the opcode
+                    inside = line.split(f"{coll}", 1)[1]
+                    b = _shape_bytes(inside)
+                    if b == 0:
+                        b = _shape_bytes(line.split("=", 1)[1].split(coll)[0])
+                    bytes_by_type[coll] += b * k
+                    op_counts[coll] += k
+                    break
+    total = sum(bytes_by_type.values())
+    return CollectiveStats(bytes_by_type=bytes_by_type, total_bytes=total,
+                           op_counts=op_counts)
+
+
+# ---------------------------------------------------------------------------
+# loop-aware HLO cost analysis
+# ---------------------------------------------------------------------------
+# XLA:CPU cost_analysis() counts while-loop bodies ONCE, so scanned-layer
+# models under-report flops/bytes by ~n_layers x.  We re-derive both from the
+# HLO text with per-computation multipliers (trip counts from loop-condition
+# constants — scans in this framework have static trips).
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_FREE_OPS = {"bitcast", "tuple", "get-tuple-element", "parameter", "constant",
+             "while", "conditional", "after-all", "bitcast-convert"}
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if line and not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", line.strip())
+            if m and not line.startswith("HloModule"):
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _multipliers(comps: dict[str, list[str]]) -> dict[str, int]:
+    """Execution-count multiplier per computation (while trips, fusion calls)."""
+    cond_of_body: dict[str, str] = {}
+    callers: dict[str, list[tuple[str, str]]] = {}   # callee -> [(caller, kind)]
+    for name, lines in comps.items():
+        for line in lines:
+            m = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", line)
+            if not m:
+                m2 = re.search(r"body=%?([\w\.\-]+),\s*condition=%?([\w\.\-]+)", line)
+                if m2:
+                    cond_of_body[m2.group(1)] = m2.group(2)
+                    callers.setdefault(m2.group(1), []).append((name, "while"))
+            else:
+                cond_of_body[m.group(2)] = m.group(1)
+                callers.setdefault(m.group(2), []).append((name, "while"))
+            for cm in re.finditer(r"(?:calls|to_apply|condition|true_computation|"
+                                  r"false_computation)=%?([\w\.\-]+)", line):
+                callee = cm.group(1)
+                if callee not in cond_of_body or cond_of_body.get(callee) != callee:
+                    callers.setdefault(callee, []).append((name, "call"))
+
+    trip: dict[str, int] = {}
+    for body, cond in cond_of_body.items():
+        t = 1
+        for line in comps.get(cond, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                t = max(t, int(c))
+        trip[body] = t
+
+    mult: dict[str, int] = {}
+
+    def resolve(name, depth=0):
+        if name in mult or depth > 50:
+            return mult.get(name, 1)
+        m = 1
+        for caller, kind in callers.get(name, [])[:1]:
+            base = resolve(caller, depth + 1)
+            m = base * (trip.get(name, 1) if kind == "while" else 1)
+        mult[name] = m
+        return m
+
+    for name in comps:
+        resolve(name)
+    return mult
+
+
+def _defs_of(lines: list[str]) -> dict[str, str]:
+    defs = {}
+    for line in lines:
+        m = _OP_RE.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2)
+    return defs
+
+
+def parse_hlo_costs(hlo: str) -> dict:
+    """Loop-scaled (flops, bytes) from optimized HLO text.
+
+    flops: dot ops only (2 * prod(out) * prod(contracted lhs dims)) — matmuls
+    dominate every model in this framework; elementwise flops are noise at
+    roofline precision.
+    bytes: per op, output + resolvable operand bytes; fusion interiors are
+    skipped (only the fusion call's operands/outputs touch HBM).
+    """
+    comps = _split_computations(hlo)
+    mult = _multipliers(comps)
+    fusion_comps = set()
+    for lines in comps.values():
+        for line in lines:
+            if " fusion(" in line:
+                m = re.search(r"calls=%?([\w\.\-]+)", line)
+                if m:
+                    fusion_comps.add(m.group(1))
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    for name, lines in comps.items():
+        k = mult.get(name, 1)
+        defs = _defs_of(lines)
+        in_fusion = name in fusion_comps
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, out_type, opcode = m.groups()
+            if opcode == "dot":
+                args = line.split("dot(", 1)[1]
+                ops = re.findall(r"%([\w\.\-]+)", args.split(")")[0])
+                cdim = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                flop = 0.0
+                if ops and cdim is not None and ops[0] in defs:
+                    lhs_dims = _SHAPE_RE.findall(defs[ops[0]])
+                    if lhs_dims:
+                        dims = [int(d) for d in lhs_dims[0][1].split(",") if d]
+                        csz = 1
+                        for ci in cdim.group(1).split(","):
+                            if ci != "" and int(ci) < len(dims):
+                                csz *= dims[int(ci)]
+                        out_elems = 1
+                        for _, dd in _SHAPE_RE.findall(out_type):
+                            for d in dd.split(","):
+                                if d:
+                                    out_elems *= int(d)
+                            break
+                        flop = 2.0 * out_elems * csz
+                total_flops += flop * k
+            if in_fusion or opcode in _FREE_OPS:
+                continue
+            b = _shape_bytes(out_type)
+            args = line.split("(", 1)[1] if "(" in line else ""
+            refs = re.findall(r"%([\w\.\-]+)", args.split("), ")[0])[:8]
+            if opcode in ("gather", "dynamic-slice"):
+                # a gather reads output-many rows + indices, not the table
+                refs = refs[1:]
+                b *= 2
+            elif opcode in ("scatter", "dynamic-update-slice"):
+                refs = refs[1:]          # in-place update: skip the operand
+                b *= 2
+            for ref in refs:
+                if ref in defs:
+                    b += _shape_bytes(defs[ref])
+            total_bytes += b * k
+    return {"flops": total_flops, "bytes": total_bytes}
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (6ND-style bookkeeping per family)
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(meta: dict, kind: str) -> float:
+    Np = meta["active_params"]
+    V_D = 0   # embedding gather has no flops but is inside param_count once
+    B, S, Lr = meta["global_batch"], meta["seq_len"], meta["n_layers"]
+    Hq, hd = meta["n_heads"], meta["hd"]
+    if kind == "train":
+        dense = 6.0 * Np * B * S
+        attn = 3 * 2.0 * B * S * S * Hq * hd * Lr   # causal half, fwd+bwd(2x)
+        return dense + attn
+    if kind == "prefill":
+        return 2.0 * Np * B * S + 2.0 * B * S * S * Hq * hd * Lr
+    # decode: one token
+    return 2.0 * Np * B + 4.0 * B * S * Hq * hd * Lr
+
+
+def gnn_model_flops(meta: dict) -> float:
+    N, E = meta["n_nodes"], meta["n_edges"]
+    d, L, f = meta["d_hidden"], meta["n_layers"], meta["d_feat"]
+    agg = 2.0 * E * d * L
+    mlp = 2.0 * N * (f * d + d * d) + (L - 1) * 2.0 * N * (d * d * 2)
+    return 3.0 * (agg + mlp)     # train fwd+bwd
+
+
+def recsys_model_flops(meta: dict, kind: str) -> float:
+    B = meta.get("n_candidates", meta["batch"]) if kind == "retrieval" else meta["batch"]
+    d, F = meta["embed_dim"], meta["n_fields"]
+    model = meta["model"]
+    if model == "fm":
+        core = 4.0 * B * F * d
+    elif model == "autoint":
+        core = B * (3 * 2.0 * F * d * 64 + 4.0 * F * F * 64) * 3
+    elif model == "bst":
+        core = B * (21 * (4 * 2.0 * 32 * 32 + 2 * 2.0 * 32 * 128)
+                    + 4.0 * 21 * 21 * 32) + B * 2.0 * 1500 * 1000
+    else:  # mind
+        core = B * 3 * (2.0 * 50 * d * d + 4.0 * 4 * 50 * d)
+    mult = 3.0 if kind == "train" else 1.0
+    return core * mult
+
+
+def search_model_bytes(meta: dict) -> float:
+    """The search step is memory-bound: useful bytes = postings streamed."""
+    Q, G, Pp = meta["queries"], meta["groups"], meta["postings_pad"]
+    per_shard = Q * G * Pp * (4 + 4 + 1) + Q * meta.get("ns_k", 20) * Pp * 4
+    return float(per_shard * meta["n_shards"])
+
+
+def model_flops_for(cell_meta: dict, family: str, kind: str) -> float:
+    if family == "lm":
+        return lm_model_flops(cell_meta, kind)
+    if family == "gnn":
+        return gnn_model_flops(cell_meta)
+    if family == "recsys":
+        return recsys_model_flops(cell_meta, kind)
+    if family == "search":
+        # compare+search ops over the gathered postings (small by design)
+        Q, G, Pp = cell_meta["queries"], cell_meta["groups"], cell_meta["postings_pad"]
+        import math
+        return float(Q * (G - 1) * Pp * 2 * max(math.log2(Pp), 1)
+                     * cell_meta["n_shards"])
+    return 0.0
+
+
+# ---------------------------------------------------------------------------
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, chips: int) -> dict:
+    flops = flops_per_dev * chips
+    mem = bytes_per_dev * chips
+    coll = coll_bytes_per_dev * chips
+    t_c = flops / (chips * PEAK_FLOPS)
+    t_m = mem / (chips * HBM_BW)
+    t_l = coll / (chips * LINK_BW)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))
+    return {"hlo_flops_global": flops, "hlo_bytes_global": mem,
+            "collective_bytes_global": coll,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+            "dominant": dom[1], "t_dominant_s": dom[0]}

@@ -1,0 +1,32 @@
+"""Benchmark aggregator: one section per paper table + kernel micro.
+
+Prints ``name,value`` CSV (us_per_call for kernel rows, derived ratios for
+the paper-table rows).  Roofline terms come from the dry-run
+(src/repro/launch/dryrun.py writes experiments/dryrun/*.json; see
+benchmarks/report_roofline.py for the table)."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import bench_index_size, bench_kernels, bench_search_speed
+
+    print("# kernels (CPU regression numbers; interpret-mode pallas vs jnp ref)")
+    for k, v in bench_kernels.run().items():
+        print(f"kernels.{k},{v:.1f}")
+
+    n_docs = 400 if quick else 1200
+    n_q = 120 if quick else 400
+    print("# paper table: index sizes")
+    for k, v in bench_index_size.run(n_docs).items():
+        print(f"index_size.{k},{v:.6g}" if isinstance(v, float) else f"index_size.{k},{v}")
+
+    print("# paper table: search speed (ours vs ordinary inverted index)")
+    for k, v in bench_search_speed.run(n_docs, n_q).items():
+        print(f"search_speed.{k},{v:.6g}" if isinstance(v, float) else f"search_speed.{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

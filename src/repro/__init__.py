@@ -1,0 +1,11 @@
+"""repro: multi-pod JAX framework reproducing Veretennikov's additional-index
+phrase search, plus the assigned architecture zoo.
+
+x64 policy: the search-engine executor packs (doc, pos[, dist]) into 63-bit
+integer keys, so 64-bit types must be available.  We enable them globally at
+package import; ALL numeric code in this framework therefore specifies dtypes
+explicitly (models run bf16/f32 regardless of the x64 flag).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

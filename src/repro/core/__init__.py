@@ -1,0 +1,20 @@
+"""Core: the paper's additional-index phrase-search system."""
+from repro.core.analyzer import Analyzer, make_lexicon_and_analyzer
+from repro.core.builder import IndexParams, IndexSet, build_all
+from repro.core.corpus import Corpus, CorpusConfig, generate_corpus
+from repro.core.engine import (AdditionalIndexEngine, OrdinaryEngine,
+                               brute_force_search)
+from repro.core.executor import DeviceIndex, Executor, SearchResult
+from repro.core.lexicon import (Lexicon, LexiconConfig, TIER_FREQUENT,
+                                TIER_ORDINARY, TIER_STOP)
+from repro.core.planner import MODE_NEAR, MODE_PHRASE, Planner, QueryPlan
+
+__all__ = [
+    "Analyzer", "make_lexicon_and_analyzer",
+    "IndexParams", "IndexSet", "build_all",
+    "Corpus", "CorpusConfig", "generate_corpus",
+    "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_search",
+    "DeviceIndex", "Executor", "SearchResult",
+    "Lexicon", "LexiconConfig", "TIER_FREQUENT", "TIER_ORDINARY", "TIER_STOP",
+    "MODE_NEAR", "MODE_PHRASE", "Planner", "QueryPlan",
+]

@@ -1,0 +1,412 @@
+"""Index construction (paper: ALGORITHM FOR INDEX CREATION).
+
+Builds, from a tokenized corpus + morphological analyzer:
+
+  * the three-stream basic index (all non-stop basic forms),
+  * the expanded (w, v) index for frequently-used words,
+  * the stop-phrase index for MinLength..MaxLength stop-word phrases,
+  * an "ordinary" single inverted index (the Sphinx-style baseline the paper
+    compares against — every basic form, stop words included).
+
+Everything is vectorized numpy (index construction is offline, exactly as in
+the paper); a paper-literal Queue/`Process` implementation is kept as the
+reference oracle for the stop-phrase enumeration and cross-checked in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core.analyzer import Analyzer
+from repro.core.basic_index import BasicIndex
+from repro.core.corpus import Corpus
+from repro.core.expanded_index import ExpandedIndex
+from repro.core.lexicon import Lexicon
+from repro.core.postings import (
+    CSR,
+    DenseCSR,
+    MAX_STOP_PHRASE_LEN,
+    pack_near_stop_slot,
+    pack_stop_phrase_key,
+)
+from repro.core.stop_phrase_index import StopPhraseIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexParams:
+    min_len: int = 2           # MinLength (stop-phrase index)
+    max_len: int = 5           # MaxLength (paper uses 5)
+    max_distance: int = 5      # MaxDistance for stream 3 (paper: 5-7)
+    near_slots: int = 20       # fixed-width stream-3 slots per occurrence;
+                               # 4*max_distance (2 forms x 2D positions) is
+                               # lossless -- smaller trades recall for size
+    chunk: int = 1 << 20       # build-time chunking to bound peak memory
+
+    def __post_init__(self):
+        assert 2 <= self.min_len <= self.max_len <= MAX_STOP_PHRASE_LEN
+        if self.near_slots < 4 * self.max_distance:
+            import warnings
+            warnings.warn("near_slots < 4*max_distance: stream-3 verification "
+                          "may drop stop words in dense stop runs (lossy)")
+
+
+@dataclasses.dataclass
+class TokenForms:
+    """Per-token expansion of the analyzer output, split by tier.
+
+    s1/s2: up to two *stop* basic forms per token (as stop-local ids; -1 pad).
+    n1/n2: up to two *non-stop* basic forms per token (as base ids; -1 pad).
+    """
+
+    doc_of: np.ndarray
+    pos_of: np.ndarray
+    s1_local: np.ndarray
+    s2_local: np.ndarray
+    n1: np.ndarray
+    n2: np.ndarray
+
+    @property
+    def stop_mask(self) -> np.ndarray:
+        return self.s1_local >= 0
+
+
+def expand_token_forms(corpus: Corpus, lexicon: Lexicon, analyzer: Analyzer) -> TokenForms:
+    prim = analyzer.primary[corpus.tokens]
+    sec = analyzer.secondary[corpus.tokens]
+    prim_stop = lexicon.is_stop(prim)
+    sec_exists = sec >= 0
+    sec_stop = sec_exists & lexicon.is_stop(np.maximum(sec, 0))
+
+    s1 = np.where(prim_stop, prim, np.where(sec_stop, sec, -1))
+    s2 = np.where(prim_stop & sec_stop, sec, -1)
+    to_local = lambda b: np.where(b >= 0, lexicon.stop_local[np.maximum(b, 0)], -1).astype(np.int32)
+
+    prim_ns = ~prim_stop
+    sec_ns = sec_exists & ~sec_stop
+    n1 = np.where(prim_ns, prim, np.where(sec_ns, sec, -1)).astype(np.int32)
+    n2 = np.where(prim_ns & sec_ns, sec, -1).astype(np.int32)
+
+    return TokenForms(
+        doc_of=corpus.doc_ids_per_token(),
+        pos_of=corpus.positions_per_token(),
+        s1_local=to_local(s1),
+        s2_local=to_local(s2),
+        n1=n1,
+        n2=n2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# basic index (3 streams)
+# ---------------------------------------------------------------------------
+
+def build_basic_index(tf: TokenForms, lexicon: Lexicon, params: IndexParams) -> BasicIndex:
+    T = len(tf.doc_of)
+    g_idx = np.arange(T, dtype=np.int64)
+    m1, m2 = tf.n1 >= 0, tf.n2 >= 0
+    bases = np.concatenate([tf.n1[m1], tf.n2[m2]])
+    g = np.concatenate([g_idx[m1], g_idx[m2]])
+
+    order = np.lexsort((tf.pos_of[g], tf.doc_of[g], bases))
+    bases, g = bases[order], g[order]
+    doc, pos = tf.doc_of[g], tf.pos_of[g]
+
+    occurrences = DenseCSR.from_ids(
+        bases, lexicon.config.n_base, {"doc": doc, "pos": pos}, presorted=True
+    )
+
+    # stream 1: first occurrence per (base, doc) + count
+    boundary = np.ones(len(bases), dtype=bool)
+    boundary[1:] = (bases[1:] != bases[:-1]) | (doc[1:] != doc[:-1])
+    starts = np.nonzero(boundary)[0]
+    run_len = np.diff(np.append(starts, len(bases))).astype(np.int32)
+    first_occ = DenseCSR.from_ids(
+        bases[starts], lexicon.config.n_base,
+        {"doc": doc[starts], "pos": pos[starts], "count": run_len},
+        presorted=True,
+    )
+
+    # stream 3: near-stop slots per occurrence, nearest-first, K slots
+    D, K = params.max_distance, params.near_slots
+    deltas = np.array([s * d for d in range(1, D + 1) for s in (-1, 1)], dtype=np.int64)
+    near = np.full((len(g), K), -1, dtype=np.int16)
+    col_rank = np.abs(deltas)  # nearest-first priority (already interleaved)
+    for lo in range(0, len(g), params.chunk):
+        gs = g[lo : lo + params.chunk]
+        part = gs[:, None] + deltas[None, :]
+        inb = (part >= 0) & (part < T)
+        pc = np.clip(part, 0, T - 1)
+        same = inb & (tf.doc_of[pc] == tf.doc_of[gs][:, None])
+        cands, ranks = [], []
+        for s_local in (tf.s1_local, tf.s2_local):
+            sl = s_local[pc]
+            ok = same & (sl >= 0)
+            cands.append(np.where(ok, pack_near_stop_slot(
+                np.broadcast_to(deltas[None, :], sl.shape), sl, D),
+                np.int16(-1)).astype(np.int16))
+            ranks.append(np.where(ok, col_rank[None, :], 1 << 20))
+        cand = np.concatenate(cands, axis=1)
+        rank = np.concatenate(ranks, axis=1)
+        take = np.argsort(rank, axis=1, kind="stable")[:, :K]
+        near[lo : lo + params.chunk] = np.take_along_axis(cand, take, axis=1)
+
+    return BasicIndex(occurrences=occurrences, first_occ=first_occ,
+                      near_stop=near, max_distance=D)
+
+
+# ---------------------------------------------------------------------------
+# expanded (w, v) index
+# ---------------------------------------------------------------------------
+
+def build_expanded_index(tf: TokenForms, lexicon: Lexicon, params: IndexParams) -> ExpandedIndex:
+    T = len(tf.doc_of)
+    n_base = lexicon.config.n_base
+    g_idx = np.arange(T, dtype=np.int64)
+
+    # occurrences of frequently-used basic forms (w side)
+    m1 = (tf.n1 >= 0) & lexicon.is_frequent(np.maximum(tf.n1, 0))
+    m2 = (tf.n2 >= 0) & lexicon.is_frequent(np.maximum(tf.n2, 0))
+    w_base = np.concatenate([tf.n1[m1], tf.n2[m2]]).astype(np.int64)
+    w_g = np.concatenate([g_idx[m1], g_idx[m2]])
+    w_pd = lexicon.processing_distance(w_base)
+
+    keys_parts, doc_parts, pos_parts, dist_parts = [], [], [], []
+    max_pd = int(w_pd.max(initial=0))
+    for d in range(1, max_pd + 1):
+        for sd in (d, -d):
+            part = w_g + sd
+            inb = (part >= 0) & (part < T)
+            pc = np.clip(part, 0, T - 1)
+            ok_base = inb & (tf.doc_of[pc] == tf.doc_of[w_g]) & (d <= w_pd)
+            for col in (tf.n1, tf.n2):
+                v = col[pc].astype(np.int64)
+                ok = ok_base & (v >= 0)
+                if not ok.any():
+                    continue
+                w_ok, v_ok = w_base[ok], v[ok]
+                # canonical orientation: when both frequent and v < w the pair
+                # is stored under (v, w) (emitted from v's side); w == v keeps
+                # only the positive direction.
+                both_freq = lexicon.is_frequent(v_ok)
+                keep = ~(both_freq & (v_ok < w_ok)) & ~((v_ok == w_ok) & (sd < 0))
+                if not keep.any():
+                    continue
+                w_k, v_k, g_k = w_ok[keep], v_ok[keep], w_g[ok][keep]
+                keys_parts.append(w_k * n_base + v_k)
+                doc_parts.append(tf.doc_of[g_k])
+                pos_parts.append(tf.pos_of[g_k])
+                dist_parts.append(np.full(len(g_k), sd, dtype=np.int8))
+
+    if keys_parts:
+        keys = np.concatenate(keys_parts)
+        doc = np.concatenate(doc_parts)
+        pos = np.concatenate(pos_parts)
+        dist = np.concatenate(dist_parts)
+        order = np.lexsort((pos, doc, keys))
+        pairs = CSR.from_unsorted(
+            keys[order],
+            {"doc": doc[order], "pos": pos[order], "dist": dist[order]},
+            presorted=True,
+        )
+    else:
+        pairs = CSR.from_unsorted(np.empty(0, np.int64),
+                                  {"doc": np.empty(0, np.int32),
+                                   "pos": np.empty(0, np.int32),
+                                   "dist": np.empty(0, np.int8)})
+    return ExpandedIndex(pairs=pairs, n_base=n_base)
+
+
+# ---------------------------------------------------------------------------
+# stop-phrase index
+# ---------------------------------------------------------------------------
+
+def _multi_form_window_keys(tf: TokenForms, start: int, L: int):
+    """All form-choice combinations for one window (paper's Process cycle)."""
+    choices = []
+    for t in range(start, start + L):
+        c = [tf.s1_local[t]]
+        if tf.s2_local[t] >= 0:
+            c.append(tf.s2_local[t])
+        choices.append(c)
+    keys = []
+    for combo in itertools.product(*choices):
+        keys.append(int(pack_stop_phrase_key(np.sort(np.array(combo, np.int64))[None, :])[0]))
+    return keys
+
+
+def build_stop_phrase_index(tf: TokenForms, params: IndexParams) -> StopPhraseIndex:
+    T = len(tf.doc_of)
+    stop = tf.stop_mask
+    multi = tf.s2_local >= 0
+
+    all_keys, all_doc, all_pos = [], [], []
+    for L in range(params.min_len, params.max_len + 1):
+        if T < L:
+            continue
+        win_stop = np.lib.stride_tricks.sliding_window_view(stop, L)
+        valid = win_stop.all(axis=1) & (tf.doc_of[: T - L + 1] == tf.doc_of[L - 1 :])
+        starts = np.nonzero(valid)[0]
+        if len(starts) == 0:
+            continue
+        win_multi = np.lib.stride_tricks.sliding_window_view(multi, L)[starts].any(axis=1)
+
+        single = starts[~win_multi]
+        if len(single):
+            ids = np.lib.stride_tricks.sliding_window_view(tf.s1_local, L)[single]
+            keys = pack_stop_phrase_key(np.sort(ids.astype(np.int64), axis=1))
+            all_keys.append(keys)
+            all_doc.append(tf.doc_of[single])
+            all_pos.append(tf.pos_of[single])
+
+        for st in starts[win_multi]:
+            ks = _multi_form_window_keys(tf, int(st), L)
+            all_keys.append(np.array(ks, dtype=np.int64))
+            all_doc.append(np.full(len(ks), tf.doc_of[st], dtype=np.int32))
+            all_pos.append(np.full(len(ks), tf.pos_of[st], dtype=np.int32))
+
+    if all_keys:
+        keys = np.concatenate(all_keys)
+        doc = np.concatenate(all_doc).astype(np.int32)
+        pos = np.concatenate(all_pos).astype(np.int32)
+        order = np.lexsort((pos, doc, keys))
+        phrases = CSR.from_unsorted(keys[order], {"doc": doc[order], "pos": pos[order]},
+                                    presorted=True)
+    else:
+        phrases = CSR.from_unsorted(np.empty(0, np.int64),
+                                    {"doc": np.empty(0, np.int32),
+                                     "pos": np.empty(0, np.int32)})
+    return StopPhraseIndex(phrases=phrases, min_len=params.min_len, max_len=params.max_len)
+
+
+# ---------------------------------------------------------------------------
+# paper-literal reference (Queue / Process) — oracle for tests
+# ---------------------------------------------------------------------------
+
+def reference_stop_phrase_postings(tf: TokenForms, params: IndexParams):
+    """The ALGORITHM FOR INDEX CREATION section, implemented literally.
+
+    A queue of the last <= MaxLength stop tokens is maintained; whenever the
+    head is about to leave (overflow or drain on a non-stop token / document
+    boundary), every prefix phrase starting at the head is emitted, cycling
+    through each item's form list (`Process`'s Index recursion).  This emits
+    each (start, L) window exactly once — matching the paper's "nine phrases
+    with 2 words, eight with 3" count for a run of ten stop words.
+
+    Returns a list of (key, doc, pos) tuples (unsorted).
+    """
+    out = []
+
+    def emit_head(queue):
+        head_doc, head_pos = queue[0][0], queue[0][1]
+        for L in range(params.min_len, min(len(queue), params.max_len) + 1):
+            for combo in itertools.product(*[item[2] for item in queue[:L]]):
+                key = int(pack_stop_phrase_key(np.sort(np.array(combo, np.int64))[None, :])[0])
+                out.append((key, head_doc, head_pos))
+
+    queue: list[tuple[int, int, list[int]]] = []
+    prev_doc = -1
+    T = len(tf.doc_of)
+    for t in range(T):
+        doc = int(tf.doc_of[t])
+        if doc != prev_doc:
+            while queue:
+                emit_head(queue)
+                queue.pop(0)
+            prev_doc = doc
+        forms = []
+        if tf.s1_local[t] >= 0:
+            forms.append(int(tf.s1_local[t]))
+        if tf.s2_local[t] >= 0:
+            forms.append(int(tf.s2_local[t]))
+        if forms:
+            queue.append((doc, int(tf.pos_of[t]), forms))
+            if len(queue) > params.max_len:
+                emit_head(queue)
+                queue.pop(0)
+        else:
+            while queue:
+                emit_head(queue)
+                queue.pop(0)
+    while queue:
+        emit_head(queue)
+        queue.pop(0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ordinary single inverted index (Sphinx-style baseline)
+# ---------------------------------------------------------------------------
+
+def build_ordinary_index(tf: TokenForms, lexicon: Lexicon) -> DenseCSR:
+    """Every basic form (stop words included) -> (doc, pos). The paper's
+    comparison baseline: phrase queries must read full posting lists."""
+    T = len(tf.doc_of)
+    g_idx = np.arange(T, dtype=np.int64)
+    n_stop = lexicon.config.n_stop
+
+    bases_parts, g_parts = [], []
+    # non-stop forms
+    for col in (tf.n1, tf.n2):
+        m = col >= 0
+        bases_parts.append(col[m].astype(np.int64))
+        g_parts.append(g_idx[m])
+    # stop forms (local id -> base id is the identity on [0, n_stop))
+    for col in (tf.s1_local, tf.s2_local):
+        m = col >= 0
+        bases_parts.append(col[m].astype(np.int64))
+        g_parts.append(g_idx[m])
+    bases = np.concatenate(bases_parts)
+    g = np.concatenate(g_parts)
+    order = np.lexsort((tf.pos_of[g], tf.doc_of[g], bases))
+    bases, g = bases[order], g[order]
+    return DenseCSR.from_ids(bases, lexicon.config.n_base,
+                             {"doc": tf.doc_of[g], "pos": tf.pos_of[g]}, presorted=True)
+
+
+# ---------------------------------------------------------------------------
+# top-level build
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IndexSet:
+    lexicon: Lexicon
+    analyzer: Analyzer
+    params: IndexParams
+    basic: BasicIndex
+    expanded: ExpandedIndex
+    stop_phrase: StopPhraseIndex
+    ordinary: DenseCSR
+    n_docs: int
+
+    def base_occ_counts(self) -> np.ndarray:
+        """Total occurrences per basic form (ordinary-index view, incl. stop)."""
+        return self.ordinary.counts()
+
+    def size_report(self) -> dict[str, int]:
+        return {
+            "stop_phrase_index_bytes": self.stop_phrase.nbytes(),
+            "expanded_index_bytes": self.expanded.nbytes(),
+            "basic_index_bytes": self.basic.nbytes(),
+            "ordinary_index_bytes": self.ordinary.nbytes(),
+            "stop_phrase_postings": self.stop_phrase.phrases.n_postings,
+            "expanded_postings": self.expanded.pairs.n_postings,
+            "basic_postings": self.basic.occurrences.n_postings,
+            "ordinary_postings": self.ordinary.n_postings,
+        }
+
+
+def build_all(corpus: Corpus, lexicon: Lexicon, analyzer: Analyzer,
+              params: IndexParams = IndexParams()) -> IndexSet:
+    tf = expand_token_forms(corpus, lexicon, analyzer)
+    return IndexSet(
+        lexicon=lexicon,
+        analyzer=analyzer,
+        params=params,
+        basic=build_basic_index(tf, lexicon, params),
+        expanded=build_expanded_index(tf, lexicon, params),
+        stop_phrase=build_stop_phrase_index(tf, params),
+        ordinary=build_ordinary_index(tf, lexicon),
+        n_docs=corpus.n_docs,
+    )

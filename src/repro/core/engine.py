@@ -1,0 +1,225 @@
+"""Engine facades.
+
+`AdditionalIndexEngine` — the paper's system: planner (Type 1-4 dispatch over
+the stop-phrase / expanded / 3-stream basic indexes) + JAX executor.
+
+`OrdinaryEngine` — the comparison baseline (the paper benchmarks Sphinx
+2.0.6): a single inverted index over every basic form, stop words included;
+every query reads the *full* posting list of every query word.
+
+`brute_force_search` — O(corpus) oracle used by tests and the experiment
+harness to verify that indexed phrases are found exactly (paper: "Since
+phrases are selected from an already-indexed document, they should be
+precisely found").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.analyzer import Analyzer
+from repro.core.builder import IndexSet, expand_token_forms
+from repro.core.corpus import Corpus
+from repro.core.executor import DeviceIndex, Executor, SearchResult
+from repro.core.lexicon import Lexicon
+from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE, Planner,
+                                QueryPlan, ResolvedFetch, SubPlan)
+
+
+class AdditionalIndexEngine:
+    """The paper's engine: additional indexes + Type 1-4 query processing."""
+
+    def __init__(self, index: IndexSet):
+        self.index = index
+        self.planner = Planner(index)
+        self.executor = Executor(index)
+
+    def search(self, surface_ids, mode: str = MODE_PHRASE,
+               window: int | None = None, max_results: int | None = None) -> SearchResult:
+        plan = self.planner.plan(list(surface_ids), mode=mode, window=window)
+        return self.executor.execute(plan, max_results=max_results)
+
+    def plan(self, surface_ids, mode: str = MODE_PHRASE, window: int | None = None):
+        return self.planner.plan(list(surface_ids), mode=mode, window=window)
+
+
+class OrdinaryEngine:
+    """Sphinx-style baseline: one inverted index, full posting-list reads."""
+
+    def __init__(self, index: IndexSet):
+        self.index = index
+        self.executor = Executor(index)
+        self._counts = index.ordinary.counts()
+
+    def _slot_group(self, slot, forms, band) -> FetchGroup:
+        fetches = []
+        for f in forms:
+            s, e = self.index.ordinary.find(f)
+            if e > s:
+                fetches.append(ResolvedFetch(stream="ordinary", start=s,
+                                             length=e - s, offset=slot))
+        return FetchGroup(slot=slot, fetches=fetches, band=band)
+
+    def plan(self, surface_ids, mode: str = MODE_PHRASE, window: int | None = None) -> QueryPlan:
+        if window is None:
+            window = self.index.params.max_distance
+        ana = self.index.analyzer
+        form_lists = [ana.forms_of(s) for s in surface_ids]
+        if mode == MODE_NEAR:
+            # stop-containing queries stay sequential, as in the paper's runs
+            lex = self.index.lexicon
+            if any(bool(lex.is_stop(np.asarray(fl)).any()) for fl in form_lists):
+                mode = MODE_PHRASE
+        groups = []
+        if mode == MODE_PHRASE:
+            for i, forms in enumerate(form_lists):
+                groups.append(self._slot_group(i, forms, band=0))
+        else:
+            counts = [sum(int(self._counts[f]) for f in forms) for forms in form_lists]
+            pivot = int(np.argmin(counts))
+            for i, forms in enumerate(form_lists):
+                groups.append(self._slot_group(i, forms,
+                                               band=0 if i == pivot else window))
+        return QueryPlan(subplans=[SubPlan(qtype=0, mode=mode, groups=groups)])
+
+    def search(self, surface_ids, mode: str = MODE_PHRASE,
+               window: int | None = None, max_results: int | None = None) -> SearchResult:
+        plan = self.plan(surface_ids, mode=mode, window=window)
+        return self.executor.execute(plan, max_results=max_results)
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracle
+# ---------------------------------------------------------------------------
+
+def _tier_splits(form_lists, lexicon):
+    """Mirror Planner._split_by_tier (the paper's query-splitting rule)."""
+    import itertools
+    per_slot = []
+    for forms in form_lists:
+        tiers = {}
+        for f in forms:
+            tiers.setdefault(int(lexicon.base_tier[f]), []).append(f)
+        per_slot.append(sorted(tiers.items()))
+    return list(itertools.product(*per_slot))
+
+
+def brute_force_search(corpus: Corpus, index: IndexSet, surface_ids,
+                       mode: str = MODE_PHRASE, window: int | None = None):
+    """O(corpus) oracle with the *paper's* match semantics.
+
+    Mirrors the engine exactly: the query is tier-split; each subquery is
+    matched per its type:
+
+      * all-stop subqueries: contiguous window, word order DISREGARDED
+        (the stop-phrase index keys are sorted multisets), with the planner's
+        part-splitting for phrases longer than MaxLength;
+      * stop-containing subqueries: precise positional match (Type 4 is
+        phrase-only);
+      * otherwise, phrase mode = precise positional; near mode = every word
+        within `window` of the pivot (the planner's pivot rule).
+
+    Returns (positional_matches, doc_matches): positional = set[(doc, anchor)]
+    where anchor is the phrase start (phrase/stop) or the pivot position
+    (near); doc_matches = distance-disregarding doc-level intersection of the
+    non-stop words (the stream-1 fallback's ground truth).
+    """
+    import itertools
+
+    lexicon, analyzer, params = index.lexicon, index.analyzer, index.params
+    if window is None:
+        window = params.max_distance
+    occ_counts = index.base_occ_counts()
+
+    tf_prim = analyzer.primary[corpus.tokens]
+    tf_sec = analyzer.secondary[corpus.tokens]
+    doc_of = corpus.doc_ids_per_token()
+    pos_of = corpus.positions_per_token()
+    T = corpus.n_tokens
+    from repro.core.lexicon import TIER_STOP
+    from repro.core.planner import pick_pivot, split_query_parts
+
+    def token_matches(slot_forms):
+        m = np.isin(tf_prim, list(slot_forms))
+        m |= np.isin(tf_sec, list(slot_forms)) & (tf_sec >= 0)
+        return m
+
+    def stop_multiset_anchors(tiered):
+        """Any-order contiguous matches of an all-stop subquery."""
+        n = len(tiered)
+        parts = split_query_parts(n, params.min_len, params.max_len)
+        # per-part: achievable query multisets (over per-slot form choices)
+        part_hits = []
+        for (pstart, L) in parts:
+            slot_forms = [tiered[pstart + j][1] for j in range(L)]
+            qsets = {tuple(sorted(c)) for c in itertools.product(*slot_forms)}
+            hits = set()
+            for t in range(T - L + 1):
+                if doc_of[t] != doc_of[t + L - 1]:
+                    continue
+                cands = []
+                okwin = True
+                for u in range(t, t + L):
+                    forms = [f for f in (tf_prim[u], tf_sec[u])
+                             if f >= 0 and lexicon.base_tier[f] == TIER_STOP]
+                    if not forms:
+                        okwin = False
+                        break
+                    cands.append(forms)
+                if not okwin:
+                    continue
+                wsets = {tuple(sorted(c)) for c in itertools.product(*cands)}
+                if wsets & qsets:
+                    hits.add((int(doc_of[t]), int(pos_of[t]) - pstart))
+            part_hits.append(hits)
+        out = part_hits[0]
+        for h in part_hits[1:]:
+            out &= h
+        return out
+
+    positional = set()
+    doc_level_all = set()
+    for tiered in _tier_splits([analyzer.forms_of(s) for s in surface_ids], lexicon):
+        tiers = [t for t, _ in tiered]
+        n = len(tiered)
+        sub_mode = mode
+        if any(t == TIER_STOP for t in tiers):
+            sub_mode = MODE_PHRASE
+        if all(t == TIER_STOP for t in tiers):
+            if n >= params.min_len:
+                positional |= stop_multiset_anchors(tiered)
+            docs = None   # stop-only: no doc-level fallback
+        else:
+            matches = [token_matches(forms) for _, forms in tiered]
+            if sub_mode == MODE_PHRASE:
+                ok = matches[0][: T - n + 1].copy()
+                for i in range(1, n):
+                    ok &= matches[i][i : T - n + 1 + i]
+                if n > 1:
+                    ok &= doc_of[: T - n + 1] == doc_of[n - 1 :]
+                for t in np.nonzero(ok)[0]:
+                    positional.add((int(doc_of[t]), int(pos_of[t])))
+            else:
+                pivot = pick_pivot(tiered, occ_counts)
+                for t in np.nonzero(matches[pivot])[0]:
+                    good = True
+                    for i, m in enumerate(matches):
+                        if i == pivot:
+                            continue
+                        lo, hi = max(0, t - window), min(T, t + window + 1)
+                        if not (m[lo:hi] & (doc_of[lo:hi] == doc_of[t])).any():
+                            good = False
+                            break
+                    if good:
+                        positional.add((int(doc_of[t]), int(pos_of[t])))
+            # doc-level (stream-1 fallback) truth: non-stop words only
+            docs = None
+            for (t, forms), m in zip(tiered, matches):
+                if t == TIER_STOP:
+                    continue
+                d = set(np.unique(doc_of[m]).tolist())
+                docs = d if docs is None else (docs & d)
+        if docs:
+            doc_level_all |= docs
+    return positional, doc_level_all

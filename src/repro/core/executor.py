@@ -1,0 +1,220 @@
+"""Batched JAX execution of query plans.
+
+The planner resolves every fetch to (start, length) slices; the executor is
+pure array math on device: slice -> key construction -> (banded) k-way
+intersection -> anchor unpacking.  Intersections run through jit'd,
+shape-bucketed primitives (padded to powers of two) so the compile cache
+stays small while latencies remain measurable; the same math is what the
+production `serve_step` (serve/search_serve.py) lowers at cluster scale, and
+what the Pallas `banded_intersect` kernel implements for TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.builder import IndexSet
+from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE, QueryPlan,
+                                ResolvedFetch, SubPlan)
+from repro.core.postings import NS_SHIFT, PHRASE_BIAS, POS_BITS
+
+SENTINEL = np.int64(2**62)      # pads; sorts after every real key
+
+
+def _next_pow2(n: int, floor: int = 256) -> int:
+    p = floor
+    while p < n:
+        p <<= 1
+    return p
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _band_member(a, a_valid, b_sorted, band):
+    """a_valid & (exists b in [a - band, a + band])."""
+    lo = jnp.searchsorted(b_sorted, a - band, side="left")
+    hi = jnp.searchsorted(b_sorted, a + band, side="right")
+    return a_valid & (hi > lo)
+
+
+@jax.jit
+def _sort_keys(keys):
+    return jnp.sort(keys)
+
+
+@jax.jit
+def _near_stop_ok(slots, packed_targets, target_valid):
+    """slots [N, K]; packed_targets [C, M]: per check C, any of M ids at the
+    required delta must appear among the K slots; all checks must pass."""
+    eq = slots[:, :, None, None] == packed_targets[None, None, :, :]
+    eq = eq & target_valid[None, None, :, :]
+    per_check = eq.any(axis=(1, 3))             # [N, C]
+    return per_check.all(axis=1)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    doc: np.ndarray                 # matched documents
+    pos: np.ndarray                 # anchor positions (phrase start / pivot)
+    postings_read: int
+    used_fallback: bool
+    doc_only: bool                  # True when results came from stream-1 fallback
+    subplan_types: tuple = ()
+
+
+class DeviceIndex:
+    """Index columns as device (jnp) arrays."""
+
+    def __init__(self, index: IndexSet):
+        b = index.basic
+        self.basic_doc = jnp.asarray(b.occurrences.columns["doc"])
+        self.basic_pos = jnp.asarray(b.occurrences.columns["pos"])
+        self.near_stop = jnp.asarray(b.near_stop)
+        self.first_doc = jnp.asarray(b.first_occ.columns["doc"])
+        self.first_pos = jnp.asarray(b.first_occ.columns["pos"])
+        e = index.expanded.pairs
+        self.exp_doc = jnp.asarray(e.columns["doc"])
+        self.exp_pos = jnp.asarray(e.columns["pos"])
+        self.exp_dist = jnp.asarray(e.columns["dist"])
+        s = index.stop_phrase.phrases
+        self.stop_doc = jnp.asarray(s.columns["doc"])
+        self.stop_pos = jnp.asarray(s.columns["pos"])
+        o = index.ordinary
+        self.ord_doc = jnp.asarray(o.columns["doc"])
+        self.ord_pos = jnp.asarray(o.columns["pos"])
+        self.max_distance = b.max_distance
+
+
+class Executor:
+    def __init__(self, index: IndexSet, device_index: DeviceIndex | None = None):
+        self.index = index
+        self.dev = device_index or DeviceIndex(index)
+
+    # -- key construction -----------------------------------------------------
+
+    def _phrase_keys(self, doc, pos, offset):
+        shifted = pos.astype(jnp.int64) - offset + PHRASE_BIAS
+        return (doc.astype(jnp.int64) << POS_BITS) | shifted
+
+    def _plain_keys(self, doc, pos):
+        return (doc.astype(jnp.int64) << POS_BITS) | (pos.astype(jnp.int64) + PHRASE_BIAS)
+
+    def _fetch_keys(self, f: ResolvedFetch, mode: str):
+        d = self.dev
+        s, e = f.start, f.start + f.length
+        if f.stream == "stop":
+            return self._phrase_keys(d.stop_doc[s:e], d.stop_pos[s:e], f.offset)
+        if f.stream == "first":
+            return d.first_doc[s:e].astype(jnp.int64)
+        if f.stream == "expanded":
+            doc, pos, dist = d.exp_doc[s:e], d.exp_pos[s:e], d.exp_dist[s:e]
+            if mode == MODE_PHRASE:
+                keys = self._phrase_keys(doc, pos, f.offset)
+                mask = dist == f.required_dist
+            else:
+                pivot_pos = pos + jnp.where(f.pivot_from_dist, dist, 0).astype(pos.dtype)
+                keys = self._plain_keys(doc, pivot_pos)
+                mask = jnp.abs(dist) <= f.max_abs_dist
+            return jnp.where(mask, keys, SENTINEL)
+        if f.stream == "ordinary":
+            doc, pos = d.ord_doc[s:e], d.ord_pos[s:e]
+            if mode == MODE_PHRASE:
+                return self._phrase_keys(doc, pos, f.offset)
+            return self._plain_keys(doc, pos)
+        # basic occurrences (possibly with near-stop verification)
+        doc, pos = d.basic_doc[s:e], d.basic_pos[s:e]
+        if mode == MODE_PHRASE:
+            keys = self._phrase_keys(doc, pos, f.offset)
+        else:
+            keys = self._plain_keys(doc, pos)
+        if f.stop_checks:
+            slots = d.near_stop[s:e]
+            D = d.max_distance
+            C = len(f.stop_checks)
+            M = max(len(ids) for _, ids in f.stop_checks)
+            packed = np.full((C, M), -2, dtype=np.int16)
+            valid = np.zeros((C, M), dtype=bool)
+            for ci, (delta, ids) in enumerate(f.stop_checks):
+                for mi, sid in enumerate(ids):
+                    packed[ci, mi] = ((delta + D) << NS_SHIFT) | sid
+                    valid[ci, mi] = True
+            ok = _near_stop_ok(slots, jnp.asarray(packed), jnp.asarray(valid))
+            keys = jnp.where(ok, keys, SENTINEL)
+        return keys
+
+    def _group_keys(self, g: FetchGroup, mode: str):
+        """Sorted, sentinel-padded key array for one fetch group."""
+        parts = [self._fetch_keys(f, mode) for f in g.fetches]
+        total = sum(int(p.shape[0]) for p in parts)
+        width = _next_pow2(max(total, 1))
+        buf = jnp.full((width,), SENTINEL, dtype=jnp.int64)
+        off = 0
+        for p in parts:
+            buf = jax.lax.dynamic_update_slice(buf, p.astype(jnp.int64), (off,))
+            off += int(p.shape[0])
+        return _sort_keys(buf)
+
+    # -- plan execution ---------------------------------------------------------
+
+    def _run_groups(self, groups: list[FetchGroup], mode: str):
+        """Banded k-way intersection; returns surviving anchor keys (np)."""
+        if not groups:
+            return np.empty(0, dtype=np.int64)
+        if any(not g.fetches for g in groups):
+            return np.empty(0, dtype=np.int64)   # a slot with no postings
+        keyed = [(g, self._group_keys(g, mode)) for g in groups]
+        # seed must be a band-0 group; prefer the smallest for speed
+        band0 = [kg for kg in keyed if kg[0].band == 0]
+        seed = min(band0, key=lambda kg: int(kg[1].shape[0]))
+        a = seed[1]
+        a_valid = a < SENTINEL
+        for g, b in keyed:
+            if g is seed[0]:
+                continue
+            a_valid = _band_member(a, a_valid, b, int(g.band))
+        res = np.asarray(a)[np.asarray(a_valid)]
+        return res[res < SENTINEL]
+
+    def execute(self, plan: QueryPlan, max_results: int | None = None) -> SearchResult:
+        all_keys = []
+        doc_only_keys = []
+        postings = 0
+        used_fallback = False
+        types = []
+        for sp in plan.subplans:
+            if not sp.supported:
+                continue
+            types.append(sp.qtype)
+            postings += sp.postings_read
+            keys = self._run_groups(sp.groups, sp.mode)
+            if len(keys) == 0 and sp.fallback_groups:
+                # paper: "if no result is obtained, we disregard the distance"
+                used_fallback = True
+                postings += sum(g.postings_read for g in sp.fallback_groups)
+                dkeys = self._run_groups(sp.fallback_groups, MODE_PHRASE)
+                doc_only_keys.append(dkeys)
+            else:
+                all_keys.append(keys)
+        keys = (np.unique(np.concatenate(all_keys)) if all_keys
+                else np.empty(0, np.int64))
+        if len(keys):
+            doc = (keys >> POS_BITS).astype(np.int32)
+            pos = ((keys & ((1 << POS_BITS) - 1)) - PHRASE_BIAS).astype(np.int32)
+            doc_only = False
+        elif doc_only_keys:
+            docs = np.unique(np.concatenate(doc_only_keys))
+            doc = docs.astype(np.int32)
+            pos = np.full(len(doc), -1, dtype=np.int32)
+            doc_only = True
+        else:
+            doc = np.empty(0, np.int32)
+            pos = np.empty(0, np.int32)
+            doc_only = False
+        if max_results is not None:
+            doc, pos = doc[:max_results], pos[:max_results]
+        return SearchResult(doc=doc, pos=pos, postings_read=postings,
+                            used_fallback=used_fallback, doc_only=doc_only,
+                            subplan_types=tuple(types))

@@ -1,0 +1,334 @@
+"""Query planning (paper: ANSWERING QUERIES / PROCESSING QUERIES).
+
+The planner runs host-side.  It
+
+  1. expands each query word into its basic forms (morphological analyzer),
+  2. *splits* the query whenever one word's forms span different frequency
+     tiers (the paper's PROCESSING QUERIES rule) -- one subquery per tier
+     combination, results to be unioned,
+  3. classifies every subquery into the paper's Type 1-4,
+  4. resolves every posting fetch down to explicit (start, length) slices in
+     the index arrays, so the device executor is pure array math,
+  5. accounts the paper's primary metric -- the number of postings read.
+
+Plan vocabulary
+---------------
+A *FetchGroup* is the union of posting lists standing in for one query slot
+(one group per slot; several fetches per group when a slot has several basic
+forms or a stop-phrase part has several form combinations).  The executor
+turns each group into a sorted array of anchor keys and intersects the groups
+(band-width 0 = precise phrase; W > 0 = word-set-with-distance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.core.builder import IndexSet
+from repro.core.lexicon import TIER_FREQUENT, TIER_ORDINARY, TIER_STOP
+from repro.core.postings import MAX_STOP_PHRASE_LEN
+
+MODE_PHRASE = "phrase"   # precise: order + adjacency
+MODE_NEAR = "near"       # word set: all words within a window of the pivot
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedFetch:
+    stream: str                    # 'basic' | 'first' | 'expanded' | 'stop'
+    start: int
+    length: int
+    offset: int                    # phrase offset of the *stored/anchor* word
+    required_dist: Optional[int] = None   # expanded, phrase mode: exact dist
+    max_abs_dist: Optional[int] = None    # expanded, near mode: |dist| <= W
+    pivot_from_dist: bool = False  # expanded, near mode: pivot pos = pos + dist
+    stop_checks: tuple = ()        # ((delta, stop_local), ...) via stream 3
+    read_near_stop: bool = False   # stream 3 is read alongside (counts twice)
+
+    @property
+    def postings_read(self) -> int:
+        return self.length * (2 if self.read_near_stop else 1)
+
+
+@dataclasses.dataclass
+class FetchGroup:
+    slot: int
+    fetches: list[ResolvedFetch]
+    band: int = 0                  # intersection band width vs. the anchor
+
+    @property
+    def postings_read(self) -> int:
+        return sum(f.postings_read for f in self.fetches)
+
+
+@dataclasses.dataclass
+class SubPlan:
+    qtype: int                     # 1..4 (paper's query types)
+    mode: str
+    groups: list[FetchGroup]
+    fallback_groups: list[FetchGroup] = dataclasses.field(default_factory=list)
+    supported: bool = True
+    note: str = ""
+
+    @property
+    def postings_read(self) -> int:
+        return sum(g.postings_read for g in self.groups)
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    subplans: list[SubPlan]        # results are unioned (query splitting)
+
+    @property
+    def postings_read(self) -> int:
+        return sum(p.postings_read for p in self.subplans)
+
+
+# ---------------------------------------------------------------------------
+
+
+def pick_pivot(tiered, occ_counts) -> int:
+    """Paper's 'basic word': the rarest non-stop slot (ordinary preferred)."""
+    ordinary = [i for i, (t, _) in enumerate(tiered) if t == TIER_ORDINARY]
+    eligible = ordinary or [i for i, (t, _) in enumerate(tiered) if t != TIER_STOP]
+    return min(eligible, key=lambda i: sum(int(occ_counts[f]) for f in tiered[i][1]))
+
+
+def split_query_parts(n: int, min_len: int, max_len: int) -> list[tuple[int, int]]:
+    """Split an n-word stop phrase into (start, length) parts with
+    min_len <= length <= max_len, covering every word; the final part may
+    overlap its predecessor when the tail would otherwise be too short."""
+    parts = []
+    i = 0
+    while i < n:
+        L = min(max_len, n - i)
+        if L < min_len:                       # short tail: overlap backwards
+            parts.append((n - min_len, min_len))
+            break
+        rem = n - i - L
+        if 0 < rem < min_len:                 # shrink so the tail is viable
+            L = max(L - (min_len - rem), min_len)
+        parts.append((i, L))
+        i += L
+    return parts
+
+
+class Planner:
+    def __init__(self, index: IndexSet):
+        self.index = index
+        self.lex = index.lexicon
+        self._occ_counts = index.base_occ_counts()
+
+    # -- public API ---------------------------------------------------------
+
+    def plan(self, surface_ids: list[int], mode: str = MODE_PHRASE,
+             window: Optional[int] = None) -> QueryPlan:
+        if window is None:
+            window = self.index.params.max_distance
+        form_lists = [self.index.analyzer.forms_of(s) for s in surface_ids]
+        subplans = []
+        for tiered in self._split_by_tier(form_lists):
+            subplans.append(self._plan_subquery(tiered, mode, window))
+        return QueryPlan(subplans=subplans)
+
+    # -- query splitting (paper: PROCESSING QUERIES) -------------------------
+
+    def _split_by_tier(self, form_lists):
+        """Yield per-slot (tier, [forms]) lists, one per tier combination."""
+        per_slot_choices = []
+        for forms in form_lists:
+            tiers = {}
+            for f in forms:
+                tiers.setdefault(int(self.lex.base_tier[f]), []).append(f)
+            per_slot_choices.append(sorted(tiers.items()))
+        for combo in itertools.product(*per_slot_choices):
+            yield list(combo)   # [(tier, [forms]), ...] per slot
+
+    # -- classification + dispatch ------------------------------------------
+
+    def _plan_subquery(self, tiered, mode, window) -> SubPlan:
+        tiers = [t for t, _ in tiered]
+        if all(t == TIER_STOP for t in tiers):
+            return self._plan_type1(tiered)
+        if any(t == TIER_STOP for t in tiers):
+            return self._plan_type4(tiered, mode, window)
+        if all(t == TIER_FREQUENT for t in tiers):
+            return self._plan_type2(tiered, mode, window)
+        return self._plan_type3(tiered, mode, window)
+
+    # -- helpers --------------------------------------------------------------
+
+    def _slot_count(self, forms) -> int:
+        return int(sum(self._occ_counts[f] for f in forms))
+
+    def _pick_pivot(self, tiered) -> int:
+        return pick_pivot(tiered, self._occ_counts)
+
+    def _basic_group(self, slot, forms, band=0, first_only=False) -> FetchGroup:
+        idx = self.index.basic.first_occ if first_only else self.index.basic.occurrences
+        stream = "first" if first_only else "basic"
+        fetches = []
+        for f in forms:
+            s, e = idx.find(f)
+            if e > s:
+                fetches.append(ResolvedFetch(stream=stream, start=s, length=e - s,
+                                             offset=slot))
+        return FetchGroup(slot=slot, fetches=fetches, band=band)
+
+    def _pivot_group(self, slot, forms, stop_checks) -> FetchGroup:
+        """Pivot occurrences verified against near-stop stream 3 (Type 4)."""
+        fetches = []
+        for f in forms:
+            s, e = self.index.basic.occurrences.find(f)
+            if e > s:
+                fetches.append(ResolvedFetch(
+                    stream="basic", start=s, length=e - s, offset=slot,
+                    stop_checks=tuple(stop_checks), read_near_stop=bool(stop_checks)))
+        return FetchGroup(slot=slot, fetches=fetches, band=0)
+
+    def _expanded_group(self, slot, forms, pivot_slot, pivot_forms, mode, window) -> Optional[FetchGroup]:
+        """Union of expanded (w, v=pivot) fetches over form combinations.
+
+        Returns None when no (w, v) pair exists for any combination -- the
+        caller then falls back to a basic fetch for this slot (paper Type 3:
+        "In the case of words for which no expanded index exists, we use an
+        ordinary index").
+        """
+        exp = self.index.expanded
+        fetches = []
+        for w, v in itertools.product(forms, pivot_forms):
+            for stored_w, stored_v, mirrored in ((w, v, False), (v, w, True)):
+                s, e = exp.pairs.find(stored_w * exp.n_base + stored_v)
+                if e == s:
+                    continue
+                # stored postings: (doc, pos of stored_w, dist to stored_v)
+                anchor_offset = pivot_slot if mirrored else slot
+                if mode == MODE_PHRASE:
+                    rd = (slot - pivot_slot) if mirrored else (pivot_slot - slot)
+                    fetches.append(ResolvedFetch(
+                        stream="expanded", start=s, length=e - s,
+                        offset=anchor_offset, required_dist=rd))
+                else:
+                    fetches.append(ResolvedFetch(
+                        stream="expanded", start=s, length=e - s,
+                        offset=anchor_offset, max_abs_dist=window,
+                        pivot_from_dist=not mirrored))
+                break   # canonical orientation found
+        if not fetches:
+            return None
+        return FetchGroup(slot=slot, fetches=fetches, band=0)
+
+    def _fallback_groups(self, tiered) -> list[FetchGroup]:
+        """Distance-disregarding doc search: stream 1 only (paper step 3)."""
+        groups = []
+        for i, (t, forms) in enumerate(tiered):
+            if t == TIER_STOP:
+                continue    # stop words carry no meaning doc-level
+            groups.append(self._basic_group(i, forms, first_only=True))
+        return groups
+
+    # -- Type 1: all stop words ----------------------------------------------
+
+    def _plan_type1(self, tiered) -> SubPlan:
+        n = len(tiered)
+        p = self.index.params
+        if n < p.min_len:
+            return SubPlan(qtype=1, mode=MODE_PHRASE, groups=[], supported=False,
+                           note="single stop word: not indexed (paper: stop words "
+                                "are never searched alone)")
+        # split into parts of <= MaxLength (paper: EXPERIMENTS "the phrase may
+        # be divided into parts ... results are combined")
+        parts = split_query_parts(n, p.min_len, p.max_len)
+        groups = []
+        for part_start, L in parts:
+            fetches = []
+            slot_forms = [tiered[part_start + j][1] for j in range(L)]
+            for combo in itertools.product(*slot_forms):
+                locals_ = [int(self.lex.stop_local[f]) for f in combo]
+                s, e = self.index.stop_phrase.find(locals_)
+                if e > s:
+                    fetches.append(ResolvedFetch(stream="stop", start=s,
+                                                 length=e - s, offset=part_start))
+            groups.append(FetchGroup(slot=part_start, fetches=fetches, band=0))
+        return SubPlan(qtype=1, mode=MODE_PHRASE, groups=groups)
+
+    # -- Type 2: all frequently used ------------------------------------------
+
+    def _plan_type2(self, tiered, mode, window) -> SubPlan:
+        n = len(tiered)
+        pivot = self._pick_pivot(tiered)
+        groups = []
+        if n == 1:
+            groups.append(self._basic_group(0, tiered[0][1]))
+        else:
+            for i, (t, forms) in enumerate(tiered):
+                if i == pivot:
+                    continue
+                g = self._expanded_group(i, forms, pivot, tiered[pivot][1], mode, window)
+                if g is None:   # pair absent in the corpus => no distance match
+                    g = FetchGroup(slot=i, fetches=[], band=0)
+                groups.append(g)
+        return SubPlan(qtype=2, mode=mode, groups=groups,
+                       fallback_groups=self._fallback_groups(tiered))
+
+    # -- Type 3: no stop, at least one ordinary --------------------------------
+
+    def _plan_type3(self, tiered, mode, window) -> SubPlan:
+        pivot = self._pick_pivot(tiered)
+        groups = []
+        n_expanded = 0
+        for i, (t, forms) in enumerate(tiered):
+            if i == pivot:
+                continue
+            g = None
+            if t == TIER_FREQUENT:
+                g = self._expanded_group(i, forms, pivot, tiered[pivot][1], mode, window)
+                if g is not None:
+                    n_expanded += 1
+            if g is None:
+                band = window if mode == MODE_NEAR else 0
+                g = self._basic_group(i, forms, band=band)
+            groups.append(g)
+        # the pivot's own occurrences are needed when no expanded group pins
+        # its positions (all-ordinary query) or in near mode (band anchors)
+        if n_expanded == 0 or mode == MODE_NEAR:
+            groups.insert(0, self._basic_group(pivot, tiered[pivot][1]))
+        return SubPlan(qtype=3, mode=mode, groups=groups,
+                       fallback_groups=self._fallback_groups(tiered))
+
+    # -- Type 4: stop words mixed with others ----------------------------------
+
+    def _plan_type4(self, tiered, mode, window) -> SubPlan:
+        # paper (STRUCTURE OF SEARCH EXPERIMENTS): "If one of the query words
+        # has a stop basic form, the search is confined to sequential words."
+        mode = MODE_PHRASE
+        pivot = self._pick_pivot(tiered)
+        p = self.index.params
+        stop_checks, unsupported = [], []
+        for i, (t, forms) in enumerate(tiered):
+            if t != TIER_STOP:
+                continue
+            delta = i - pivot
+            if abs(delta) > p.max_distance:
+                unsupported.append(i)
+                continue
+            # any of the slot's stop forms at the required delta satisfies it
+            stop_checks.append((delta, tuple(int(self.lex.stop_local[f]) for f in forms)))
+        groups = [self._pivot_group(pivot, tiered[pivot][1], stop_checks)]
+        for i, (t, forms) in enumerate(tiered):
+            if i == pivot or t == TIER_STOP:
+                continue
+            g = None
+            if t == TIER_FREQUENT:
+                g = self._expanded_group(i, forms, pivot, tiered[pivot][1], mode, window)
+            if g is None:
+                band = window if mode == MODE_NEAR else 0
+                g = self._basic_group(i, forms, band=band)
+            groups.append(g)
+        note = ""
+        if unsupported:
+            note = f"stop slots {unsupported} beyond MaxDistance of pivot; phrase split required"
+        return SubPlan(qtype=4, mode=mode, groups=groups,
+                       fallback_groups=self._fallback_groups(tiered), note=note)

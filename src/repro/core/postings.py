@@ -1,0 +1,198 @@
+"""Posting-list containers and packed-key codecs.
+
+A *posting* is the paper's (ID, P) record: document id + in-document word
+position.  All indexes in this system are CSR structures-of-arrays:
+
+    offsets : [K + 1] int64     -- slice bounds per key
+    columns : dict[str, array]  -- parallel int columns (doc, pos, dist, ...)
+
+which shard cleanly over the `data` mesh axis and scan at HBM bandwidth on the
+TPU (see DESIGN.md §2 for why this replaces the paper's compressed streams).
+
+Key codecs
+----------
+* doc_pos_key:   doc << 32 | pos                      (total order on postings)
+* shifted_key:   doc << 26 | (pos - offset + BIAS)    (phrase intersection)
+* stop_phrase_key: L << 60 | sorted 10-bit stop ids   (B-tree key adaptation)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PHRASE_BIAS = 64          # headroom so (pos - offset) never underflows
+POS_BITS = 26             # in-doc positions < 2**26 - 2*BIAS
+STOP_ID_BITS = 10         # stop vocabulary <= 1024
+MAX_STOP_PHRASE_LEN = 5   # 5 * 10 bits + 3-bit length tag < 64 bits
+
+
+# --------------------------------------------------------------------------
+# key codecs (numpy; mirrored in jnp by the executor where needed)
+# --------------------------------------------------------------------------
+
+def doc_pos_key(doc: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    return (doc.astype(np.int64) << 32) | pos.astype(np.int64)
+
+
+def shifted_key(doc: np.ndarray, pos: np.ndarray, offset) -> np.ndarray:
+    """Key such that words at phrase offsets o_i over the same anchor collide.
+
+    Word i of a phrase occurring at position p has anchor p - o_i; a precise
+    phrase match is a k-way intersection of these keys (DESIGN.md §2).
+    """
+    shifted = pos.astype(np.int64) - np.asarray(offset, dtype=np.int64) + PHRASE_BIAS
+    return (doc.astype(np.int64) << POS_BITS) | shifted
+
+
+def unpack_shifted_key(key: np.ndarray, offset=0):
+    doc = key >> POS_BITS
+    pos = (key & ((1 << POS_BITS) - 1)) - PHRASE_BIAS + offset
+    return doc.astype(np.int32), pos.astype(np.int32)
+
+
+def pack_stop_phrase_key(sorted_local_ids: np.ndarray) -> np.ndarray:
+    """[N, L] sorted stop local ids -> [N] int64 keys (duplicates preserved)."""
+    ids = np.asarray(sorted_local_ids, dtype=np.int64)
+    if ids.ndim == 1:
+        ids = ids[None, :]
+    n, L = ids.shape
+    if L > MAX_STOP_PHRASE_LEN:
+        raise ValueError(f"stop-phrase length {L} > {MAX_STOP_PHRASE_LEN}")
+    key = np.full(n, np.int64(L) << 60, dtype=np.int64)
+    for i in range(L):
+        key |= ids[:, i] << (STOP_ID_BITS * i)
+    return key
+
+
+NS_SHIFT = 10     # stop local id < 1024 -> 10 bits; (delta+MaxD) <= 14 -> 4 bits
+
+
+def pack_near_stop_slot(delta: np.ndarray, stop_local: np.ndarray, max_distance: int) -> np.ndarray:
+    """Stream-3 slot: (delta + MaxDistance) << 10 | stop_local, in int16
+    (14 bits used; empty = -1).  Half the stream-3 footprint of int32."""
+    packed = ((delta.astype(np.int32) + max_distance) << NS_SHIFT) \
+        | stop_local.astype(np.int32)
+    return packed.astype(np.int16)
+
+
+def unpack_near_stop_slot(slot: np.ndarray, max_distance: int):
+    slot = np.asarray(slot).astype(np.int32)
+    delta = (slot >> NS_SHIFT) - max_distance
+    stop_local = slot & ((1 << NS_SHIFT) - 1)
+    return delta, stop_local
+
+
+# --------------------------------------------------------------------------
+# CSR container
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CSR:
+    """Sorted-key CSR posting store.
+
+    keys[k] owns columns[*][offsets[k]:offsets[k+1]].  `keys` is sorted so
+    lookup is a binary search — the TPU-native replacement for the paper's
+    B-tree (DESIGN.md §2).
+    """
+
+    keys: np.ndarray          # [K] int64, sorted ascending
+    offsets: np.ndarray       # [K + 1] int64
+    columns: dict[str, np.ndarray]
+
+    def __post_init__(self):
+        assert self.offsets.shape == (len(self.keys) + 1,)
+        for c in self.columns.values():
+            assert len(c) == self.offsets[-1], (len(c), self.offsets[-1])
+
+    @property
+    def n_keys(self) -> int:
+        return len(self.keys)
+
+    @property
+    def n_postings(self) -> int:
+        return int(self.offsets[-1])
+
+    def nbytes(self) -> int:
+        n = self.keys.nbytes + self.offsets.nbytes
+        return n + sum(c.nbytes for c in self.columns.values())
+
+    def find(self, key: int) -> tuple[int, int]:
+        """(start, end) slice for `key`; (0, 0) when absent."""
+        i = int(np.searchsorted(self.keys, key))
+        if i == len(self.keys) or self.keys[i] != key:
+            return (0, 0)
+        return (int(self.offsets[i]), int(self.offsets[i + 1]))
+
+    def count(self, key: int) -> int:
+        s, e = self.find(key)
+        return e - s
+
+    def slice(self, key: int) -> dict[str, np.ndarray]:
+        s, e = self.find(key)
+        return {name: col[s:e] for name, col in self.columns.items()}
+
+    @staticmethod
+    def from_unsorted(keys: np.ndarray, columns: dict[str, np.ndarray],
+                      presorted: bool = False) -> "CSR":
+        """Group unsorted per-posting keys into a CSR (stable within key)."""
+        if len(keys) == 0:
+            return CSR(keys=np.empty(0, np.int64), offsets=np.zeros(1, np.int64),
+                       columns={k: v[:0] for k, v in columns.items()})
+        if not presorted:
+            order = np.argsort(keys, kind="stable")
+            keys = keys[order]
+            columns = {k: v[order] for k, v in columns.items()}
+        uniq, counts = np.unique(keys, return_counts=True)
+        offsets = np.zeros(len(uniq) + 1, dtype=np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return CSR(keys=uniq.astype(np.int64), offsets=offsets, columns=columns)
+
+
+@dataclasses.dataclass
+class DenseCSR:
+    """CSR over a dense id space [0, K): offsets only, no key search.
+
+    Used for the basic index (key = basic-form id) where the id space is
+    dense and small.
+    """
+
+    offsets: np.ndarray       # [K + 1] int64
+    columns: dict[str, np.ndarray]
+
+    @property
+    def n_keys(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def n_postings(self) -> int:
+        return int(self.offsets[-1])
+
+    def nbytes(self) -> int:
+        return self.offsets.nbytes + sum(c.nbytes for c in self.columns.values())
+
+    def find(self, key: int) -> tuple[int, int]:
+        return (int(self.offsets[key]), int(self.offsets[key + 1]))
+
+    def count(self, key: int) -> int:
+        s, e = self.find(key)
+        return e - s
+
+    def counts(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    def slice(self, key: int) -> dict[str, np.ndarray]:
+        s, e = self.find(key)
+        return {name: col[s:e] for name, col in self.columns.items()}
+
+    @staticmethod
+    def from_ids(ids: np.ndarray, n_keys: int, columns: dict[str, np.ndarray],
+                 presorted: bool = False) -> "DenseCSR":
+        if not presorted:
+            order = np.argsort(ids, kind="stable")
+            ids = ids[order]
+            columns = {k: v[order] for k, v in columns.items()}
+        counts = np.bincount(ids, minlength=n_keys).astype(np.int64)
+        offsets = np.zeros(n_keys + 1, dtype=np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return DenseCSR(offsets=offsets, columns=columns)

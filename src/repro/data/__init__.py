@@ -1,0 +1,1 @@
+"""Host-side input pipelines (numpy generators, device prefetch at the loop)."""

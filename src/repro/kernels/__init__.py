@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see tests/).
+
+banded_intersect — posting-list intersection / positional window join
+segment_bag      — EmbeddingBag gather-reduce (recsys)
+flash_decode     — single-token decode attention over long KV caches
+flash_prefill    — causal GQA prefill with VMEM-resident score tiles
+"""
+from repro.kernels.ops import (banded_intersect, flash_decode, flash_prefill,
+                               segment_bag)
+
+__all__ = ["banded_intersect", "flash_decode", "flash_prefill", "segment_bag"]

@@ -1,0 +1,156 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op takes `implementation='pallas' | 'ref'` (+ `interpret=` for the
+pallas path; on this CPU container interpret=True is the default and the
+TPU-lowering path is exercised by the dry-run).  Tests sweep shapes/dtypes
+and assert the two implementations agree exactly (integer ops) or to bf16
+tolerance (attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.flash_prefill import flash_prefill_pallas
+from repro.kernels.intersect import I32_SENTINEL, banded_intersect_pallas
+from repro.kernels.segment_bag import segment_bag_pallas
+
+
+def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# banded intersection
+# ---------------------------------------------------------------------------
+
+def banded_intersect(a: jax.Array, b_sorted: jax.Array, band: int, *,
+                     implementation: str = "pallas", interpret: bool = True,
+                     block_a: int = 1024, block_b: int = 1024,
+                     max_tiles: int | None = None) -> jax.Array:
+    """found[i] = exists j with |a[i] - b_sorted[j]| <= band.
+
+    a: [Na] int32 (any order); b_sorted: [Nb] int32 ascending.  Returns
+    bool [Na].  Entries equal to I32_SENTINEL never match (padding).
+    """
+    assert a.dtype == jnp.int32 and b_sorted.dtype == jnp.int32
+    if implementation == "ref":
+        found = ref.banded_intersect_ref(a, b_sorted, band)
+        return found & (a != I32_SENTINEL)
+
+    na, nb = a.shape[0], b_sorted.shape[0]
+    if na == 0 or nb == 0:
+        return jnp.zeros((na,), jnp.bool_)
+    a_pad = _pad_to(a, block_a, I32_SENTINEL)
+    b_pad = _pad_to(b_sorted, block_b, I32_SENTINEL)
+    nab = a_pad.shape[0] // block_a
+    nbb = b_pad.shape[0] // block_b
+
+    a_tiles = a_pad.reshape(nab, block_a)
+    # int64 bounds: sentinel +/- band must not wrap (keys are < 2**30)
+    amin = a_tiles.min(axis=1).astype(jnp.int64)
+    amax = a_tiles.max(axis=1).astype(jnp.int64)
+    b_block_min = b_pad.reshape(nbb, block_b)[:, 0].astype(jnp.int64)
+    # side='left': a block whose min equals amin-band may be preceded by a
+    # block ending in the same value (duplicates straddling the boundary)
+    lo = jnp.clip(jnp.searchsorted(b_block_min, amin - band, side="left") - 1, 0, nbb - 1)
+    hi = jnp.searchsorted(b_block_min, amax + band, side="right")
+    n_tiles = jnp.maximum(hi - lo, 0).astype(jnp.int32)
+    lo = lo.astype(jnp.int32)
+
+    if max_tiles is None:
+        if isinstance(n_tiles, jax.core.Tracer):
+            max_tiles = nbb                         # static worst case under jit
+        else:
+            max_tiles = max(int(n_tiles.max()), 1)
+    max_tiles = max(min(max_tiles, nbb), 1)
+
+    out2d = banded_intersect_pallas(
+        a_pad.reshape(-1, 128), b_pad.reshape(-1, 128), lo, n_tiles,
+        band=band, block_a=block_a, block_b=block_b, max_tiles=max_tiles,
+        interpret=interpret)
+    found = out2d.reshape(-1)[:na] > 0
+    return found & (a != I32_SENTINEL)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag
+# ---------------------------------------------------------------------------
+
+def segment_bag(table: jax.Array, ids: jax.Array, weights: jax.Array | None = None,
+                combine: str = "sum", *, implementation: str = "pallas",
+                interpret: bool = True) -> jax.Array:
+    """EmbeddingBag(table, ids) -> [B, D]; ids [B, F] int32, -1 = pad."""
+    if implementation == "ref":
+        return ref.segment_bag_ref(table, ids, weights, combine)
+    B, F = ids.shape
+    w = weights if weights is not None else jnp.ones((B, F), table.dtype)
+    out = segment_bag_pallas(table, ids.astype(jnp.int32), w.astype(table.dtype),
+                             interpret=interpret)       # fp32 accumulator
+    if combine == "mean":
+        denom = jnp.maximum((ids >= 0).sum(axis=1, keepdims=True), 1).astype(jnp.float32)
+        out = out / denom
+    return out.astype(table.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash prefill attention
+# ---------------------------------------------------------------------------
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  block_q: int = 512, block_kv: int = 512,
+                  implementation: str = "pallas",
+                  interpret: bool = True) -> jax.Array:
+    """Causal GQA prefill.  q: [B, S, Hq, D]; k, v: [B, S, Hkv, D].
+
+    The Pallas path keeps each (block_q x block_kv) score tile in VMEM
+    (the §Roofline fix for the prefill memory term)."""
+    if implementation == "ref":
+        return ref.flash_prefill_ref(q, k, v)
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, S)
+    bkv = min(block_kv, S)
+    # rows ordered (q_block, g, q_within) per KV head — see flash_prefill.py
+    q6 = q.reshape(B, S // bq, bq, Hkv, G, D).transpose(0, 3, 1, 4, 2, 5)
+    q5 = q6.reshape(B, Hkv, S * G, D)
+    out5 = flash_prefill_pallas(q5, k, v, block_q=bq, block_kv=bkv,
+                                interpret=interpret)
+    out = out5.reshape(B, Hkv, S // bq, G, bq, D).transpose(0, 2, 4, 1, 3, 5)
+    return out.reshape(B, S, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# flash decode attention
+# ---------------------------------------------------------------------------
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_len: jax.Array | int, *, block_s: int = 512,
+                 implementation: str = "pallas", interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, D]; k, v: [B, S, Hkv, D]; kv_len: [B] or scalar."""
+    if implementation == "ref":
+        return ref.flash_decode_ref(q, k, v, kv_len)
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((B,), kv_len, jnp.int32)
+    bs = min(block_s, S)
+    pad = (-S) % bs
+    if pad:
+        zeros = jnp.zeros((B, pad, Hkv, D), k.dtype)
+        k = jnp.concatenate([k, zeros], axis=1)
+        v = jnp.concatenate([v, zeros], axis=1)
+    q4 = q.reshape(B, Hkv, G, D) if Hq == Hkv * G else q.reshape(B, Hkv, G, D)
+    out = flash_decode_pallas(q4, k, v, kv_len, block_s=bs, interpret=interpret)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose (exact for integer kernels) against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def banded_intersect_ref(a: jax.Array, b_sorted: jax.Array, band: int) -> jax.Array:
+    """found[i] = exists j: b_sorted[j] in [a[i] - band, a[i] + band].
+
+    `b_sorted` must be sorted ascending (sentinel pads allowed at the end:
+    the caller masks sentinel entries of `a` itself).
+    """
+    lo = jnp.searchsorted(b_sorted, a - band, side="left")
+    hi = jnp.searchsorted(b_sorted, a + band, side="right")
+    return hi > lo
+
+
+def segment_bag_ref(table: jax.Array, ids: jax.Array, weights: jax.Array | None = None,
+                    combine: str = "sum") -> jax.Array:
+    """EmbeddingBag: out[b] = combine_f table[ids[b, f]] (* weights[b, f]).
+
+    ids: [B, F] int32 (negative id = padding -> contributes zero).
+    table: [V, D].  combine in {'sum', 'mean'}.
+    """
+    valid = ids >= 0
+    rows = table[jnp.maximum(ids, 0)]                     # [B, F, D]
+    w = valid.astype(table.dtype)
+    if weights is not None:
+        w = w * weights.astype(table.dtype)
+    out = jnp.einsum("bfd,bf->bd", rows, w,
+                     preferred_element_type=jnp.float32)  # fp32 accumulation
+    if combine == "mean":
+        denom = jnp.maximum(valid.sum(axis=1, keepdims=True), 1).astype(jnp.float32)
+        out = out / denom
+    return out.astype(table.dtype)
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal GQA prefill attention.  q: [B, S, Hq, D]; k, v: [B, S, Hkv, D].
+    Head index convention: head = h * G + g (repeat_kv).  fp32 softmax."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    kk = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kk)
+    logits = logits / jnp.sqrt(D).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    return out.astype(q.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array | int) -> jax.Array:
+    """Single-token decode attention with a (possibly padded) KV cache.
+
+    q: [B, Hq, D]; k, v: [B, S, Hkv, D]; kv_len: [B] or scalar -- number of
+    valid cache entries per batch row.  GQA: Hq = G * Hkv.
+    Softmax in fp32 regardless of input dtype; output matches q dtype.
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qf, kf) / jnp.sqrt(D).astype(jnp.float32)
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((B,), kv_len)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]        # [B, S]
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(B, Hq, D).astype(q.dtype)

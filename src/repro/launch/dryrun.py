@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+the production meshes, record memory/cost analysis + collective schedule.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count on first init, and the dry-run needs 512 host devices.
+Nothing else in the framework sets XLA_FLAGS (smoke tests see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all            # 40+ cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ALL_ARCHS, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True,
+             layout: str = "2d") -> dict:
+    from benchmarks import roofline as rl
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cell = build_cell(arch_id, shape_name, mesh, layout=layout)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.step, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.in_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo)
+
+    # XLA:CPU cost_analysis counts while bodies once; use the loop-aware
+    # HLO analyzer for the roofline terms and keep the raw numbers alongside.
+    looped = rl.parse_hlo_costs(hlo)
+    flops_dev = float(looped["flops"])
+    bytes_dev = float(looped["bytes"])
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    terms = rl.roofline_terms(flops_dev, bytes_dev, float(coll.total_bytes), chips)
+    spec = get_arch(arch_id)
+    mflops = rl.model_flops_for(dict(cell.meta, ns_k=20), spec.family, cell.kind)
+
+    record = {
+        "arch": arch_id, "shape": shape_name, "kind": cell.kind,
+        "layout": layout,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "output_size_in_bytes", 0) or 0),
+        },
+        "cost": {"flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+                 "raw_cost_analysis_flops": raw_flops,
+                 "raw_cost_analysis_bytes": raw_bytes},
+        "collectives": {"bytes_by_type": coll.bytes_by_type,
+                        "op_counts": coll.op_counts,
+                        "total_bytes_per_device": coll.total_bytes},
+        "roofline": terms,
+        "model_flops": mflops,
+        "useful_ratio": (mflops / terms["hlo_flops_global"]
+                         if terms["hlo_flops_global"] else None),
+        "meta": cell.meta,
+    }
+    if verbose:
+        print(f"=== {arch_id} / {shape_name} / {record['mesh']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: {record['memory']}")
+        print(f"  cost_analysis: flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e}")
+        print(f"  collectives: {coll.bytes_by_type}")
+        print(f"  roofline: compute={terms['t_compute_s']:.3e}s "
+              f"memory={terms['t_memory_s']:.3e}s "
+              f"collective={terms['t_collective_s']:.3e}s "
+              f"-> dominant={terms['dominant']}")
+        ratio = record["useful_ratio"]
+        print(f"  MODEL_FLOPS={mflops:.3e} useful_ratio="
+              f"{ratio:.3f}" if ratio is not None else "  MODEL_FLOPS n/a")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__{record['mesh'].replace('x', '_')}"
+        if layout != "2d":
+            tag += f"__{layout}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--layout", default="2d", choices=["2d", "fsdp"],
+                    help="LM train sharding: 2d = TPxFSDP; fsdp = pure ZeRO-3")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--stop-on-error", action="store_true")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        spec = get_arch(arch)
+        shapes = list(spec.shapes) if args.shape == "all" else [args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, out_dir=args.out,
+                             layout=args.layout)
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"!!! FAILED {arch}/{shape}/mp={mp}: {e}")
+                    traceback.print_exc()
+                    if args.stop_on_error:
+                        raise
+    print(f"\ndone; {len(failures)} failures")
+    for f in failures:
+        print("  FAILED:", f)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

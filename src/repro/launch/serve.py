@@ -1,0 +1,107 @@
+"""Serving launcher.
+
+Two modes:
+  search — build the paper's indexes over a synthetic corpus and serve a
+           batched query stream through the tensorized serve step (the same
+           step the dry-run lowers at 512 chips).
+  lm     — greedy decode from a smoke LM with the KV cache serve_step.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode search --queries 32
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch llama3-8b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+
+
+def serve_search(n_queries: int):
+    from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
+                            build_all, generate_corpus, make_lexicon_and_analyzer)
+    from repro.core.planner import MODE_PHRASE
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.search_serve import (SearchServeConfig, build_arenas,
+                                          make_search_serve_step,
+                                          tensorize_plans)
+    lex_cfg = LexiconConfig(n_surface=20_000, n_base=15_000, n_stop=400,
+                            n_frequent=1200, seed=0)
+    lex, ana = make_lexicon_and_analyzer(lex_cfg)
+    corpus = generate_corpus(lex_cfg, CorpusConfig(n_docs=300, seed=0))
+    index = build_all(corpus, lex, ana)
+    engine = AdditionalIndexEngine(index)
+    cfg = SearchServeConfig(
+        queries=n_queries, groups=4, postings_pad=8192, seed_pad=2048,
+        packed_keys=True, top_m=64,
+        n_basic=index.basic.occurrences.n_postings,
+        n_expanded=index.expanded.pairs.n_postings,
+        n_stop=index.stop_phrase.phrases.n_postings)
+    arenas, bases = build_arenas(index, cfg)
+    mesh = make_host_mesh(data=1, model=1)
+    step = jax.jit(make_search_serve_step(cfg, mesh))
+
+    rng = np.random.default_rng(0)
+    plans = []
+    while len(plans) < cfg.queries:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        if len(toks) < 10:
+            continue
+        st = int(rng.integers(len(toks) - 6))
+        plan = engine.plan(toks[st:st + 3].tolist(), mode=MODE_PHRASE)
+        if plan.subplans[0].supported:
+            plans.append(plan)
+    tables = {k: jnp.asarray(v) for k, v in
+              tensorize_plans(cfg, plans, stream_bases=bases).items()}
+    with mesh:
+        hits, counts = step(arenas, tables)     # warm
+        jax.block_until_ready(hits)
+        t0 = time.perf_counter()
+        hits, counts = step(arenas, tables)
+        jax.block_until_ready(hits)
+        dt = time.perf_counter() - t0
+    print(f"[serve/search] {cfg.queries} queries in {dt*1e3:.1f} ms "
+          f"({dt/cfg.queries*1e6:.0f} us/query, CPU); "
+          f"hit counts: {np.asarray(counts)[:8].tolist()}...")
+
+
+def serve_lm(arch: str, n_tokens: int):
+    from repro.models import transformer as tfm
+    cfg = get_arch(arch).make_smoke_config()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S_max = 2, 128
+    cache = tfm.init_cache(cfg, B, S_max)
+    tok = jnp.zeros((B,), jnp.int32)
+    step = jax.jit(lambda p, c, t, i: tfm.decode_step(cfg, p, c, t, i))
+    t0 = time.perf_counter()
+    out = []
+    for i in range(n_tokens):
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    dt = time.perf_counter() - t0
+    print(f"[serve/lm] {arch} decoded {n_tokens} tokens x batch {B} in "
+          f"{dt*1e3:.0f} ms ({dt/n_tokens*1e3:.1f} ms/token, CPU smoke); "
+          f"first 10: {out[:10]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["search", "lm"], default="search")
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+    if args.mode == "search":
+        serve_search(args.queries)
+    else:
+        serve_lm(args.arch, args.tokens)
+
+
+if __name__ == "__main__":
+    main()

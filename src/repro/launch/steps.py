@@ -1,0 +1,472 @@
+"""Cell builder for the multi-pod dry-run: for every (arch x shape x mesh)
+returns the step function, ShapeDtypeStruct inputs, and sharding trees.
+
+Kinds per family:
+  lm:     train (train_step: fwd+bwd+AdamW), prefill (forward_with_cache),
+          decode (decode_step over a KV cache; SP when batch < |dp|)
+  gnn:    train_full / train_minibatch / train_graphs (all train_step)
+  recsys: train (train_step), serve (serve_scores), retrieval (top-k scoring)
+  search: search_serve (document-sharded batched phrase queries)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_arch
+from repro.dist import sharding as shr
+from repro.models import gnn as gnn_m
+from repro.models import recsys as rec_m
+from repro.models import transformer as tfm
+from repro.serve import search_serve as ss
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    step: Callable
+    in_specs: tuple                  # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any               # None = auto
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+OPT_CFG = opt.OptimizerConfig(name="adamw")
+
+
+def _ns(mesh, tree_specs, like_tree):
+    """PartitionSpec tree -> NamedSharding tree shaped like like_tree."""
+    def to_ns(spec):
+        return NamedSharding(mesh, spec)
+    if tree_specs is None:
+        return jax.tree_util.tree_map(
+            lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), like_tree)
+    # broadcast spec tree against the value tree (specs at internal nodes)
+    def walk(spec, like):
+        if isinstance(spec, P):
+            return jax.tree_util.tree_map(lambda _: to_ns(spec), like)
+        if isinstance(spec, dict):
+            return {k: walk(spec[k], like[k]) for k in like}
+        if isinstance(spec, (list, tuple)):
+            return type(like)(walk(s, l) for s, l in zip(spec, like))
+        raise TypeError(type(spec))
+    return walk(tree_specs, like_tree)
+
+
+def _opt_shardings(mesh, param_shardings, opt_state_struct):
+    step_ns = NamedSharding(mesh, P())
+    out = {"step": step_ns}
+    for k in opt_state_struct:
+        if k == "step":
+            continue
+        out[k] = param_shardings
+    return out
+
+
+def _dp_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch_id, shape_name, shape, mesh, smoke=False,
+             layout: str = "2d") -> Cell:
+    spec = get_arch(arch_id)
+    cfg = spec.make_smoke_config() if smoke else spec.make_config()
+    if layout == "fsdp" and not smoke and shape["kind"] == "train":
+        # pure ZeRO-3: every mesh axis is data parallelism
+        ax = tuple(mesh.axis_names)
+        n_all = mesh.size
+        assert shape["global_batch"] % n_all == 0, "batch must divide mesh"
+        cfg = dataclasses.replace(
+            cfg, act_pspec=NamedSharding(mesh, P(ax, None, None)),
+            pre_cast_layers=True)
+        key = jax.random.PRNGKey(0)
+        params_struct = jax.eval_shape(functools.partial(tfm.init_params, cfg), key)
+        p_shard = _ns(mesh, shr.transformer_param_specs(cfg, mesh, "fsdp"),
+                      params_struct)
+        opt_struct = jax.eval_shape(
+            functools.partial(opt.init_state, OPT_CFG), params_struct)
+        o_shard = _opt_shardings(mesh, p_shard, opt_struct)
+        B, S = shape["global_batch"], shape["seq_len"]
+        batch_struct = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        b_shard = {k: NamedSharding(mesh, P(ax, None)) for k in batch_struct}
+
+        def step(params, opt_state, batch):
+            def loss(p):
+                return tfm.loss_fn(cfg, p, batch)
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            new_p, new_o, om = opt.apply_updates(OPT_CFG, params, grads, opt_state)
+            return new_p, new_o, dict(metrics, loss=l, **om)
+
+        meta = {"params": cfg.param_count(), "active_params": cfg.active_param_count(),
+                "seq_len": S, "global_batch": B, "n_layers": cfg.n_layers,
+                "d_model": cfg.d_model, "n_heads": cfg.n_heads, "hd": cfg.hd}
+        return Cell(arch_id, shape_name, "train", step,
+                    (params_struct, opt_struct, batch_struct),
+                    (p_shard, o_shard, b_shard), (p_shard, o_shard, None),
+                    donate=(0, 1), meta=meta)
+    if not smoke and shape["kind"] in ("train", "prefill"):
+        # Megatron-SP: shard the scanned residual stream on sequence so the
+        # per-layer carry is [B/dp, S/model, D] (bounds remat memory).
+        # For chunked (long-S) attention, K/V are materialized replicated
+        # once per layer — q stays S-sharded, so score blocks partition on
+        # the q dimension with no per-chunk collectives and no head-count
+        # divisibility constraints (qwen's 40 heads don't divide 16).
+        # NamedSharding (not bare PartitionSpec) so tracing works mesh-free.
+        dp0 = shr.dp_axis(mesh)
+        cfg = dataclasses.replace(
+            cfg, act_pspec=NamedSharding(mesh, P(dp0, "model", None)))
+        if cfg.n_heads % mesh.shape["model"] == 0:
+            # pin attention heads to TP — otherwise SPMD picks inconsistent
+            # layouts for the S x S score tensors and replicates activations
+            # at the boundaries (catastrophic on the multi-pod mesh)
+            cfg = dataclasses.replace(
+                cfg, q_pspec=NamedSharding(mesh, P(dp0, None, "model", None)),
+                attn_pspec=NamedSharding(mesh, P(dp0, "model", None, None)))
+        else:
+            # heads don't divide TP (qwen's 40): scores pin on the q-sequence
+            cfg = dataclasses.replace(
+                cfg, attn_pspec=NamedSharding(mesh, P(dp0, None, "model", None)))
+        if shape["seq_len"] > cfg.attn_chunk.threshold:
+            cfg = dataclasses.replace(
+                cfg, kv_pspec=NamedSharding(mesh, P(dp0, None, None, None)))
+        if cfg.moe:
+            # GShard grouping: group-local routing sorts, [G, E, C, D]
+            # buffers sharded G x dp / E x model (dispatch = all-to-all)
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, n_groups=_dp_size(mesh),
+                # tokens within a group stay sharded over 'model' (aligned
+                # with the S-sharded residual stream)
+                group_pspec=NamedSharding(mesh, P(dp0, "model", None)),
+                expert_pspec=NamedSharding(mesh, P(dp0, "model", None, None))))
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(functools.partial(tfm.init_params, cfg), key)
+    p_specs = shr.transformer_param_specs(cfg, mesh)
+    p_shard = _ns(mesh, p_specs, params_struct)
+    dp = shr.dp_axis(mesh)
+    B, S = shape["global_batch"], shape["seq_len"]
+    meta = {"params": cfg.param_count(), "active_params": cfg.active_param_count(),
+            "seq_len": S, "global_batch": B, "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model, "n_heads": cfg.n_heads, "hd": cfg.hd}
+
+    if shape["kind"] == "train":
+        opt_struct = jax.eval_shape(
+            functools.partial(opt.init_state, OPT_CFG), params_struct)
+        o_shard = _opt_shardings(mesh, p_shard, opt_struct)
+        batch_struct = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        b_shard = {k: NamedSharding(mesh, v)
+                   for k, v in shr.transformer_batch_specs(mesh).items()}
+
+        def step(params, opt_state, batch):
+            def loss(p):
+                return tfm.loss_fn(cfg, p, batch)
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            new_p, new_o, om = opt.apply_updates(OPT_CFG, params, grads, opt_state)
+            return new_p, new_o, dict(metrics, loss=l, **om)
+
+        return Cell(arch_id, shape_name, "train", step,
+                    (params_struct, opt_struct, batch_struct),
+                    (p_shard, o_shard, b_shard),
+                    (p_shard, o_shard, None), donate=(0, 1), meta=meta)
+
+    if shape["kind"] == "prefill":
+        tok_struct = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tok_shard = NamedSharding(mesh, P(dp, None))
+        cache_spec = shr.transformer_cache_specs(cfg, mesh, B)
+
+        def step(params, tokens):
+            logits, cache = forward_with_cache(cfg, params, tokens)
+            return logits, cache
+
+        cache_struct = jax.eval_shape(
+            lambda p, t: forward_with_cache(cfg, p, t)[1], params_struct, tok_struct)
+        c_shard = {k: NamedSharding(mesh, cache_spec[k]) for k in cache_struct}
+        return Cell(arch_id, shape_name, "prefill", step,
+                    (params_struct, tok_struct),
+                    (p_shard, tok_shard),
+                    (None, c_shard), meta=meta)
+
+    # decode
+    cache_struct = jax.eval_shape(
+        functools.partial(tfm.init_cache, cfg, B, S), )
+    cache_spec = shr.transformer_cache_specs(cfg, mesh, B)
+    c_shard = {k: NamedSharding(mesh, cache_spec[k]) for k in cache_struct}
+    dp_n = _dp_size(mesh)
+    tok_spec = P(dp) if (B % dp_n == 0 and B >= dp_n) else P(None)
+    tok_struct = jax.ShapeDtypeStruct((B,), jnp.int32)
+    len_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, cache, tokens, cur_len):
+        return tfm.decode_step(cfg, params, cache, tokens, cur_len)
+
+    return Cell(arch_id, shape_name, "decode", step,
+                (params_struct, cache_struct, tok_struct, len_struct),
+                (p_shard, c_shard, NamedSharding(mesh, tok_spec),
+                 NamedSharding(mesh, P())),
+                (None, c_shard), donate=(1,), meta=meta)
+
+
+def forward_with_cache(cfg: tfm.TransformerConfig, params, tokens):
+    """Prefill: forward pass that also emits the per-layer KV cache and the
+    last-position logits (what a serving prefill actually returns)."""
+    B, S = tokens.shape
+    dt = cfg.dtype
+    x = params["embed"].astype(dt)[tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, p):
+        from repro.models import layers as L
+        Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        h = L.rms_norm(x, p["ln1"])
+        q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(dt))
+        k = jnp.einsum("bsd,dh->bsh", h, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dh->bsh", h, p["wv"].astype(dt))
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+        q = L.apply_rope(q.reshape(B, S, Hq, hd), positions, cfg.rope_theta)
+        k = L.apply_rope(k.reshape(B, S, Hkv, hd), positions, cfg.rope_theta)
+        v = v.reshape(B, S, Hkv, hd)
+        if cfg.kv_pspec is not None:
+            k = jax.lax.with_sharding_constraint(k, cfg.kv_pspec)
+            v = jax.lax.with_sharding_constraint(v, cfg.kv_pspec)
+        cq, ckv = cfg.attn_chunk.for_seq(S)
+        o = L.causal_attention(q, k, v, chunk_q=cq, chunk_kv=ckv)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(B, S, Hq * hd), p["wo"].astype(dt))
+        h2 = L.rms_norm(x, p["ln2"])
+        if cfg.moe:
+            from repro.models.moe import moe_ffn
+            y, _ = moe_ffn(h2, p["router"], p["wg"],
+                           p["wu"], p["wd"], cfg.moe, dt)
+        else:
+            y = L.swiglu(h2, p["wg"], p["wu"], p["wd"], dt)
+        x = x + y
+        if cfg.act_pspec is not None:
+            x = jax.lax.with_sharding_constraint(x, cfg.act_pspec)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    from repro.models import layers as L
+    x = L.rms_norm(x[:, -1], params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    logits = jnp.einsum("bd,dv->bv", x, head, preferred_element_type=jnp.float32)
+    return logits, {"k": ks.transpose(0, 1, 2, 3, 4), "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch_id, shape_name, shape, mesh, smoke=False) -> Cell:
+    spec = get_arch(arch_id)
+    base = spec.make_smoke_config() if smoke else spec.make_config()
+    cfg = dataclasses.replace(base, d_feat=shape["d_feat"],
+                              n_classes=shape["n_classes"],
+                              graph_readout=shape["kind"] == "train_graphs")
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(functools.partial(gnn_m.init_params, cfg), key)
+    p_shard = _ns(mesh, None, params_struct)     # replicated (tiny)
+    dp = shr.gnn_dp_axis(mesh)                   # GNN partitions on ALL axes
+    dp_n = mesh.size
+
+    if shape["kind"] == "train_minibatch":
+        seeds = shape["batch_nodes"]
+        f_prod, max_nodes = 1, seeds
+        for f in shape["fanout"]:
+            f_prod *= f
+            max_nodes += seeds * f_prod
+        N, E = max_nodes, max_nodes - seeds
+        meta_edges = E
+    elif shape["kind"] == "train_graphs":
+        N = shape["batch"] * shape["n_nodes"]
+        E = shape["batch"] * shape["n_edges"]
+        meta_edges = E
+    else:
+        N, E = shape["n_nodes"], shape["n_edges"]
+        meta_edges = E
+    # pad to dp multiples so row sharding is even
+    N = ((N + dp_n - 1) // dp_n) * dp_n
+    E = ((E + dp_n - 1) // dp_n) * dp_n
+
+    batch_struct = {
+        "nodes": jax.ShapeDtypeStruct((N, shape["d_feat"]), jnp.float32),
+        "src": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((E,), jnp.bool_),
+        "labels": jax.ShapeDtypeStruct((N,), jnp.int32),
+        "label_mask": jax.ShapeDtypeStruct((N,), jnp.bool_),
+        "node_mask": jax.ShapeDtypeStruct((N,), jnp.bool_),
+    }
+    if shape["kind"] == "train_graphs":
+        batch_struct["labels"] = jax.ShapeDtypeStruct((shape["batch"],), jnp.int32)
+        batch_struct["label_mask"] = jax.ShapeDtypeStruct((shape["batch"],), jnp.bool_)
+        batch_struct["graph_id"] = jax.ShapeDtypeStruct((N,), jnp.int32)
+    b_specs = shr.gin_batch_specs(mesh)
+    b_shard = {}
+    for k, v in batch_struct.items():
+        spc = b_specs.get(k, P(*([None] * v.ndim)))
+        if shape["kind"] == "train_graphs" and k in ("labels", "label_mask"):
+            spc = P(dp)
+        # replicate when the sharded dim doesn't divide the axes product
+        if spc and spc[0] is not None and v.shape[0] % dp_n != 0:
+            spc = P(*((None,) + tuple(spc)[1:]))
+        b_shard[k] = NamedSharding(mesh, spc)
+
+    opt_struct = jax.eval_shape(functools.partial(opt.init_state, OPT_CFG), params_struct)
+    o_shard = _opt_shardings(mesh, p_shard, opt_struct)
+
+    extra = {"n_graphs": shape.get("batch")} if shape["kind"] == "train_graphs" else {}
+
+    def step(params, opt_state, batch):
+        def loss(p):
+            return gnn_m.loss_fn(cfg, p, dict(batch, **extra))
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        new_p, new_o, om = opt.apply_updates(OPT_CFG, params, grads, opt_state)
+        return new_p, new_o, dict(metrics, loss=l, **om)
+
+    meta = {"params": cfg.param_count(), "n_nodes": N, "n_edges": meta_edges,
+            "d_feat": shape["d_feat"], "d_hidden": cfg.d_hidden,
+            "n_layers": cfg.n_layers}
+    return Cell(arch_id, shape_name, shape["kind"], step,
+                (params_struct, opt_struct, batch_struct),
+                (p_shard, o_shard, b_shard), (p_shard, o_shard, None),
+                donate=(0, 1), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(arch_id, shape_name, shape, mesh, smoke=False) -> Cell:
+    spec = get_arch(arch_id)
+    cfg = spec.make_smoke_config() if smoke else spec.make_config()
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(functools.partial(rec_m.init_params, cfg), key)
+    p_shard = _ns(mesh, shr.recsys_param_specs(cfg, mesh), params_struct)
+    dp = shr.dp_axis(mesh)
+    B = shape["batch"]
+    meta = {"params": cfg.param_count(), "batch": B, "model": cfg.model,
+            "embed_dim": cfg.embed_dim, "n_fields": cfg.n_fields}
+
+    def batch_structs(batch, retrieval=False):
+        d = {"ids": jax.ShapeDtypeStruct((batch, cfg.n_fields), jnp.int32),
+             "label": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+        if cfg.model in ("bst", "mind"):
+            d["hist"] = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+            d["target"] = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        if retrieval:
+            d["cand"] = jax.ShapeDtypeStruct((shape["n_candidates"],), jnp.int32)
+        return d
+
+    if shape["kind"] == "train":
+        opt_struct = jax.eval_shape(functools.partial(opt.init_state, OPT_CFG),
+                                    params_struct)
+        o_shard = _opt_shardings(mesh, p_shard, opt_struct)
+        bs = batch_structs(B)
+        b_shard = {k: NamedSharding(mesh, v) for k, v in
+                   shr.recsys_batch_specs(cfg, mesh).items() if k in bs}
+
+        def step(params, opt_state, batch):
+            def loss(p):
+                return rec_m.loss_fn(cfg, p, batch)
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            new_p, new_o, om = opt.apply_updates(OPT_CFG, params, grads, opt_state)
+            return new_p, new_o, dict(metrics, loss=l, **om)
+
+        return Cell(arch_id, shape_name, "train", step,
+                    (params_struct, opt_struct, bs),
+                    (p_shard, o_shard, b_shard), (p_shard, o_shard, None),
+                    donate=(0, 1), meta=meta)
+
+    if shape["kind"] == "serve":
+        bs = batch_structs(B)
+        bs.pop("label")
+        b_shard = {k: NamedSharding(mesh, v) for k, v in
+                   shr.recsys_batch_specs(cfg, mesh).items() if k in bs}
+
+        def step(params, batch):
+            return rec_m.serve_scores(cfg, params, batch)
+
+        return Cell(arch_id, shape_name, "serve", step,
+                    (params_struct, bs), (p_shard, b_shard), None, meta=meta)
+
+    # retrieval
+    bs = batch_structs(B, retrieval=True)
+    bs.pop("label")
+    specs = shr.recsys_batch_specs(cfg, mesh, retrieval=True)
+    b_shard = {k: NamedSharding(mesh, specs[k]) for k in bs}
+    meta["n_candidates"] = shape["n_candidates"]
+
+    def step(params, batch):
+        scores = rec_m.retrieval_scores(cfg, params, batch)
+        return jax.lax.top_k(scores, 128)
+
+    return Cell(arch_id, shape_name, "retrieval", step,
+                (params_struct, bs), (p_shard, b_shard), None, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# search cells
+# ---------------------------------------------------------------------------
+
+def _search_cell(arch_id, shape_name, shape, mesh, smoke=False) -> Cell:
+    spec = get_arch(arch_id)
+    base = spec.make_smoke_config() if smoke else spec.make_config()
+    cfg = dataclasses.replace(
+        base, queries=shape.get("queries", base.queries),
+        postings_pad=shape.get("postings_pad", base.postings_pad),
+        n_basic=shape.get("n_basic", base.n_basic),
+        n_expanded=shape.get("n_expanded", base.n_expanded),
+        n_stop=shape.get("n_stop", base.n_stop))
+    dp_n = _dp_size(mesh)
+    arenas = ss.arena_specs(cfg, dp_n)
+    queries = ss.query_table_specs(cfg)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    a_shard = {k: NamedSharding(mesh, P(dp)) for k in arenas}
+    q_shard = {k: NamedSharding(mesh, P()) for k in queries}
+    step = ss.make_search_serve_step(cfg, mesh)
+    meta = {"queries": cfg.queries, "groups": cfg.groups,
+            "postings_pad": cfg.postings_pad, "arena_per_shard": cfg.n_arena,
+            "n_shards": dp_n}
+    return Cell(arch_id, shape_name, "search_serve", step,
+                (arenas, queries), (a_shard, q_shard), None, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh, smoke: bool = False,
+               layout: str = "2d") -> Cell:
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    if spec.family == "lm":
+        return _lm_cell(arch_id, shape_name, shape, mesh, smoke, layout=layout)
+    if spec.family == "gnn":
+        return _gnn_cell(arch_id, shape_name, shape, mesh, smoke)
+    if spec.family == "recsys":
+        return _recsys_cell(arch_id, shape_name, shape, mesh, smoke)
+    if spec.family == "search":
+        return _search_cell(arch_id, shape_name, shape, mesh, smoke)
+    raise ValueError(spec.family)

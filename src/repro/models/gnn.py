@@ -1,0 +1,168 @@
+"""GIN (Graph Isomorphism Network, arXiv:1810.00826).
+
+Message passing is implemented with `jax.ops.segment_sum` over an explicit
+edge index (JAX has no CSR SpMM — the scatter IS the SpMM; see kernel
+taxonomy §GNN).  One forward serves all four assigned shapes:
+
+  * full-graph node classification (full_graph_sm / ogb_products),
+  * fanout-sampled minibatch training (minibatch_lg; sampler in
+    data/graph_data.py produces padded subgraphs),
+  * batched small molecule graphs with sum-pool readout (molecule).
+
+h' = MLP((1 + eps) * h + sum_{j in N(i)} h_j), eps learnable per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 40
+    graph_readout: bool = False     # molecule: sum-pool per graph
+    message_dtype: Any = None       # cast h for the gather/scatter step
+                                    # (bf16 halves the cross-shard volume)
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        mlp0 = self.d_feat * self.d_hidden + self.d_hidden
+        mlp = 2 * (self.d_hidden * self.d_hidden + self.d_hidden)
+        per = mlp + 1
+        return mlp0 + self.d_hidden * self.d_hidden + self.d_hidden + \
+            (self.n_layers - 1) * per + self.n_layers + \
+            self.d_hidden * self.n_classes + self.n_classes
+
+
+def init_params(cfg: GINConfig, key: jax.Array) -> dict:
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 2 + 4 * cfg.n_layers)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        layers.append({
+            "eps": jnp.zeros((), jnp.float32),
+            "w1": dense_init(ks[4 * i], (d_in, cfg.d_hidden), pd),
+            "b1": jnp.zeros((cfg.d_hidden,), pd),
+            "w2": dense_init(ks[4 * i + 1], (cfg.d_hidden, cfg.d_hidden), pd),
+            "b2": jnp.zeros((cfg.d_hidden,), pd),
+        })
+        d_in = cfg.d_hidden
+    return {
+        "layers": layers,
+        "head_w": dense_init(ks[-2], (cfg.d_hidden, cfg.n_classes), pd),
+        "head_b": jnp.zeros((cfg.n_classes,), pd),
+    }
+
+
+def forward(cfg: GINConfig, params: dict, batch: dict) -> jax.Array:
+    """batch: nodes [N, F], src [E], dst [E], edge_mask [E] bool,
+    optional graph_id [N] (readout), node_mask [N] bool.
+
+    Returns logits: [N, C] (node) or [G, C] (graph readout)."""
+    dt = cfg.dtype
+    h = batch["nodes"].astype(dt)
+    src = batch["src"]
+    dst = batch["dst"]
+    emask = batch["edge_mask"]
+    N = h.shape[0]
+    for p in params["layers"]:
+        if cfg.message_dtype:
+            # barriers pin the casts AROUND the cross-shard gather/scatter,
+            # so both collectives move bf16, not f32 (XLA hoists otherwise)
+            hm = jax.lax.optimization_barrier(h.astype(cfg.message_dtype))
+            msg = jax.ops.segment_sum(hm[src] * emask.astype(hm.dtype)[:, None],
+                                      dst, num_segments=N)
+            msg = jax.lax.optimization_barrier(msg).astype(dt)
+        else:
+            msg = jax.ops.segment_sum(h[src] * emask.astype(dt)[:, None],
+                                      dst, num_segments=N)
+        z = (1.0 + p["eps"]).astype(dt) * h + msg
+        z = jnp.einsum("nd,dh->nh", z, p["w1"].astype(dt)) + p["b1"].astype(dt)
+        z = jax.nn.relu(z)
+        z = jnp.einsum("nh,hk->nk", z, p["w2"].astype(dt)) + p["b2"].astype(dt)
+        h = jax.nn.relu(z)
+    if cfg.graph_readout:
+        G = int(batch["n_graphs"])
+        pooled = jax.ops.segment_sum(h * batch["node_mask"].astype(dt)[:, None],
+                                     batch["graph_id"], num_segments=G)
+        h = pooled
+    logits = jnp.einsum("nd,dc->nc", h, params["head_w"].astype(dt)) + \
+        params["head_b"].astype(dt)
+    return logits.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# halo-exchange variant (explicit shard_map; §Perf hillclimb for ogb_products)
+# ---------------------------------------------------------------------------
+#
+# Locality-aware partition: nodes are split into contiguous shards (cluster-
+# sorted, so most edges are intra-shard); each layer exchanges ONLY the
+# boundary rows other shards reference, in bf16, via one all_gather of
+# [n_shards, B, d] — instead of SPMD's full [N, d] f32 gather + scatter
+# all-reduce.  Edge sources index [local || boundary-table].
+
+def halo_layer(h, p, src_local, dst, emask, send_idx, axis_name, dt, msg_dt):
+    """h: [Nl, d]; send_idx: [B] local rows contributed to the exchange."""
+    sends = (h * 1.0).astype(msg_dt)[jnp.maximum(send_idx, 0)]
+    sends = sends * (send_idx >= 0).astype(msg_dt)[:, None]
+    bnd = jax.lax.all_gather(sends, axis_name)              # [S, B, d] bf16
+    table = jnp.concatenate([h.astype(msg_dt),
+                             bnd.reshape(-1, h.shape[1])], axis=0)
+    msg = jax.ops.segment_sum(table[src_local] * emask.astype(msg_dt)[:, None],
+                              dst, num_segments=h.shape[0]).astype(dt)
+    z = (1.0 + p["eps"]).astype(dt) * h + msg
+    z = jnp.einsum("nd,dh->nh", z, p["w1"].astype(dt)) + p["b1"].astype(dt)
+    z = jax.nn.relu(z)
+    z = jnp.einsum("nh,hk->nk", z, p["w2"].astype(dt)) + p["b2"].astype(dt)
+    return jax.nn.relu(z)
+
+
+def halo_loss_fn(cfg: GINConfig, params: dict, shard: dict,
+                 axis_name="data") -> tuple[jax.Array, dict]:
+    """Per-shard loss inside shard_map.  shard arrays carry a leading
+    singleton (the split shard dim): nodes [1, Nl, F], src/dst [1, El],
+    send_idx [1, B], labels/label_mask [1, Nl]."""
+    dt = cfg.dtype
+    msg_dt = cfg.message_dtype or dt
+    h = shard["nodes"][0].astype(dt)
+    for p in params["layers"]:
+        h = halo_layer(h, p, shard["src"][0], shard["dst"][0],
+                       shard["edge_mask"][0], shard["send_idx"][0],
+                       axis_name, dt, msg_dt)
+    logits = jnp.einsum("nd,dc->nc", h, params["head_w"].astype(dt)) \
+        + params["head_b"].astype(dt)
+    labels = shard["labels"][0]
+    mask = shard["label_mask"][0].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               jnp.maximum(labels, 0)[:, None], axis=1)[:, 0]
+    nll = ((logz - gold) * mask).sum()
+    denom = jnp.maximum(jax.lax.psum(mask.sum(), axis_name), 1.0)
+    loss = jax.lax.psum(nll, axis_name) / denom
+    acc = jax.lax.psum(((logits.argmax(-1) == labels) * mask).sum(),
+                       axis_name) / denom
+    return loss, {"acc": acc}
+
+
+def loss_fn(cfg: GINConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    """labels: [N] or [G]; label_mask selects supervised nodes (e.g. seeds)."""
+    logits = forward(cfg, params, batch)
+    labels = batch["labels"]
+    mask = batch["label_mask"].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None], axis=1)[:, 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+    acc = (((logits.argmax(-1) == labels) * mask).sum() / jnp.maximum(mask.sum(), 1))
+    return loss, {"acc": acc}

@@ -1,0 +1,172 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full + chunked
+online-softmax for long context), SwiGLU MLP, decode-step attention.
+
+Dtype policy: parameters live in `param_dtype` (fp32 for training), all
+matmul compute runs in `dtype` (bf16 on TPU) with fp32 softmax/normalizer
+accumulators (`preferred_element_type`).  Everything takes explicit dtypes —
+the package enables x64 globally, so nothing may rely on dtype defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim // 2] inverse frequencies (fp32)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S] (int32)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                              # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * inv    # [..., S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : D // 2], x[..., D // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B, S, Hkv, D] -> [B, S, Hkv * groups, D] (head index = h * G + g)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     chunk_q: int = 0, chunk_kv: int = 1024,
+                     scores_pspec=None) -> jax.Array:
+    """Causal GQA attention.  q: [B, S, Hq, D]; k, v: [B, S, Hkv, D].
+
+    chunk_q == 0: full S x S score materialization (short sequences).
+    chunk_q > 0:  memory-bounded online-softmax over kv chunks per q chunk
+    (pure-JAX flash structure; peak activation [B, H, chunk_q, chunk_kv]).
+    Causality is exploited structurally: q chunk i only visits kv chunks
+    <= i (a Python loop over static slices, so compiled FLOPs ~= S^2 / 2).
+
+    scores_pspec (a Sharding or None) pins the [B, H, Sq, Skv] score/prob
+    tensors; with_sharding_constraint transposes to itself, so this also
+    pins the softmax *backward* (SPMD otherwise picks inconsistent layouts
+    under remat and replicates activations at the boundaries).
+    """
+    B, S, Hq, D = q.shape
+    G = Hq // k.shape[2]
+    k, v = _repeat_kv(k, G), _repeat_kv(v, G)
+    scale = 1.0 / (D ** 0.5)
+
+    def pin(x):
+        if scores_pspec is not None:
+            return jax.lax.with_sharding_constraint(x, scores_pspec)
+        return x
+
+    if chunk_q == 0 or S <= chunk_q:
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.tril(jnp.ones((S, S), dtype=jnp.bool_))
+        logits = pin(jnp.where(mask[None, None], logits, -1e30))
+        probs = pin(jax.nn.softmax(logits, axis=-1)).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                          preferred_element_type=jnp.float32).astype(q.dtype)
+
+    assert S % chunk_q == 0 and S % chunk_kv == 0, (S, chunk_q, chunk_kv)
+    nq = S // chunk_q
+    out_chunks = []
+    for i in range(nq):
+        qi = q[:, i * chunk_q : (i + 1) * chunk_q]          # [B, cq, H, D]
+        q_pos = i * chunk_q + jnp.arange(chunk_q)
+        kv_hi = (i + 1) * chunk_q                           # causal horizon
+        kv_hi = ((kv_hi + chunk_kv - 1) // chunk_kv) * chunk_kv
+        m = jnp.full((B, Hq, chunk_q, 1), -1e30, jnp.float32)
+        l = jnp.zeros((B, Hq, chunk_q, 1), jnp.float32)
+        acc = jnp.zeros((B, Hq, chunk_q, D), jnp.float32)
+
+        def kv_step(carry, idx):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, idx * chunk_kv, chunk_kv, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, idx * chunk_kv, chunk_kv, axis=1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = idx * chunk_kv + jnp.arange(chunk_kv)
+            causal = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(causal[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new)
+            l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m, l, acc),
+                                      jnp.arange(kv_hi // chunk_kv))
+        oi = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)  # [B, H, cq, D]
+        out_chunks.append(oi.transpose(0, 2, 1, 3))
+    return jnp.concatenate(out_chunks, axis=1)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, impl: str = "xla") -> jax.Array:
+    """One-token decode.  q: [B, Hq, D]; caches: [B, Smax, Hkv, D];
+    kv_len: [B] valid lengths.  impl: 'xla' | 'flash' (Pallas interpret)."""
+    if impl == "flash":
+        from repro.kernels import ops
+        return ops.flash_decode(q, k_cache, v_cache, kv_len)
+    from repro.kernels import ref
+    return ref.flash_decode_ref(q, k_cache, v_cache, kv_len)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, dtype) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_gate.astype(dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(h) * u, w_down.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnChunking:
+    """Chunking policy: full attention below the threshold, chunked above."""
+    threshold: int = 8192
+    chunk_q: int = 1024
+    chunk_kv: int = 1024
+
+    def for_seq(self, s: int) -> tuple[int, int]:
+        if s <= self.threshold:
+            return (0, 0)
+        return (self.chunk_q, self.chunk_kv)

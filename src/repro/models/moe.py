@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is the argsort permutation form (tokens sorted by expert, padded to
+a static per-expert capacity, overflow dropped), applied **per group**: at
+scale the token batch is reshaped to [G, T/G] with G = the data-parallel
+shard count (GShard grouping), so routing sorts are group-local (no global
+argsort) and the expert buffers [G, E, C, D] shard as G x dp, E x model —
+the gather/scatter between them lowers to the expected all-to-all pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    normalize_gates: bool = True
+    n_groups: int = 1             # routing groups (= dp shards at scale)
+    group_pspec: Any = None       # NamedSharding for [G, Tg, D] token blocks
+    expert_pspec: Any = None      # NamedSharding for [G, E, C, D] buffers
+
+
+def router_aux_loss(probs: jax.Array, expert_idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balancing loss: E * sum_e f_e * P_e."""
+    counts = jnp.zeros((n_experts,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(expert_idx.size, 1)
+    mean_prob = probs.reshape(-1, n_experts).mean(axis=0)
+    return n_experts * jnp.sum(frac * mean_prob)
+
+
+def _dispatch_group(x: jax.Array, gate_idx: jax.Array, C: int, E: int, K: int):
+    """x: [Tg, D]; gate_idx: [Tg, K] -> (slot [Tg*K], keep [Tg*K], token [Tg*K])."""
+    Tg = x.shape[0]
+    flat_e = gate_idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    run_starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank = jnp.arange(Tg * K) - run_starts[sorted_e]
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)      # E*C = trash row
+    token = order // K
+    return slot, keep, token, order
+
+
+def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, cfg: MoEConfig, dtype) -> tuple[jax.Array, jax.Array]:
+    """x: [..., D] tokens (e.g. [B, S, D] — groups split the LEADING dim so
+    dp-sharded batches reshape to [G, Tg, D] without crossing mesh axes);
+    router_w: [D, E]; w_*: [E, D, Fe] / [E, Fe, D].
+
+    Returns (y with x's shape, aux_loss scalar fp32).
+    """
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    T = 1
+    for d in lead:
+        T *= d
+    E, K = cfg.n_experts, cfg.top_k
+    G = cfg.n_groups
+    if G > 1 and (lead[0] % G != 0):
+        G = 1                        # groups must split the leading dim
+    Tg = T // G
+    C = int((Tg * K / E) * cfg.capacity_factor) + 1
+
+    xg = x.reshape(G, Tg, D)
+    if cfg.group_pspec is not None:
+        xg = jax.lax.with_sharding_constraint(xg, cfg.group_pspec)
+
+    # router in compute dtype with fp32 accumulation (no fp32 token copy)
+    logits = jnp.einsum("gtd,de->gte", xg, router_w.astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [G, Tg, E] fp32
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # [G, Tg, K]
+    if cfg.normalize_gates:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    aux = router_aux_loss(probs, gate_idx, E) * cfg.aux_loss_weight
+
+    slot, keep, token, order = jax.vmap(
+        lambda xx, gi: _dispatch_group(xx, gi, C, E, K))(xg, gate_idx)
+
+    def scatter_group(xx, sl, tok):
+        return jnp.zeros((E * C + 1, D), dtype).at[sl].set(xx[tok])[: E * C]
+
+    xe = jax.vmap(scatter_group)(xg, slot, token).reshape(G, E, C, D)
+    if cfg.expert_pspec is not None:
+        xe = jax.lax.with_sharding_constraint(xe, cfg.expert_pspec)
+
+    # ---- expert computation (SwiGLU), experts sharded over `model` --------
+    h = jnp.einsum("gecd,edf->gecf", xe, w_gate.astype(dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, w_up.astype(dtype))
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u, w_down.astype(dtype))
+    if cfg.expert_pspec is not None:
+        ye = jax.lax.with_sharding_constraint(ye, cfg.expert_pspec)
+
+    # ---- combine -----------------------------------------------------------
+    def combine_group(ye_g, sl, kp, tok, gv, od):
+        flat = ye_g.reshape(E * C, D)
+        gathered = flat[jnp.minimum(sl, E * C - 1)] * kp[:, None].astype(dtype)
+        gs = gv.reshape(-1)[od].astype(dtype)
+        return jnp.zeros((Tg, D), dtype).at[tok].add(gathered * gs[:, None])
+
+    yg = jax.vmap(combine_group)(ye, slot, keep, token, gate_vals, order)
+    if cfg.group_pspec is not None:
+        yg = jax.lax.with_sharding_constraint(yg, cfg.group_pspec)
+    return yg.reshape(x.shape), aux

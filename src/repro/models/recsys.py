@@ -1,0 +1,321 @@
+"""RecSys architectures over a shared sparse-embedding substrate.
+
+fm      — Factorization Machine (Rendle ICDM'10): O(nk) sum-square trick.
+autoint — self-attention over field embeddings (arXiv:1810.11921).
+bst     — Behavior Sequence Transformer (arXiv:1905.06874).
+mind    — Multi-Interest Network with Dynamic (capsule) Routing
+          (arXiv:1904.08030): B2I routing -> K interest capsules,
+          label-aware attention for training, max-dot for retrieval.
+
+Substrate: all categorical fields share ONE concatenated embedding table
+([total_rows, dim], row-sharded over the `model` mesh axis at scale) with
+per-field row offsets — the huge-table layout the kernel taxonomy calls out.
+Lookups are `jnp.take`; bag-reductions go through kernels.segment_bag (or
+its jnp oracle, selectable) since JAX has no native EmbeddingBag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    model: str                       # fm | autoint | bst | mind
+    field_vocabs: tuple              # rows per categorical field
+    embed_dim: int
+    # autoint
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    # bst
+    seq_len: int = 20
+    n_blocks: int = 1
+    bst_heads: int = 8
+    mlp_dims: tuple = (1024, 512, 256)
+    # mind
+    n_interests: int = 4
+    capsule_iters: int = 3
+    item_vocab: int = 1_000_000      # bst/mind behavior item vocabulary
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.field_vocabs)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.field_vocabs))
+
+    @property
+    def table_rows(self) -> int:
+        """Rows padded to 256 so the table row-shards on any mesh axis."""
+        return ((self.total_rows + 255) // 256) * 256
+
+    def field_offsets(self) -> jnp.ndarray:
+        import numpy as np
+        off = np.zeros(self.n_fields, dtype=np.int64)
+        off[1:] = np.cumsum(self.field_vocabs)[:-1]
+        return jnp.asarray(off)
+
+    def param_count(self) -> int:
+        n = self.total_rows * self.embed_dim
+        if self.model == "fm":
+            n += self.total_rows + 1
+        if self.model in ("bst", "mind"):
+            n += self.item_vocab * self.embed_dim
+        return n
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: RecSysConfig, key: jax.Array) -> dict:
+    pd = cfg.param_dtype
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 24)
+    p: dict = {"table": dense_init(ks[0], (cfg.table_rows, d), pd, scale=0.01)}
+    if cfg.model == "fm":
+        p["w_lin"] = dense_init(ks[1], (cfg.table_rows, 1), pd, scale=0.01)
+        p["b"] = jnp.zeros((), pd)
+    elif cfg.model == "autoint":
+        lys = []
+        d_in = d
+        for i in range(cfg.n_attn_layers):
+            lys.append({
+                "wq": dense_init(ks[2 + i], (d_in, cfg.n_heads * cfg.d_attn), pd),
+                "wk": dense_init(ks[5 + i], (d_in, cfg.n_heads * cfg.d_attn), pd),
+                "wv": dense_init(ks[8 + i], (d_in, cfg.n_heads * cfg.d_attn), pd),
+                "wres": dense_init(ks[11 + i], (d_in, cfg.n_heads * cfg.d_attn), pd),
+            })
+            d_in = cfg.n_heads * cfg.d_attn
+        p["attn"] = lys
+        p["head_w"] = dense_init(ks[15], (cfg.n_fields * d_in, 1), pd)
+        p["head_b"] = jnp.zeros((), pd)
+    elif cfg.model == "bst":
+        p["item_table"] = dense_init(ks[1], (cfg.item_vocab, d), pd, scale=0.01)
+        p["pos_embed"] = dense_init(ks[2], (cfg.seq_len + 1, d), pd, scale=0.01)
+        blocks = []
+        for i in range(cfg.n_blocks):
+            blocks.append({
+                "wq": dense_init(ks[3 + i], (d, d), pd),
+                "wk": dense_init(ks[5 + i], (d, d), pd),
+                "wv": dense_init(ks[7 + i], (d, d), pd),
+                "wo": dense_init(ks[9 + i], (d, d), pd),
+                "ln1": jnp.ones((d,), pd),
+                "ln2": jnp.ones((d,), pd),
+                "ff1": dense_init(ks[11 + i], (d, 4 * d), pd),
+                "ff2": dense_init(ks[13 + i], (4 * d, d), pd),
+            })
+        p["blocks"] = blocks
+        mlp_in = (cfg.seq_len + 1) * d + cfg.n_fields * d
+        dims, mlp = (mlp_in,) + cfg.mlp_dims, []
+        for i in range(len(cfg.mlp_dims)):
+            mlp.append({"w": dense_init(ks[15 + i], (dims[i], dims[i + 1]), pd),
+                        "b": jnp.zeros((dims[i + 1],), pd)})
+        p["mlp"] = mlp
+        p["head_w"] = dense_init(ks[20], (cfg.mlp_dims[-1], 1), pd)
+        p["head_b"] = jnp.zeros((), pd)
+    elif cfg.model == "mind":
+        p["item_table"] = dense_init(ks[1], (cfg.item_vocab, d), pd, scale=0.01)
+        p["s_matrix"] = dense_init(ks[2], (d, d), pd)     # B2I shared bilinear map
+        p["out_w"] = dense_init(ks[3], (d, d), pd)        # interest transform
+    else:
+        raise ValueError(cfg.model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared substrate
+# ---------------------------------------------------------------------------
+
+def field_embed(cfg: RecSysConfig, table: jax.Array, ids: jax.Array) -> jax.Array:
+    """ids: [B, F] per-field local ids -> [B, F, d] (one big row-sharded table)."""
+    rows = ids.astype(jnp.int64) + cfg.field_offsets()[None, :]
+    return jnp.take(table, rows, axis=0)
+
+
+def _ln(x, scale):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+# ---------------------------------------------------------------------------
+# model forwards: logits for CTR models, (interests, item_emb) for mind
+# ---------------------------------------------------------------------------
+
+def fm_forward(cfg: RecSysConfig, p: dict, ids: jax.Array) -> jax.Array:
+    dt = cfg.dtype
+    rows = ids.astype(jnp.int64) + cfg.field_offsets()[None, :]
+    v = jnp.take(p["table"], rows, axis=0).astype(dt)          # [B, F, d]
+    lin = jnp.take(p["w_lin"], rows, axis=0)[..., 0].astype(dt).sum(-1)
+    s = v.sum(axis=1)                                          # [B, d]
+    pair = 0.5 * (s * s - (v * v).sum(axis=1)).sum(-1)         # sum-square trick
+    return (p["b"].astype(dt) + lin + pair).astype(jnp.float32)
+
+
+def autoint_forward(cfg: RecSysConfig, p: dict, ids: jax.Array) -> jax.Array:
+    dt = cfg.dtype
+    x = field_embed(cfg, p["table"], ids).astype(dt)           # [B, F, d]
+    B, F, _ = x.shape
+    H, da = cfg.n_heads, cfg.d_attn
+    for lp in p["attn"]:
+        q = jnp.einsum("bfd,dh->bfh", x, lp["wq"].astype(dt)).reshape(B, F, H, da)
+        k = jnp.einsum("bfd,dh->bfh", x, lp["wk"].astype(dt)).reshape(B, F, H, da)
+        v = jnp.einsum("bfd,dh->bfh", x, lp["wv"].astype(dt)).reshape(B, F, H, da)
+        a = jax.nn.softmax(jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                                      preferred_element_type=jnp.float32), axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a.astype(dt), v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + jnp.einsum("bfd,dh->bfh", x, lp["wres"].astype(dt)))
+    flat = x.reshape(B, -1)
+    return (jnp.einsum("bf,fo->bo", flat, p["head_w"].astype(dt))[:, 0]
+            + p["head_b"].astype(dt)).astype(jnp.float32)
+
+
+def bst_forward(cfg: RecSysConfig, p: dict, ids: jax.Array, hist: jax.Array,
+                target: jax.Array) -> jax.Array:
+    """ids: [B, F] profile fields; hist: [B, S] item ids (-1 pad); target: [B]."""
+    dt = cfg.dtype
+    d = cfg.embed_dim
+    B, S = hist.shape
+    seq_ids = jnp.concatenate([hist, target[:, None]], axis=1)      # [B, S+1]
+    valid = seq_ids >= 0
+    seq = jnp.take(p["item_table"], jnp.maximum(seq_ids, 0), axis=0).astype(dt)
+    seq = seq * valid[..., None].astype(dt) + p["pos_embed"].astype(dt)[None]
+    for bp in p["blocks"]:
+        h = _ln(seq, bp["ln1"].astype(dt))
+        q = jnp.einsum("bsd,de->bse", h, bp["wq"].astype(dt))
+        k = jnp.einsum("bsd,de->bse", h, bp["wk"].astype(dt))
+        v = jnp.einsum("bsd,de->bse", h, bp["wv"].astype(dt))
+        hd = d // cfg.bst_heads
+        q = q.reshape(B, S + 1, cfg.bst_heads, hd)
+        k = k.reshape(B, S + 1, cfg.bst_heads, hd)
+        v = v.reshape(B, S + 1, cfg.bst_heads, hd)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=jnp.float32) / (hd ** 0.5)
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        a = jax.nn.softmax(logits, axis=-1).astype(dt)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S + 1, d)
+        seq = seq + jnp.einsum("bsd,de->bse", o, bp["wo"].astype(dt))
+        h = _ln(seq, bp["ln2"].astype(dt))
+        seq = seq + jnp.einsum("bse,ef->bsf",
+                               jax.nn.relu(jnp.einsum("bsd,de->bse", h, bp["ff1"].astype(dt))),
+                               bp["ff2"].astype(dt))
+    other = field_embed(cfg, p["table"], ids).astype(dt).reshape(B, -1)
+    x = jnp.concatenate([seq.reshape(B, -1), other], axis=-1)
+    for m in p["mlp"]:
+        x = jax.nn.leaky_relu(jnp.einsum("bi,io->bo", x, m["w"].astype(dt))
+                              + m["b"].astype(dt))
+    return (jnp.einsum("bi,io->bo", x, p["head_w"].astype(dt))[:, 0]
+            + p["head_b"].astype(dt)).astype(jnp.float32)
+
+
+def mind_interests(cfg: RecSysConfig, p: dict, hist: jax.Array) -> jax.Array:
+    """Dynamic (B2I) capsule routing: hist [B, S] -> interests [B, K, d]."""
+    dt = cfg.dtype
+    B, S = hist.shape
+    K = cfg.n_interests
+    valid = (hist >= 0)
+    e = jnp.take(p["item_table"], jnp.maximum(hist, 0), axis=0).astype(dt)
+    e = e * valid[..., None].astype(dt)
+    u = jnp.einsum("bsd,de->bse", e, p["s_matrix"].astype(dt))      # behavior caps
+    # routing logits b_ks: fixed random init (paper) -> here zeros + iterate
+    blog = jnp.zeros((B, K, S), jnp.float32)
+    interests = jnp.zeros((B, K, cfg.embed_dim), dt)
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(jnp.where(valid[:, None, :], blog, -1e30), axis=1)
+        z = jnp.einsum("bks,bsd->bkd", w.astype(dt), u)             # [B, K, d]
+        # squash
+        n2 = jnp.sum(jnp.square(z.astype(jnp.float32)), -1, keepdims=True)
+        interests = (z * (n2 / (1 + n2) / jnp.sqrt(n2 + 1e-9)).astype(dt))
+        blog = blog + jnp.einsum("bkd,bsd->bks", interests,
+                                 u, preferred_element_type=jnp.float32)
+    return jnp.einsum("bkd,de->bke", interests, p["out_w"].astype(dt))
+
+
+def mind_train_logits(cfg: RecSysConfig, p: dict, hist: jax.Array,
+                      target: jax.Array) -> jax.Array:
+    """Label-aware attention + in-batch sampled softmax logits [B, B]."""
+    dt = cfg.dtype
+    interests = mind_interests(cfg, p, hist)                        # [B, K, d]
+    tgt = jnp.take(p["item_table"], jnp.maximum(target, 0), axis=0).astype(dt)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", interests, tgt,
+                   preferred_element_type=jnp.float32) * 2.0, axis=-1)  # pow~2
+    user = jnp.einsum("bk,bkd->bd", att.astype(dt), interests)      # [B, d]
+    return jnp.einsum("bd,cd->bc", user, tgt, preferred_element_type=jnp.float32)
+
+
+def mind_retrieval_scores(cfg: RecSysConfig, p: dict, hist: jax.Array,
+                          cand: jax.Array) -> jax.Array:
+    """hist [B, S]; cand [C] -> scores [B, C] = max over interests."""
+    interests = mind_interests(cfg, p, hist)
+    ce = jnp.take(p["item_table"], cand, axis=0).astype(cfg.dtype)
+    s = jnp.einsum("bkd,cd->bkc", interests, ce, preferred_element_type=jnp.float32)
+    return s.max(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# unified train loss / serve / retrieval
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: RecSysConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    if cfg.model == "mind":
+        logits = mind_train_logits(cfg, params, batch["hist"], batch["target"])
+        B = logits.shape[0]
+        labels = jnp.arange(B)
+        nll = jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(
+            logits, labels[:, None], axis=1)[:, 0]
+        loss = nll.mean()
+        acc = (logits.argmax(-1) == labels).mean()
+        return loss, {"acc": acc}
+    logit = serve_scores(cfg, params, batch)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss, {"auc_proxy": jnp.corrcoef(jax.nn.sigmoid(logit), y)[0, 1]}
+
+
+def serve_scores(cfg: RecSysConfig, params: dict, batch: dict) -> jax.Array:
+    if cfg.model == "fm":
+        return fm_forward(cfg, params, batch["ids"])
+    if cfg.model == "autoint":
+        return autoint_forward(cfg, params, batch["ids"])
+    if cfg.model == "bst":
+        return bst_forward(cfg, params, batch["ids"], batch["hist"], batch["target"])
+    if cfg.model == "mind":
+        return mind_train_logits(cfg, params, batch["hist"], batch["target"]).diagonal()
+    raise ValueError(cfg.model)
+
+
+def retrieval_scores(cfg: RecSysConfig, params: dict, batch: dict) -> jax.Array:
+    """Score n_candidates items for one (or few) users -> [B, C] fp32."""
+    cand = batch["cand"]                                   # [C]
+    if cfg.model == "mind":
+        return mind_retrieval_scores(cfg, params, batch["hist"], cand)
+    C = cand.shape[0]
+    if cfg.model in ("fm", "autoint"):
+        # vary the last categorical field over the candidates
+        ids = batch["ids"]                                 # [B, F]
+        B = ids.shape[0]
+        idsC = jnp.broadcast_to(ids[:, None, :], (B, C, ids.shape[1]))
+        idsC = idsC.at[:, :, -1].set(cand[None, :] % cfg.field_vocabs[-1])
+        flat = idsC.reshape(B * C, -1)
+        f = fm_forward if cfg.model == "fm" else autoint_forward
+        return f(cfg, params, flat).reshape(B, C)
+    if cfg.model == "bst":
+        ids, hist = batch["ids"], batch["hist"]
+        B = ids.shape[0]
+        idsC = jnp.broadcast_to(ids[:, None, :], (B, C, ids.shape[1])).reshape(B * C, -1)
+        histC = jnp.broadcast_to(hist[:, None, :], (B, C, hist.shape[1])).reshape(B * C, -1)
+        tgtC = jnp.broadcast_to(cand[None, :], (B, C)).reshape(B * C)
+        return bst_forward(cfg, params, idsC, histC, tgtC).reshape(B, C)
+    raise ValueError(cfg.model)

@@ -1,0 +1,287 @@
+"""Decoder-only LM (dense GQA or MoE) — granite / qwen / llama / moonshot.
+
+Layers are weight-stacked and scanned (compile time and HLO size stay flat in
+depth); per-layer remat is the default activation-checkpoint policy.  All
+math takes explicit dtypes: params in `param_dtype`, matmuls in `dtype`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False                  # qwen2.5
+    rope_theta: float = 500_000.0
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    attn_chunk: L.AttnChunking = L.AttnChunking()
+    act_pspec: Any = None        # with_sharding_constraint on the residual
+                                 # stream [B, S, D] (set by the launcher)
+    q_pspec: Any = None          # [B, S, Hq, hd] layout inside attention
+    kv_pspec: Any = None         # [B, S, Hkv, hd] layout inside attention
+    attn_pspec: Any = None       # [B, H, Sq, Skv] score/prob pin (fwd + bwd)
+    pre_cast_layers: bool = False  # cast stacked weights to compute dtype
+                                   # once OUTSIDE the scan (behind an
+                                   # optimization barrier, or XLA sinks the
+                                   # convert back into the loop): FSDP
+                                   # all-gathers then move bf16, not f32
+    bf16_grads: bool = False       # bf16 logits => the backward's activation
+                                   # grads (and their TP collectives) run
+                                   # bf16; softmax math stays f32 (§Perf)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding rows padded to 256 so vocab shards evenly on any mesh
+        axis (padding logits are masked out of the loss)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND roofline bookkeeping)."""
+        D, Hq, Hkv, hd = self.d_model, self.n_heads, self.n_kv_heads, self.hd
+        attn = D * (Hq + 2 * Hkv) * hd + Hq * hd * D
+        if self.qkv_bias:
+            attn += (Hq + 2 * Hkv) * hd
+        if self.moe:
+            ff = D * self.moe.n_experts + 3 * self.moe.n_experts * D * self.moe.d_expert
+        else:
+            ff = 3 * D * self.d_ff
+        per_layer = attn + ff + 2 * D
+        emb = self.vocab * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + D
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.param_count()
+        D = self.d_model
+        dense = self.param_count()
+        ff_all = 3 * self.moe.n_experts * D * self.moe.d_expert
+        ff_act = 3 * self.moe.top_k * D * self.moe.d_expert
+        return dense - self.n_layers * (ff_all - ff_act)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    Lx = cfg.n_layers
+    ks = jax.random.split(key, 12)
+    pd = cfg.param_dtype
+    init = L.dense_init
+
+    lp = {
+        "ln1": jnp.ones((Lx, D), pd),
+        "ln2": jnp.ones((Lx, D), pd),
+        "wq": init(ks[0], (Lx, D, Hq * hd), pd),
+        "wk": init(ks[1], (Lx, D, Hkv * hd), pd),
+        "wv": init(ks[2], (Lx, D, Hkv * hd), pd),
+        "wo": init(ks[3], (Lx, Hq * hd, D), pd, scale=(Hq * hd) ** -0.5 / (2 * Lx) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        lp["bq"] = jnp.zeros((Lx, Hq * hd), pd)
+        lp["bk"] = jnp.zeros((Lx, Hkv * hd), pd)
+        lp["bv"] = jnp.zeros((Lx, Hkv * hd), pd)
+    if cfg.moe:
+        E, Fe = cfg.moe.n_experts, cfg.moe.d_expert
+        lp["router"] = init(ks[4], (Lx, D, E), jnp.float32)
+        lp["wg"] = init(ks[5], (Lx, E, D, Fe), pd)
+        lp["wu"] = init(ks[6], (Lx, E, D, Fe), pd)
+        lp["wd"] = init(ks[7], (Lx, E, Fe, D), pd, scale=Fe ** -0.5 / (2 * Lx) ** 0.5)
+    else:
+        F = cfg.d_ff
+        lp["wg"] = init(ks[5], (Lx, D, F), pd)
+        lp["wu"] = init(ks[6], (Lx, D, F), pd)
+        lp["wd"] = init(ks[7], (Lx, F, D), pd, scale=F ** -0.5 / (2 * Lx) ** 0.5)
+
+    params = {
+        "embed": init(ks[8], (cfg.vocab_padded, D), pd, scale=1.0),
+        "layers": lp,
+        "final_norm": jnp.ones((D,), pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init(ks[9], (D, cfg.vocab_padded), pd)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: TransformerConfig, x: jax.Array, p: dict,
+               positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One decoder layer.  x: [B, S, D] in cfg.dtype."""
+    B, S, D = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+
+    h = L.rms_norm(x, p["ln1"])
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if cfg.q_pspec is not None:
+        q = jax.lax.with_sharding_constraint(q, cfg.q_pspec)
+    if cfg.kv_pspec is not None:
+        # chunked attention: materialize K/V once per layer (one gather)
+        # instead of re-gathering per kv-chunk inside the scan
+        k = jax.lax.with_sharding_constraint(k, cfg.kv_pspec)
+        v = jax.lax.with_sharding_constraint(v, cfg.kv_pspec)
+
+    cq, ckv = cfg.attn_chunk.for_seq(S)
+    o = L.causal_attention(q, k, v, chunk_q=cq, chunk_kv=ckv,
+                           scores_pspec=cfg.attn_pspec)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, Hq * hd), p["wo"].astype(dt))
+    x = x + o
+    if cfg.act_pspec is not None:
+        x = jax.lax.with_sharding_constraint(x, cfg.act_pspec)
+
+    h = L.rms_norm(x, p["ln2"])
+    if cfg.moe:
+        y, aux = moe_ffn(h, p["router"], p["wg"], p["wu"],
+                         p["wd"], cfg.moe, dt)
+    else:
+        y = L.swiglu(h, p["wg"], p["wu"], p["wd"], dt)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + y
+    if cfg.act_pspec is not None:
+        # bound the scanned residual carry (Megatron-SP style sequence shard)
+        x = jax.lax.with_sharding_constraint(x, cfg.act_pspec)
+    return x, aux
+
+
+def forward(cfg: TransformerConfig, params: dict, tokens: jax.Array,
+            positions: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """tokens: [B, S] int32 -> (logits [B, S, V] fp32, aux_loss scalar)."""
+    B, S = tokens.shape
+    dt = cfg.dtype
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.act_pspec is not None:
+        x = jax.lax.with_sharding_constraint(x, cfg.act_pspec)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, p):
+        y, aux = _layer_fwd(cfg, x, p, positions)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    layers = params["layers"]
+    if cfg.pre_cast_layers:
+        layers = jax.tree_util.tree_map(
+            lambda w: w.astype(dt) if w.dtype == jnp.float32 else w, layers)
+        layers = jax.lax.optimization_barrier(layers)
+    x, auxs = jax.lax.scan(body, x, layers)
+    x = L.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=dt if cfg.bf16_grads
+                        else jnp.float32)
+    return logits, auxs.sum()
+
+
+def loss_fn(cfg: TransformerConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    """batch: tokens [B, S] int32, labels [B, S] int32 (-100 = ignore)."""
+    logits, aux = forward(cfg, params, batch["tokens"])
+    logits = logits.astype(jnp.float32)  # softmax math always fp32
+    if cfg.vocab_padded != cfg.vocab:   # mask padding rows out of the softmax
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid.astype(jnp.float32)
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dt = dtype or cfg.dtype
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, Hkv, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, Hkv, hd), dt),
+    }
+
+
+def decode_step(cfg: TransformerConfig, params: dict, cache: dict,
+                tokens: jax.Array, cur_len: jax.Array,
+                attn_impl: str = "xla") -> tuple[jax.Array, dict]:
+    """One-token decode.  tokens: [B] int32; cur_len: scalar int32 (tokens
+    already in the cache).  Returns (logits [B, V] fp32, updated cache)."""
+    B = tokens.shape[0]
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+    x = params["embed"].astype(dt)[tokens]                    # [B, D]
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    kv_len = jnp.full((B,), cur_len + 1, jnp.int32)
+
+    def body(x, scanned):
+        p, ck, cv = scanned
+        h = L.rms_norm(x, p["ln1"])
+        q = jnp.einsum("bd,dh->bh", h, p["wq"].astype(dt))
+        k = jnp.einsum("bd,dh->bh", h, p["wk"].astype(dt))
+        v = jnp.einsum("bd,dh->bh", h, p["wv"].astype(dt))
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+        q = L.apply_rope(q.reshape(B, 1, Hq, hd), pos, cfg.rope_theta)[:, 0]
+        k = L.apply_rope(k.reshape(B, 1, Hkv, hd), pos, cfg.rope_theta)[:, 0]
+        v = v.reshape(B, Hkv, hd)
+        zero = jnp.zeros((), jnp.int32)
+        idx = (zero, jnp.asarray(cur_len, jnp.int32), zero, zero)
+        ck = jax.lax.dynamic_update_slice(ck, k[:, None].astype(ck.dtype), idx)
+        cv = jax.lax.dynamic_update_slice(cv, v[:, None].astype(cv.dtype), idx)
+        o = L.decode_attention(q, ck, cv, kv_len, impl=attn_impl)  # [B, Hq, hd]
+        x = x + jnp.einsum("bh,hd->bd", o.reshape(B, Hq * hd), p["wo"].astype(dt))
+        h2 = L.rms_norm(x, p["ln2"])
+        if cfg.moe:
+            y, _ = moe_ffn(h2, p["router"], p["wg"], p["wu"], p["wd"], cfg.moe, dt)
+        else:
+            y = L.swiglu(h2, p["wg"], p["wu"], p["wd"], dt)
+        return x + y, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    logits = jnp.einsum("bd,dv->bv", x, head, preferred_element_type=jnp.float32)
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,1 @@
+"""Serving layer: batched phrase-query serving + LM decode serving."""

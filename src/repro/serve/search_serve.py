@@ -1,0 +1,316 @@
+"""Production batched phrase-query serving over a document-sharded index.
+
+Distributed-IR layout (DESIGN.md §5): documents are partitioned over the
+dp = pod x data mesh axes; every shard holds its own posting arena (all three
+indexes concatenated into one (doc, pos, dist) structure-of-arrays so a fetch
+is a single gather) and executes the full query batch; per-shard hits are
+all-gathered and merged.  The `model` axis replicates the index and serves to
+scale query throughput (the launcher round-robins query batches over it).
+
+The planner's resolved plans are tensorized into fixed-shape fetch tables:
+
+    start/length/offset/req_dist/band/active : [Q, G]
+    ns_packed                                : [Q, C]  (type-4 pivot checks)
+
+Group 0 is the seed (the pivot / rarest list); groups 1..G-1 constrain it via
+banded-key membership (band 0 = precise phrase, band W = word-set window).
+Keys are compact per-shard int32 (doc_local << 17 | pos) — the domain the
+Pallas `banded_intersect` kernel operates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.postings import NS_SHIFT
+from jax import shard_map
+
+SERVE_POS_BITS = 17            # in-doc position < 131072
+SERVE_BIAS = 64
+SENT32 = np.int32(2**30 - 1)   # < int32 max so +band never wraps
+NO_DIST = np.int32(-128)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchServeConfig:
+    name: str = "veretennikov-serve"
+    queries: int = 64              # Q: batch size
+    groups: int = 4                # G: fetch groups per query
+    postings_pad: int = 32768      # P: padded postings per constraint fetch
+    seed_pad: int = 0              # seed (pivot) fetch pad; 0 = postings_pad.
+                                   # The planner seeds with the RAREST list,
+                                   # so a small pad bounds the stream-3
+                                   # gather + membership searches (§Perf)
+    top_m: int = 128               # hits returned per query
+    check_slots: int = 4           # C: near-stop checks on the pivot group
+    ns_k: int = 20                 # stream-3 slots per posting
+    sort_free: bool = False        # cummax-fill instead of sorting dist holes
+    packed_keys: bool = False      # arena stores doc<<17|pos+BIAS pre-packed
+                                   # (one i32 gather per fetch instead of two)
+    # per-shard arena sizes (basic | expanded | stop segments concatenated)
+    n_basic: int = 10_000_000
+    n_expanded: int = 17_000_000
+    n_stop: int = 23_000_000
+    impl: str = "ref"              # intersect implementation (ref | pallas)
+
+    @property
+    def n_arena(self) -> int:
+        return self.n_basic + self.n_expanded + self.n_stop
+
+    @property
+    def p_seed(self) -> int:
+        return self.seed_pad or self.postings_pad
+
+
+def query_table_specs(cfg: SearchServeConfig) -> dict:
+    """ShapeDtypeStructs for one query batch (replicated to every shard)."""
+    Q, G, C = cfg.queries, cfg.groups, cfg.check_slots
+    i32 = jnp.int32
+    return {
+        "start": jax.ShapeDtypeStruct((Q, G), i32),
+        "length": jax.ShapeDtypeStruct((Q, G), i32),
+        "offset": jax.ShapeDtypeStruct((Q, G), i32),
+        "req_dist": jax.ShapeDtypeStruct((Q, G), i32),
+        "band": jax.ShapeDtypeStruct((Q, G), i32),
+        "active": jax.ShapeDtypeStruct((Q, G), jnp.bool_),
+        "ns_packed": jax.ShapeDtypeStruct((Q, C), jnp.int16),
+    }
+
+
+def arena_specs(cfg: SearchServeConfig, n_shards: int) -> dict:
+    """ShapeDtypeStructs for the stacked per-shard index arenas."""
+    i32 = jnp.int32
+    if cfg.packed_keys:
+        return {
+            "arena_key": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
+            "arena_dist": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), jnp.int8),
+            "basic_ns": jax.ShapeDtypeStruct((n_shards, cfg.n_basic, cfg.ns_k), jnp.int16),
+        }
+    return {
+        "arena_doc": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
+        "arena_pos": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
+        "arena_dist": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), jnp.int8),
+        "basic_ns": jax.ShapeDtypeStruct((n_shards, cfg.n_basic, cfg.ns_k), jnp.int16),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def _one_query(cfg: SearchServeConfig, arena_doc, arena_pos, arena_dist,
+               basic_ns, q):
+    n = arena_doc.shape[0]    # packed mode passes arena_key as arena_doc
+
+    def fetch(g, pad):
+        iota = jnp.arange(pad, dtype=jnp.int32)
+        idx = jnp.clip(q["start"][g] + iota, 0, n - 1)
+        ok = iota < q["length"][g]
+        dist = arena_dist[idx].astype(jnp.int32)
+        rd = q["req_dist"][g]
+        ok = ok & ((rd == NO_DIST) | (dist == rd))
+        if arena_pos is None:
+            # packed arena: key already doc<<17|pos+BIAS; offset shifts pos
+            keys = arena_doc[idx] - q["offset"][g]
+        else:
+            doc = arena_doc[idx]
+            pos = arena_pos[idx]
+            keys = (doc << SERVE_POS_BITS) | (pos - q["offset"][g] + SERVE_BIAS)
+        return jnp.where(ok, keys.astype(jnp.int32), SENT32), idx
+
+    keys0, idx0 = fetch(0, cfg.p_seed)
+    found = keys0 < SENT32
+
+    # type-4 pivot verification against stream 3 (near-stop slots)
+    if cfg.check_slots > 0:
+        ns = basic_ns[jnp.clip(idx0, 0, basic_ns.shape[0] - 1)]     # [P0, K]
+        targets = q["ns_packed"]                                    # [C]
+        t_active = targets >= 0
+        hit = (ns[:, :, None] == targets[None, None, :]).any(axis=1)  # [P0, C]
+        ok_checks = (hit | ~t_active[None, :]).all(axis=1)
+        found = found & jnp.where(t_active.any(), ok_checks, True)
+
+    for g in range(1, cfg.groups):
+        kg, _ = fetch(g, cfg.postings_pad)
+        if cfg.sort_free:
+            # dist-filter holes: fill with a running max — stays sorted, and
+            # duplicating an existing key never creates a false member;
+            # leading holes become int32-min (matches nothing: keys >= 0).
+            # O(P) scan instead of an O(P log P) sort.
+            lowest = jnp.int32(-(2**31) + 1)
+            kg = jax.lax.cummax(jnp.where(kg == SENT32, lowest, kg))
+        else:
+            kg = jnp.sort(kg)          # dist-filter holes break sortedness
+        band = q["band"][g]
+        lo = jnp.searchsorted(kg, keys0 - band, side="left")
+        hi = jnp.searchsorted(kg, keys0 + band, side="right")
+        member = hi > lo
+        found = found & jnp.where(q["active"][g], member, True)
+
+    ranked = jnp.where(found, keys0, SENT32)
+    hits = jnp.sort(ranked)[: cfg.top_m]
+    return hits, found.sum(dtype=jnp.int32)
+
+
+def make_search_serve_step(cfg: SearchServeConfig, mesh):
+    """Returns step(arenas, queries) -> (merged_hits [Q, M], total [Q]).
+
+    arenas: dict of stacked per-shard arrays (leading dim = n_dp shards),
+    sharded P(dp); queries: dict of [Q, G] tables, replicated.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def merge(hits, counts):
+        # merge across shards: total count + global top-M of gathered hits
+        total = jax.lax.psum(counts, dp)
+        all_hits = jax.lax.all_gather(hits, dp, axis=0, tiled=False)
+        all_hits = all_hits.reshape(-1, hits.shape[0], cfg.top_m)
+        merged = jnp.sort(all_hits.transpose(1, 0, 2).reshape(hits.shape[0], -1),
+                          axis=-1)[:, : cfg.top_m]
+        return merged, total
+
+    spec_shard = P(dp)
+    spec_rep = P()
+    q_specs = {k: spec_rep for k in query_table_specs(cfg)}
+
+    if cfg.packed_keys:
+        def local(arena_key, arena_dist, basic_ns, queries):
+            run = functools.partial(_one_query, cfg, arena_key[0], None,
+                                    arena_dist[0], basic_ns[0])
+            hits, counts = jax.vmap(run)(queries)
+            return merge(hits, counts)
+
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(spec_shard, spec_shard, spec_shard, q_specs),
+                       out_specs=(spec_rep, spec_rep), check_vma=False)
+
+        def step(arenas: dict, queries: dict):
+            return fn(arenas["arena_key"], arenas["arena_dist"],
+                      arenas["basic_ns"], queries)
+        return step
+
+    def local(arena_doc, arena_pos, arena_dist, basic_ns, queries):
+        run = functools.partial(_one_query, cfg, arena_doc[0], arena_pos[0],
+                                arena_dist[0], basic_ns[0])
+        hits, counts = jax.vmap(run)(queries)
+        return merge(hits, counts)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(spec_shard, spec_shard, spec_shard, spec_shard,
+                             q_specs),
+                   out_specs=(spec_rep, spec_rep), check_vma=False)
+
+    def step(arenas: dict, queries: dict):
+        return fn(arenas["arena_doc"], arenas["arena_pos"],
+                  arenas["arena_dist"], arenas["basic_ns"], queries)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# host-side: build real arenas from an IndexSet (tests / small-scale serving)
+# ---------------------------------------------------------------------------
+
+def build_arenas(index_set, cfg: SearchServeConfig):
+    """Concatenate the three indexes into one per-shard posting arena.
+
+    Layout: [basic | expanded | stop]; returns (arenas dict with a leading
+    shard dim of 1, stream_bases dict for tensorize_plans).  Sizes are
+    clipped/padded to the cfg arena segment sizes.
+    """
+    b = index_set.basic.occurrences
+    e = index_set.expanded.pairs
+    s = index_set.stop_phrase.phrases
+
+    def seg(doc, pos, dist, n):
+        out_d = np.zeros(n, np.int32)
+        out_p = np.zeros(n, np.int32)
+        out_x = np.zeros(n, np.int8)
+        m = min(len(doc), n)
+        out_d[:m], out_p[:m] = doc[:m], pos[:m]
+        if dist is not None:
+            out_x[:m] = dist[:m]
+        return out_d, out_p, out_x
+
+    bd, bp, bx = seg(b.columns["doc"], b.columns["pos"], None, cfg.n_basic)
+    ed, ep, ex = seg(e.columns["doc"], e.columns["pos"], e.columns["dist"],
+                     cfg.n_expanded)
+    sd, sp, sx = seg(s.columns["doc"], s.columns["pos"], None, cfg.n_stop)
+
+    ns = np.full((cfg.n_basic, cfg.ns_k), -1, np.int16)
+    src_ns = index_set.basic.near_stop
+    m = min(len(src_ns), cfg.n_basic)
+    k = min(src_ns.shape[1], cfg.ns_k)
+    ns[:m, :k] = src_ns[:m, :k]
+
+    doc = np.concatenate([bd, ed, sd])
+    pos = np.concatenate([bp, ep, sp])
+    if cfg.packed_keys:
+        key = (doc.astype(np.int32) << SERVE_POS_BITS) | (pos + SERVE_BIAS)
+        arenas = {
+            "arena_key": jnp.asarray(key[None]),
+            "arena_dist": jnp.asarray(np.concatenate([bx, ex, sx])[None]),
+            "basic_ns": jnp.asarray(ns[None]),
+        }
+    else:
+        arenas = {
+            "arena_doc": jnp.asarray(doc[None]),
+            "arena_pos": jnp.asarray(pos[None]),
+            "arena_dist": jnp.asarray(np.concatenate([bx, ex, sx])[None]),
+            "basic_ns": jnp.asarray(ns[None]),
+        }
+    bases = {"basic": 0, "expanded": cfg.n_basic,
+             "stop": cfg.n_basic + cfg.n_expanded}
+    return arenas, bases
+
+
+# ---------------------------------------------------------------------------
+# host-side: tensorize planner output into fetch tables (single shard)
+# ---------------------------------------------------------------------------
+
+def tensorize_plans(cfg: SearchServeConfig, plans, stream_bases: dict | None = None,
+                    lengths_cap: int | None = None, max_distance: int = 5):
+    """Pack QueryPlans (AND-groups, primary fetch per group) into tables.
+
+    The batched serve path executes the conjunctive plan (one fetch per
+    group, primary morphological form); queries needing unions fall back to
+    the flexible executor.  stream_bases maps fetch.stream -> arena offset
+    (from build_arenas).  Returns numpy tables per query_table_specs.
+    """
+    Q, G, C = cfg.queries, cfg.groups, cfg.check_slots
+    bases = stream_bases or {"basic": 0, "expanded": cfg.n_basic,
+                             "stop": cfg.n_basic + cfg.n_expanded}
+    t = {
+        "start": np.zeros((Q, G), np.int32),
+        "length": np.zeros((Q, G), np.int32),
+        "offset": np.zeros((Q, G), np.int32),
+        "req_dist": np.full((Q, G), NO_DIST, np.int32),
+        "band": np.zeros((Q, G), np.int32),
+        "active": np.zeros((Q, G), bool),
+        "ns_packed": np.full((Q, C), -1, np.int16),
+    }
+    cap = lengths_cap or cfg.postings_pad
+    for qi, plan in enumerate(plans[:Q]):
+        sp = plan.subplans[0]
+        groups = [g for g in sp.groups if g.fetches]
+        # seed first: the near-stop-checked pivot if any, else a band-0 group
+        groups = sorted(groups, key=lambda g: (not g.fetches[0].stop_checks
+                                               if g.band == 0 else True, g.band))[: G]
+        for gi, g in enumerate(groups):
+            f = g.fetches[0]
+            if f.stream not in bases:
+                continue            # 'first'/'ordinary' stay on the flex path
+            t["start"][qi, gi] = f.start + bases[f.stream]
+            t["length"][qi, gi] = min(f.length, cfg.p_seed if gi == 0 else cap)
+            t["offset"][qi, gi] = f.offset
+            t["band"][qi, gi] = g.band
+            t["active"][qi, gi] = True
+            if f.required_dist is not None:
+                t["req_dist"][qi, gi] = f.required_dist
+            if gi == 0 and f.stop_checks:
+                for ci, (delta, ids) in enumerate(f.stop_checks[:C]):
+                    t["ns_packed"][qi, ci] = ((delta + max_distance) << NS_SHIFT) | ids[0]
+    return t

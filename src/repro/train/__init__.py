@@ -1,0 +1,1 @@
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_state, lr_schedule

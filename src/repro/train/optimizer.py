@@ -1,0 +1,136 @@
+"""Optimizers from scratch (no optax in this environment).
+
+AdamW     — default for the LM / recsys / GNN examples and train_step.
+SGDM      — plain momentum (baseline ablations).
+Adafactor — factored second moments for memory-lean large-model training.
+
+All states are pytrees mirroring the parameter tree, so they shard with the
+same PartitionSpecs as the parameters (ZeRO-style sharding falls out of the
+pjit in_shardings; see dist/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | sgdm | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: OptimizerConfig, params) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    if cfg.name == "adamw":
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(zeros, params),
+                "nu": jax.tree_util.tree_map(zeros, params)}
+    if cfg.name == "sgdm":
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(zeros, params)}
+    if cfg.name == "adafactor":
+        def factored(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree_util.tree_map(factored, params,
+                                            is_leaf=lambda x: isinstance(x, jax.Array))}
+    raise ValueError(cfg.name)
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.b1, cfg.b2
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state["mu"], grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state["nu"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, {"step": step, "mu": mu, "nu": nu}, {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "sgdm":
+        mu = jax.tree_util.tree_map(lambda m, g: cfg.b1 * m + g, state["mu"], grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32)
+                          - lr * (m + cfg.weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+            params, mu)
+        return new_params, {"step": step, "mu": mu}, {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "adafactor":
+        d = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, v):
+            g2 = g * g + 1e-30
+            if p.ndim >= 2:
+                vr = cfg.b2 * v["vr"] + (1 - cfg.b2) * g2.mean(axis=-1)
+                vc = cfg.b2 * v["vc"] + (1 - cfg.b2) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], 1e-30))
+                u = g / (jnp.sqrt(denom / d) + cfg.eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": cfg.b2 * v["v"] + (1 - cfg.b2) * g2}
+                u = g / (jnp.sqrt(nv["v"] / d) + cfg.eps)
+            newp = (p.astype(jnp.float32) - lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+            return newp.astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"step": step, "v": new_v}, {"lr": lr, "grad_norm": gnorm}
+
+    raise ValueError(cfg.name)

@@ -1,0 +1,42 @@
+"""Shared fixtures: a small built index + engines (session-scoped).
+
+NOTE: no XLA_FLAGS here — smoke tests run on the single real CPU device;
+multi-device tests spawn subprocesses (test_dist.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AdditionalIndexEngine, CorpusConfig, IndexParams,
+                        LexiconConfig, OrdinaryEngine, build_all,
+                        generate_corpus, make_lexicon_and_analyzer)
+
+
+@pytest.fixture(scope="session")
+def small_world():
+    lc = LexiconConfig(n_surface=8000, n_base=6000, n_stop=150,
+                       n_frequent=500, seed=2)
+    lex, ana = make_lexicon_and_analyzer(lc)
+    corpus = generate_corpus(lc, CorpusConfig(n_docs=120, mean_doc_len=400, seed=2))
+    index = build_all(corpus, lex, ana)
+    return {"lex": lex, "ana": ana, "corpus": corpus, "index": index,
+            "engine": AdditionalIndexEngine(index),
+            "ordinary": OrdinaryEngine(index)}
+
+
+@pytest.fixture(scope="session")
+def paper_queries(small_world):
+    """The paper's experiment procedure: random doc, consecutive words (2.1)
+    and every-other-word (2.2) queries of 3..5 words."""
+    corpus = small_world["corpus"]
+    rng = np.random.default_rng(7)
+    queries = []
+    for _ in range(60):
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        n = int(rng.integers(3, 6))
+        if len(toks) < 2 * n + 2:
+            continue
+        st = int(rng.integers(0, len(toks) - 2 * n))
+        queries.append((toks[st:st + n].tolist(), "phrase", d))
+        queries.append((toks[st:st + 2 * n:2].tolist(), "near", d))
+    return queries

@@ -1,0 +1,128 @@
+"""Index-construction correctness: every structure vs first principles."""
+import numpy as np
+
+from repro.core.builder import (IndexParams, build_stop_phrase_index,
+                                expand_token_forms,
+                                reference_stop_phrase_postings)
+from repro.core.postings import unpack_near_stop_slot
+
+
+def test_stop_phrase_matches_paper_literal_reference(small_world):
+    """Vectorized builder == the paper's Queue/Process algorithm, exactly."""
+    idx = small_world["index"]
+    tf = expand_token_forms(small_world["corpus"], idx.lexicon, idx.analyzer)
+    ref = sorted(reference_stop_phrase_postings(tf, idx.params))
+    got = []
+    ph = idx.stop_phrase.phrases
+    for i, k in enumerate(ph.keys):
+        s, e = int(ph.offsets[i]), int(ph.offsets[i + 1])
+        for d, p in zip(ph.columns["doc"][s:e], ph.columns["pos"][s:e]):
+            got.append((int(k), int(d), int(p)))
+    assert sorted(got) == ref
+
+
+def test_stop_phrase_run_counts():
+    """Paper: 10 consecutive stop words -> nine 2-phrases, eight 3-phrases..."""
+    from repro.core.builder import TokenForms
+    n = 10
+    tf = TokenForms(
+        doc_of=np.zeros(n, np.int32), pos_of=np.arange(n, dtype=np.int32),
+        s1_local=np.arange(n, dtype=np.int32) % 5,
+        s2_local=np.full(n, -1, np.int32),
+        n1=np.full(n, -1, np.int32), n2=np.full(n, -1, np.int32))
+    params = IndexParams(min_len=2, max_len=5)
+    spi = build_stop_phrase_index(tf, params)
+    total = spi.phrases.n_postings
+    assert total == 9 + 8 + 7 + 6      # lengths 2..5
+
+
+def test_expanded_index_invariants(small_world):
+    """(w,v) postings: w frequent, v non-stop, |dist| <= PD(w), and the
+    canonical orientation stores each both-frequent pair once."""
+    idx = small_world["index"]
+    lex = idx.lexicon
+    pairs = idx.expanded.pairs
+    n_base = idx.expanded.n_base
+    w = (pairs.keys // n_base).astype(np.int64)
+    v = (pairs.keys % n_base).astype(np.int64)
+    assert lex.is_frequent(w).all()
+    assert (~lex.is_stop(v)).all()
+    both = lex.is_frequent(v)
+    assert (w[both] <= v[both]).all()          # canonical orientation
+    # dist bounds per key
+    pd = lex.processing_distance(w)
+    for i in range(pairs.n_keys):
+        s, e = int(pairs.offsets[i]), int(pairs.offsets[i + 1])
+        d = pairs.columns["dist"][s:e]
+        assert (np.abs(d.astype(np.int32)) <= pd[i]).all()
+        assert (d != 0).all()
+
+
+def test_expanded_lookup_mirror(small_world):
+    """Looking up (v, w) when (w, v) is stored recovers v's positions."""
+    idx = small_world["index"]
+    lex = idx.lexicon
+    pairs = idx.expanded.pairs
+    n_base = idx.expanded.n_base
+    done = 0
+    for key in pairs.keys[:2000]:
+        w, v = int(key // n_base), int(key % n_base)
+        if w == v or not lex.is_frequent(np.array([v]))[0]:
+            continue
+        fwd = idx.expanded.lookup(w, v)
+        mir = idx.expanded.lookup(v, w)
+        assert fwd is not None and mir is not None
+        assert np.array_equal(np.sort(fwd["pos"] + fwd["dist"]), np.sort(mir["pos"]))
+        done += 1
+        if done >= 5:
+            break
+    assert done > 0
+
+
+def test_first_occ_stream_counts(small_world):
+    """Stream 1 (doc, first pos, count) must tally with the occurrence CSR."""
+    idx = small_world["index"]
+    b = idx.basic
+    rng = np.random.default_rng(0)
+    for base in rng.integers(idx.lexicon.config.n_stop,
+                             idx.lexicon.config.n_base, 200):
+        occ = b.occurrences.slice(int(base))
+        fo = b.first_occ.slice(int(base))
+        assert fo["count"].sum() == len(occ["doc"])
+        docs, first_idx = np.unique(occ["doc"], return_index=True)
+        assert np.array_equal(fo["doc"], docs)
+        assert np.array_equal(fo["pos"], occ["pos"][first_idx])
+
+
+def test_near_stop_stream_lossless(small_world):
+    """Stream 3 holds EVERY stop form within MaxDistance (near_slots=4D)."""
+    idx = small_world["index"]
+    corpus = small_world["corpus"]
+    tf = expand_token_forms(corpus, idx.lexicon, idx.analyzer)
+    b = idx.basic
+    D = b.max_distance
+    base = int(idx.lexicon.config.n_stop) + 5      # a frequent form
+    occ = b.occurrences.slice(base)
+    slots = b.near_stop_of(base)
+    g_of = {}
+    # reconstruct expected near-stops from the corpus for a few occurrences
+    doc_of, pos_of = tf.doc_of, tf.pos_of
+    starts = corpus.doc_offsets
+    for i in range(min(len(occ["doc"]), 50)):
+        d, p = int(occ["doc"][i]), int(occ["pos"][i])
+        g = int(starts[d]) + p
+        want = set()
+        for delta in range(-D, D + 1):
+            if delta == 0:
+                continue
+            u = g + delta
+            if 0 <= u < corpus.n_tokens and doc_of[u] == d:
+                for sl in (tf.s1_local[u], tf.s2_local[u]):
+                    if sl >= 0:
+                        want.add((delta, int(sl)))
+        got = set()
+        row = slots[i]
+        for slot in row[row >= 0]:
+            dd, ss = unpack_near_stop_slot(int(slot), D)
+            got.add((int(dd), int(ss)))
+        assert got == want, (d, p)

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + finiteness — the assigned-architecture
+deliverable.  Full configs are exercised only via the dry-run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ALL_ARCHS, get_arch
+from repro.data import graph_data, recsys_data
+from repro.models import gnn, recsys, transformer as tfm
+from repro.train import OptimizerConfig, apply_updates, init_state
+
+LM_ARCHS = ["granite-3-8b", "qwen2.5-32b", "llama3-8b",
+            "granite-moe-1b-a400m", "moonshot-v1-16b-a3b"]
+REC_ARCHS = ["fm", "autoint", "bst", "mind"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = get_arch(arch).make_smoke_config()
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key)
+    B, S = 2, 32
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab, dtype=jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    logits, aux = tfm.forward(cfg, params, toks)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+    ocfg = OptimizerConfig(lr=1e-3)
+    state = init_state(ocfg, params)
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: tfm.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    new_params, state, _ = apply_updates(ocfg, params, grads, state)
+    (loss2, _), _ = jax.value_and_grad(
+        lambda p: tfm.loss_fn(cfg, p, batch), has_aux=True)(new_params)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS[:2] + LM_ARCHS[3:4])
+def test_lm_smoke_decode_matches_forward(arch):
+    cfg = get_arch(arch).make_smoke_config()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    cache = tfm.init_cache(cfg, 2, 16)
+    outs = []
+    for t in range(8):
+        lg, cache = tfm.decode_step(cfg, params, cache, toks[:, t], jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    full, _ = tfm.forward(cfg, params, toks)
+    assert float(jnp.abs(dec - full).max()) < 5e-3
+
+
+def test_gin_smoke_all_shapes():
+    spec = get_arch("gin-tu")
+    base = spec.make_smoke_config()
+    rng = np.random.default_rng(0)
+    # full graph
+    g = graph_data.generate_graph(300, 1500, base.d_feat, base.n_classes, seed=0)
+    cfg = dataclasses.replace(base, d_feat=g.features.shape[1])
+    p = gnn.init_params(cfg, jax.random.PRNGKey(0))
+    b = {k: jnp.asarray(v) for k, v in graph_data.full_graph_batch(g).items()}
+    loss, m = gnn.loss_fn(cfg, p, b)
+    assert bool(jnp.isfinite(loss))
+    # sampled minibatch
+    sub = graph_data.sample_subgraph(g, np.arange(16), (4, 3), rng)
+    loss2, _ = gnn.loss_fn(cfg, p, {k: jnp.asarray(v) for k, v in sub.items()})
+    assert bool(jnp.isfinite(loss2))
+    # molecule readout
+    mcfg = dataclasses.replace(base, graph_readout=True)
+    mp = gnn.init_params(mcfg, jax.random.PRNGKey(0))
+    mb = graph_data.molecule_batch(8, 10, 20, base.d_feat, base.n_classes)
+    mb = {k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v) for k, v in mb.items()}
+    loss3, _ = gnn.loss_fn(mcfg, mp, mb)
+    assert bool(jnp.isfinite(loss3))
+
+
+@pytest.mark.parametrize("arch", REC_ARCHS)
+def test_recsys_smoke_train_and_retrieval(arch):
+    cfg = get_arch(arch).make_smoke_config()
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    log = recsys_data.ClickLog(cfg.field_vocabs, item_vocab=cfg.item_vocab,
+                               seq_len=cfg.seq_len, seed=0)
+    batch = log.seq_batch(16) if cfg.model in ("bst", "mind") else log.ctr_batch(16)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    loss, m = recsys.loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: recsys.loss_fn(cfg, p, batch)[0])(params)
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    rb = {k: jnp.asarray(v) for k, v in log.retrieval_batch(2, 100).items()}
+    scores = recsys.retrieval_scores(cfg, params, rb)
+    assert scores.shape == (2, 100)
+    assert bool(jnp.isfinite(scores).all())
+
+
+def test_registry_covers_all_archs():
+    assert len(ALL_ARCHS) == 11          # 10 assigned + the paper's engine
+    for a in ALL_ARCHS:
+        spec = get_arch(a)
+        assert spec.shapes, a
+        assert spec.make_config() is not None
+        assert spec.make_smoke_config() is not None
+
+
+def test_moe_capacity_drops_overflow():
+    """Tokens beyond capacity are dropped, not mis-routed."""
+    from repro.models.moe import MoEConfig, moe_ffn
+    cfg = MoEConfig(n_experts=2, top_k=1, d_expert=8, capacity_factor=0.1)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 16), jnp.float32)
+    rw = jnp.zeros((16, 2), jnp.float32)      # uniform router -> argmax=expert0
+    wg = jax.random.normal(key, (2, 16, 8), jnp.float32) * 0.1
+    wu = jax.random.normal(key, (2, 16, 8), jnp.float32) * 0.1
+    wd = jax.random.normal(key, (2, 8, 16), jnp.float32) * 0.1
+    y, aux = moe_ffn(x, rw, wg, wu, wd, cfg, jnp.float32)
+    # capacity = int(32*1/2*0.1)+1 = 2 slots per expert; everything routes to
+    # expert 0 -> at most 2 tokens produce nonzero output
+    nonzero = int((jnp.abs(y).sum(axis=1) > 1e-9).sum())
+    assert nonzero <= 2 * cfg.n_experts
+
+
+def test_transformer_vocab_padding_masked():
+    cfg = tfm.TransformerConfig(name="t", n_layers=1, d_model=32, n_heads=2,
+                                n_kv_heads=1, d_ff=64, vocab=100,
+                                dtype=jnp.float32)
+    assert cfg.vocab_padded == 256
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((1, 4), jnp.int32)
+    loss, _ = tfm.loss_fn(cfg, params, {"tokens": toks, "labels": toks})
+    # the loss can never prefer a padding token: nll <= log(vocab_padded)
+    # would fail if padding leaked; just require finiteness + sane range
+    assert 0 < float(loss) < 20

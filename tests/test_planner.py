@@ -1,0 +1,101 @@
+"""Planner: classification, query splitting, pivot choice, parts."""
+import numpy as np
+import pytest
+
+from repro.core.lexicon import TIER_FREQUENT, TIER_ORDINARY, TIER_STOP
+from repro.core.planner import MODE_NEAR, MODE_PHRASE, split_query_parts
+
+
+def _surface_of_tier(world, tier, k=1):
+    """Surfaces whose ONLY basic-form tier is `tier`."""
+    ana, lex = world["ana"], world["lex"]
+    out = []
+    for s in range(world["lex"].config.n_surface):
+        forms = ana.forms_of(s)
+        tiers = {int(lex.base_tier[f]) for f in forms}
+        if tiers == {tier}:
+            out.append(s)
+        if len(out) >= k:
+            break
+    assert len(out) >= k
+    return out
+
+
+def test_type_classification(small_world):
+    planner = small_world["engine"].planner
+    stop = _surface_of_tier(small_world, TIER_STOP, 3)
+    freq = _surface_of_tier(small_world, TIER_FREQUENT, 3)
+    ordi = _surface_of_tier(small_world, TIER_ORDINARY, 3)
+
+    assert planner.plan(stop).subplans[0].qtype == 1
+    assert planner.plan(freq).subplans[0].qtype == 2
+    assert planner.plan(freq[:1] + ordi[:2]).subplans[0].qtype == 3
+    assert planner.plan(stop[:1] + freq[:1] + ordi[:1]).subplans[0].qtype == 4
+
+
+def test_query_splitting_multi_tier(small_world):
+    """A word with basic forms in two tiers splits the query (paper:
+    PROCESSING QUERIES)."""
+    ana, lex = small_world["ana"], small_world["lex"]
+    planner = small_world["engine"].planner
+    mixed = None
+    for s in range(lex.config.n_surface):
+        tiers = {int(lex.base_tier[f]) for f in ana.forms_of(s)}
+        if len(tiers) > 1:
+            mixed = s
+            break
+    assert mixed is not None
+    plan = planner.plan([mixed] + _surface_of_tier(small_world, TIER_ORDINARY, 1))
+    assert len(plan.subplans) >= 2
+    assert len({sp.qtype for sp in plan.subplans}) >= 1
+
+
+def test_type2_reads_n_minus_1_expanded_lists(small_world):
+    """Paper Type 2: n-1 expanded indexes, pivot = rarest word."""
+    planner = small_world["engine"].planner
+    freq = _surface_of_tier(small_world, TIER_FREQUENT, 3)
+    plan = planner.plan(freq, mode=MODE_PHRASE)
+    sp = plan.subplans[0]
+    assert sp.qtype == 2
+    assert len(sp.groups) == len(freq) - 1
+    for g in sp.groups:
+        for f in g.fetches:
+            assert f.stream == "expanded"
+
+
+def test_type4_pivot_checks_stop_words_via_stream3(small_world):
+    planner = small_world["engine"].planner
+    stop = _surface_of_tier(small_world, TIER_STOP, 2)
+    ordi = _surface_of_tier(small_world, TIER_ORDINARY, 1)
+    plan = planner.plan([stop[0], ordi[0], stop[1]])
+    sp = plan.subplans[0]
+    assert sp.qtype == 4
+    pivot_fetches = [f for g in sp.groups for f in g.fetches if f.stop_checks]
+    assert pivot_fetches
+    deltas = {c[0] for f in pivot_fetches for c in f.stop_checks}
+    assert deltas == {-1, 1}
+    assert all(f.read_near_stop for f in pivot_fetches)
+
+
+def test_near_mode_fallback_groups_use_stream1(small_world):
+    planner = small_world["engine"].planner
+    freq = _surface_of_tier(small_world, TIER_FREQUENT, 2)
+    ordi = _surface_of_tier(small_world, TIER_ORDINARY, 1)
+    plan = planner.plan(freq + ordi, mode=MODE_NEAR)
+    sp = plan.subplans[0]
+    assert sp.fallback_groups
+    for g in sp.fallback_groups:
+        for f in g.fetches:
+            assert f.stream == "first"
+
+
+@pytest.mark.parametrize("n,mn,mx", [(2, 2, 5), (5, 2, 5), (6, 2, 5), (7, 2, 5),
+                                     (11, 2, 5), (3, 2, 2), (9, 3, 4)])
+def test_split_query_parts_properties(n, mn, mx):
+    parts = split_query_parts(n, mn, mx)
+    covered = set()
+    for start, ln in parts:
+        assert mn <= ln <= mx
+        assert 0 <= start and start + ln <= n
+        covered |= set(range(start, start + ln))
+    assert covered == set(range(n))

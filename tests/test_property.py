@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.postings import (CSR, PHRASE_BIAS, pack_near_stop_slot,
+                                 pack_stop_phrase_key, shifted_key,
+                                 unpack_near_stop_slot, unpack_shifted_key)
+from repro.core.planner import split_query_parts
+from repro.dist.collectives import dequantize_int8, quantize_int8
+from repro.kernels import ops
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**30), st.integers(0, 2**20)),
+                min_size=1, max_size=200),
+       st.integers(0, 16))
+@settings(max_examples=50, deadline=None)
+def test_shifted_key_roundtrip(pairs, offset):
+    doc = np.array([p[0] for p in pairs], np.int64)
+    pos = np.array([p[1] for p in pairs], np.int64) + offset
+    keys = shifted_key(doc, pos, offset)
+    d2, p2 = unpack_shifted_key(keys, offset)
+    assert np.array_equal(d2, doc) and np.array_equal(p2, pos)
+
+
+@given(st.lists(st.integers(0, 1023), min_size=2, max_size=5))
+@settings(max_examples=100, deadline=None)
+def test_stop_phrase_key_order_invariant(ids):
+    a = np.sort(np.array(ids, np.int64))
+    k1 = pack_stop_phrase_key(a[None, :])[0]
+    rng = np.random.default_rng(0)
+    shuf = a.copy()
+    rng.shuffle(shuf)
+    k2 = pack_stop_phrase_key(np.sort(shuf)[None, :])[0]
+    assert k1 == k2
+    # length is part of the key: a prefix never collides
+    if len(a) > 2:
+        k3 = pack_stop_phrase_key(a[None, :-1])[0]
+        assert k3 != k1
+
+
+@given(st.integers(-7, 7).filter(lambda d: d != 0), st.integers(0, 1023),
+       st.integers(5, 7))
+@settings(max_examples=50, deadline=None)
+def test_near_stop_slot_roundtrip(delta, sid, maxd):
+    if abs(delta) > maxd:
+        delta = maxd if delta > 0 else -maxd
+    slot = pack_near_stop_slot(np.array([delta]), np.array([sid]), maxd)
+    d2, s2 = unpack_near_stop_slot(slot, maxd)
+    assert d2[0] == delta and s2[0] == sid
+
+
+@given(st.lists(st.integers(0, 1000), min_size=0, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_csr_from_unsorted_invariants(keys):
+    keys = np.array(keys, np.int64)
+    vals = np.arange(len(keys), dtype=np.int32)
+    csr = CSR.from_unsorted(keys, {"v": vals})
+    assert np.all(np.diff(csr.keys) > 0)                 # unique + sorted
+    assert csr.offsets[-1] == len(keys)
+    # every (key, val) pair is preserved
+    rebuilt = []
+    for i, k in enumerate(csr.keys):
+        for v in csr.columns["v"][csr.offsets[i]:csr.offsets[i + 1]]:
+            rebuilt.append((int(k), int(v)))
+    assert sorted(rebuilt) == sorted(zip(keys.tolist(), vals.tolist()))
+
+
+@given(st.integers(2, 24), st.integers(2, 3), st.integers(3, 6))
+@settings(max_examples=100, deadline=None)
+def test_split_query_parts_cover(n, mn, mx):
+    if mn > mx or n < mn:
+        return
+    parts = split_query_parts(n, mn, mx)
+    covered = set()
+    for s, ln in parts:
+        assert mn <= ln <= mx and 0 <= s and s + ln <= n
+        covered |= set(range(s, s + ln))
+    assert covered == set(range(n))
+
+
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=500),
+       st.lists(st.integers(0, 2**20), min_size=1, max_size=500),
+       st.integers(0, 8))
+@settings(max_examples=30, deadline=None)
+def test_banded_intersect_property(a, b, band):
+    a = np.array(a, np.int32)
+    b = np.sort(np.array(b, np.int32))
+    got = np.asarray(ops.banded_intersect(jnp.asarray(a), jnp.asarray(b), band,
+                                          block_a=256, block_b=256))
+    want = np.array([((b >= x - band) & (b <= x + band)).any() for x in a])
+    assert np.array_equal(got, want)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantization_error_bound(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, scale = quantize_int8(x)
+    err = float(jnp.abs(dequantize_int8(q, scale) - x).max())
+    assert err <= float(scale) * 0.5 + 1e-6
+
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(2, 50), st.integers(1, 32))
+@settings(max_examples=30, deadline=None)
+def test_segment_bag_property(B, F, V, D):
+    rng = np.random.default_rng(B * 100 + F)
+    table = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(-1, V, (B, F)).astype(np.int32))
+    got = np.asarray(ops.segment_bag(table, ids))
+    want = np.zeros((B, D), np.float32)
+    for i in range(B):
+        for j in range(F):
+            if int(ids[i, j]) >= 0:
+                want[i] += np.asarray(table)[int(ids[i, j])]
+    assert np.abs(got - want).max() < 1e-4

@@ -1,0 +1,123 @@
+"""Batched search serving: the tensorized serve_step must agree with the
+flexible executor on conjunctive plans, on a real (small) index."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.planner import MODE_PHRASE
+from repro.core.postings import PHRASE_BIAS, POS_BITS
+from repro.launch.mesh import make_host_mesh
+from repro.serve.search_serve import (SERVE_BIAS, SERVE_POS_BITS, SENT32,
+                                      SearchServeConfig, build_arenas,
+                                      make_search_serve_step, tensorize_plans)
+
+
+@pytest.fixture(scope="module")
+def serve_setup(small_world):
+    idx = small_world["index"]
+    cfg = SearchServeConfig(
+        queries=8, groups=4, postings_pad=4096, top_m=64, check_slots=4,
+        n_basic=idx.basic.occurrences.n_postings,
+        n_expanded=idx.expanded.pairs.n_postings,
+        n_stop=idx.stop_phrase.phrases.n_postings)
+    arenas, bases = build_arenas(idx, cfg)
+    mesh = make_host_mesh(data=1, model=1)
+    step = make_search_serve_step(cfg, mesh)
+    return cfg, arenas, bases, mesh, step
+
+
+def _serve_compatible(plan):
+    """Conjunctive single-fetch-per-group plans only (the serve fast path)."""
+    sp = plan.subplans
+    if len(sp) != 1 or not sp[0].supported:
+        return False
+    groups = [g for g in sp[0].groups if g.fetches]
+    if not groups or len(groups) > 4:
+        return False
+    for g in groups:
+        if len(g.fetches) != 1:
+            return False
+        f = g.fetches[0]
+        if f.stream not in ("basic", "expanded", "stop"):
+            return False
+        if f.stop_checks and any(len(ids) > 1 for _, ids in f.stop_checks):
+            return False
+    return True
+
+
+def test_serve_step_matches_executor(small_world, serve_setup, paper_queries):
+    cfg, arenas, bases, mesh, step = serve_setup
+    eng = small_world["engine"]
+    picked, plans = [], []
+    for q, mode, _ in paper_queries:
+        if mode != "phrase":
+            continue
+        plan = eng.plan(q, mode=MODE_PHRASE)
+        if _serve_compatible(plan):
+            picked.append(q)
+            plans.append(plan)
+        if len(picked) == cfg.queries:
+            break
+    assert len(picked) >= 4, "not enough serve-compatible queries"
+    while len(plans) < cfg.queries:
+        plans.append(plans[-1])
+        picked.append(picked[-1])
+
+    tables = tensorize_plans(cfg, plans, stream_bases=bases,
+                             max_distance=small_world["index"].params.max_distance)
+    tables = {k: jax.numpy.asarray(v) for k, v in tables.items()}
+    with mesh:
+        hits, counts = jax.jit(step)(arenas, tables)
+    hits, counts = np.asarray(hits), np.asarray(counts)
+
+    for qi, (q, plan) in enumerate(zip(picked, plans)):
+        r = eng.executor.execute(plan)
+        want = {(int(d), int(p)) for d, p in zip(r.doc, r.pos)} if not r.doc_only else set()
+        got = set()
+        for h in hits[qi]:
+            if h >= SENT32:
+                continue
+            doc = int(h) >> SERVE_POS_BITS
+            pos = (int(h) & ((1 << SERVE_POS_BITS) - 1)) - SERVE_BIAS
+            got.add((doc, pos))
+        if len(want) <= cfg.top_m:
+            assert got == want, (qi, q)
+        else:
+            assert got <= want
+        assert int(counts[qi]) == len(want), (qi, q)
+
+
+def test_serve_smoke_dryrun_shapes():
+    """The smoke-scale serve cell lowers and runs on 1 device."""
+    from repro.configs.registry import get_arch
+    spec = get_arch("veretennikov")
+    cfg = spec.make_smoke_config()
+    mesh = make_host_mesh(data=1, model=1)
+    step = make_search_serve_step(cfg, mesh)
+    rng = np.random.default_rng(0)
+    arenas = {
+        "arena_doc": jax.numpy.asarray(
+            rng.integers(0, 50, (1, cfg.n_arena)).astype(np.int32)),
+        "arena_pos": jax.numpy.asarray(
+            rng.integers(0, 400, (1, cfg.n_arena)).astype(np.int32)),
+        "arena_dist": jax.numpy.asarray(
+            rng.integers(-5, 6, (1, cfg.n_arena)).astype(np.int8)),
+        "basic_ns": jax.numpy.asarray(
+            np.full((1, cfg.n_basic, cfg.ns_k), -1, np.int32)),
+    }
+    q = {
+        "start": np.zeros((cfg.queries, cfg.groups), np.int32),
+        "length": np.full((cfg.queries, cfg.groups), 16, np.int32),
+        "offset": np.zeros((cfg.queries, cfg.groups), np.int32),
+        "req_dist": np.full((cfg.queries, cfg.groups), -128, np.int32),
+        "band": np.zeros((cfg.queries, cfg.groups), np.int32),
+        "active": np.ones((cfg.queries, cfg.groups), bool),
+        "ns_packed": np.full((cfg.queries, cfg.check_slots), -1, np.int32),
+    }
+    q = {k: jax.numpy.asarray(v) for k, v in q.items()}
+    with mesh:
+        hits, counts = jax.jit(step)(arenas, q)
+    assert hits.shape == (cfg.queries, cfg.top_m)
+    assert counts.shape == (cfg.queries,)

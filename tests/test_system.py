@@ -1,0 +1,131 @@
+"""End-to-end behaviour: the additional-index engine and the ordinary
+(Sphinx-style) baseline against the paper-semantics brute-force oracle."""
+import numpy as np
+import pytest
+
+from repro.core import brute_force_search
+from repro.core.planner import MODE_NEAR, MODE_PHRASE
+
+
+def _result_sets(r):
+    if r.doc_only:
+        return None, set(int(d) for d in r.doc)
+    return set(zip(r.doc.tolist(), r.pos.tolist())), None
+
+
+def test_engine_matches_oracle(small_world, paper_queries):
+    eng = small_world["engine"]
+    idx = small_world["index"]
+    corpus = small_world["corpus"]
+    n_checked = 0
+    for q, mode, _src in paper_queries[:60]:
+        truth_pos, truth_doc = brute_force_search(corpus, idx, q, mode=mode)
+        r = eng.search(q, mode=mode)
+        got_pos, got_doc = _result_sets(r)
+        if got_pos is None:
+            # fallback fired: distance-aware truth must be empty, and the
+            # doc-level result must equal the stream-1 ground truth
+            assert not truth_pos, (q, mode)
+            assert got_doc == truth_doc, (q, mode)
+        else:
+            assert got_pos == truth_pos, (q, mode)
+        n_checked += 1
+    assert n_checked >= 40
+
+
+def test_source_document_always_found(small_world, paper_queries):
+    """Paper: 'Since phrases are selected from an already-indexed document,
+    they should be precisely found.'  Strict for phrase queries; for 2.2
+    word-set queries the source occurrence can exceed the distance window
+    (words sit up to 2(n-1) apart), in which case the oracle must agree
+    that no within-window match exists in the source document."""
+    eng = small_world["engine"]
+    idx, corpus = small_world["index"], small_world["corpus"]
+    for q, mode, src in paper_queries:
+        r = eng.search(q, mode=mode)
+        docs = set(r.doc.tolist())
+        if mode == "phrase":
+            assert src in docs, (q, src)
+        elif src not in docs:
+            truth_pos, truth_doc = brute_force_search(corpus, idx, q, mode=mode)
+            assert src not in {d for d, _ in truth_pos}, (q, src)
+            # doc-level reachability holds whenever any interpretation has a
+            # non-stop word (all-stop skip queries are sequential-only, so
+            # they have no doc-level path — paper semantics)
+            if truth_doc:
+                assert src in truth_doc, (q, src)
+
+
+def test_postings_read_improvement(small_world, paper_queries):
+    """The paper's headline: additional indexes read orders of magnitude
+    fewer postings than the ordinary index, and never more."""
+    eng, base = small_world["engine"], small_world["ordinary"]
+    ratios = []
+    for q, mode, _ in paper_queries:
+        pr_add = eng.search(q, mode=mode).postings_read
+        pr_ord = base.search(q, mode=mode).postings_read
+        assert pr_add >= 0 and pr_ord > 0
+        ratios.append(pr_ord / max(pr_add, 1))
+    ratios = np.array(ratios)
+    assert np.mean(ratios) > 5.0, np.mean(ratios)
+    assert np.max(ratios) > 20.0
+
+
+def test_ordinary_engine_phrase_exact(small_world, paper_queries):
+    """The baseline itself must be correct: strict-order positional truth."""
+    corpus, idx = small_world["corpus"], small_world["index"]
+    ana = idx.analyzer
+    base = small_world["ordinary"]
+    for q, mode, _ in paper_queries[:20]:
+        if mode != "phrase":
+            continue
+        r = base.search(q, mode="phrase")
+        got, _ = _result_sets(r)
+        # strict-order scan
+        T = corpus.n_tokens
+        prim, sec = ana.primary[corpus.tokens], ana.secondary[corpus.tokens]
+        doc_of = corpus.doc_ids_per_token()
+        pos_of = corpus.positions_per_token()
+        n = len(q)
+        ms = []
+        for s in q:
+            forms = set(ana.forms_of(s))
+            m = np.isin(prim, list(forms)) | (np.isin(sec, list(forms)) & (sec >= 0))
+            ms.append(m)
+        ok = ms[0][: T - n + 1].copy()
+        for i in range(1, n):
+            ok &= ms[i][i: T - n + 1 + i]
+        ok &= doc_of[: T - n + 1] == doc_of[n - 1:]
+        want = {(int(doc_of[t]), int(pos_of[t])) for t in np.nonzero(ok)[0]}
+        assert got == want, q
+
+
+def test_single_stop_word_unsupported(small_world):
+    eng = small_world["engine"]
+    # surface 0 maps to the most frequent basic form (a stop word)
+    plan = eng.plan([0])
+    assert any(not sp.supported for sp in plan.subplans)
+
+
+def test_long_stop_phrase_split(small_world):
+    """Stop phrases longer than MaxLength are split into parts and combined."""
+    corpus = small_world["corpus"]
+    idx = small_world["index"]
+    eng = small_world["engine"]
+    tf_stop = None
+    # find a run of 7 consecutive stop tokens in the corpus
+    from repro.core.builder import expand_token_forms
+    tf = expand_token_forms(corpus, idx.lexicon, idx.analyzer)
+    run = 0
+    start = None
+    for t in range(corpus.n_tokens):
+        run = run + 1 if tf.stop_mask[t] else 0
+        if run >= 7:
+            start = t - 6
+            break
+    if start is None:
+        pytest.skip("no 7-stop run in test corpus")
+    doc_of = corpus.doc_ids_per_token()
+    q = corpus.tokens[start:start + 7].tolist()
+    r = eng.search(q, mode="phrase")
+    assert int(doc_of[start]) in set(r.doc.tolist())
