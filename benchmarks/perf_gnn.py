@@ -41,7 +41,7 @@ def measure_halo(mesh, n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
 
     boundary_frac = B / Nl (1.0 = worst case: every local node is boundary;
     locality-aware partitions measured on scaled graphs reach ~0.6)."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from repro.models import gnn
     from repro.train import optimizer as opt
     from repro.launch.steps import OPT_CFG

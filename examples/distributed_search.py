@@ -16,6 +16,8 @@ import jax                                                        # noqa: E402
 import jax.numpy as jnp                                           # noqa: E402
 import numpy as np                                                # noqa: E402
 
+import repro.compat                                               # noqa: E402
+
 from repro.core import (CorpusConfig, LexiconConfig, build_all,   # noqa: E402
                         generate_corpus, make_lexicon_and_analyzer)
 from repro.dist.collectives import make_ring_all_reduce           # noqa: E402
@@ -25,8 +27,8 @@ from repro.serve.search_serve import (SearchServeConfig,          # noqa: E402
 
 def main():
     print(f"devices: {len(jax.devices())}")
-    mesh = jax.make_mesh((8, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = repro.compat.make_mesh((8, 1), ("data", "model"),
+                         axis_types=repro.compat.auto_axis_types(2))
 
     # 8 document shards: build one index per shard (separate doc ranges)
     lex_cfg = LexiconConfig(n_surface=8000, n_base=6000, n_stop=200,

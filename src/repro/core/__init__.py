@@ -1,5 +1,6 @@
 """Core: the paper's additional-index phrase-search system."""
 from repro.core.analyzer import Analyzer, make_lexicon_and_analyzer
+from repro.core.batch_executor import BatchDeviceIndex, BatchExecutor
 from repro.core.builder import IndexParams, IndexSet, build_all
 from repro.core.corpus import Corpus, CorpusConfig, generate_corpus
 from repro.core.engine import (AdditionalIndexEngine, OrdinaryEngine,
@@ -11,6 +12,7 @@ from repro.core.planner import MODE_NEAR, MODE_PHRASE, Planner, QueryPlan
 
 __all__ = [
     "Analyzer", "make_lexicon_and_analyzer",
+    "BatchDeviceIndex", "BatchExecutor",
     "IndexParams", "IndexSet", "build_all",
     "Corpus", "CorpusConfig", "generate_corpus",
     "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_search",

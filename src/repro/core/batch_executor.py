@@ -1,0 +1,472 @@
+"""Batched plan-compiled execution: a whole query batch in one jit'd call.
+
+The flexible `Executor` (executor.py) walks plans in Python — one device
+dispatch per fetch group, one host↔device round-trip per query.  That is
+correct but leaves the paper's order-of-magnitude win on the table at serving
+time.  This module makes batched search the first-class engine path:
+
+1. **Tensorize** — every supported subplan of every query in the batch
+   becomes one *task* row of fixed-shape fetch tables (schema in
+   core/fetch_tables.py): `start/length/offset/req_dist/max_abs :
+   [T, G, F]`, `band/active : [T, G]`, near-stop checks `[T, C, M]`.
+   Group 0 is the seed (the near-stop-checked pivot when present, else the
+   smallest band-0 group — the same seed rule as the flexible executor);
+   groups 1..G-1 constrain it.  F fetch slots per group carry unions over
+   morphological forms / expanded orientations / stop-phrase parts.
+
+2. **Execute** — one jit'd call per shape bucket: gather from a unified
+   posting arena (basic | expanded | stop | first | ordinary concatenated,
+   so a fetch is a single dynamic-slice) → global 63-bit key construction →
+   per-doc-shard **int32 re-basing** (`(doc - shard_base) << 17 | pos'`, the
+   re-basing intersect.py's docstring promises: TPU vector units have no
+   int64 lanes) → k-way banded intersection via `ops.banded_intersect_rows`
+   (Pallas kernel with per-row dynamic bands, or the `searchsorted` ref path)
+   → OR of per-shard hits.  Near-stop (type 4) checks mask the seed's keys
+   in the same call.
+
+3. **Merge** — host-side, mirroring `Executor.execute` exactly: subplan
+   results are unioned per query; a subplan with no positional hits falls
+   back to its distance-disregarding doc-only task (paper step 3), with
+   fallback postings counted only when triggered.
+
+Shape discipline: tasks are bucketed by (G, F, P, C, M) with `_next_pow2`
+padding on every axis and chunked to a gather budget, so the jit compile
+cache stays small while padding waste stays bounded.  Queries that exceed
+the table caps (very long unions, > G_CAP groups, giant posting lists) or an
+index whose positions overflow the 17-bit packed domain fall back to the
+flexible executor per plan — identical results, just not batched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.builder import IndexSet
+from repro.core.executor import (SENTINEL, Executor, SearchResult,
+                                 _next_pow2, merge_subplan_keys)
+from repro.core.fetch_tables import (DOCS_PER_SHARD, NO_DIST, TABLE_POS_BITS,
+                                     alloc_batch_tables, pack_ns_checks)
+from repro.core.planner import MODE_PHRASE, QueryPlan
+from repro.core.postings import PHRASE_BIAS, POS_BITS
+from repro.kernels.ops import I32_SENTINEL, banded_intersect_rows
+
+# table caps: a task exceeding these routes its whole plan to the flexible
+# executor (rare: >8 AND-groups or >8 unioned fetches per slot)
+G_CAP = 8
+F_CAP = 8
+P_CAP = 1 << 15
+P_FLOOR = 256
+GATHER_BUDGET = 1 << 23        # max T*G*F*P elements per jit'd gather
+
+
+class BatchDeviceIndex:
+    """All five posting streams concatenated into one device arena."""
+
+    def __init__(self, index: IndexSet):
+        b = index.basic.occurrences
+        e = index.expanded.pairs
+        s = index.stop_phrase.phrases
+        f = index.basic.first_occ
+        o = index.ordinary
+
+        docs, poss, dists = [], [], []
+        self.bases = {}
+        off = 0
+        for name, doc, pos, dist in (
+                ("basic", b.columns["doc"], b.columns["pos"], None),
+                ("expanded", e.columns["doc"], e.columns["pos"], e.columns["dist"]),
+                ("stop", s.columns["doc"], s.columns["pos"], None),
+                ("first", f.columns["doc"], f.columns["pos"], None),
+                ("ordinary", o.columns["doc"], o.columns["pos"], None)):
+            self.bases[name] = off
+            off += len(doc)
+            docs.append(np.asarray(doc, np.int32))
+            poss.append(np.asarray(pos, np.int32))
+            dists.append(np.asarray(dist, np.int8) if dist is not None
+                         else np.zeros(len(doc), np.int8))
+        self.arena_doc = jnp.asarray(np.concatenate(docs))
+        self.arena_pos = jnp.asarray(np.concatenate(poss))
+        self.arena_dist = jnp.asarray(np.concatenate(dists))
+        self.near_stop = jnp.asarray(np.asarray(index.basic.near_stop, np.int16))
+        self.max_distance = int(index.basic.max_distance)
+        self.n_docs = int(max((int(d.max()) + 1 for d in docs if len(d)),
+                              default=0))
+        self.max_pos = int(max((int(p.max()) for p in poss if len(p)),
+                               default=0))
+        self.n_shards = max(1, -(-self.n_docs // DOCS_PER_SHARD))
+
+
+@dataclasses.dataclass
+class _Task:
+    plan_i: int            # which plan in the batch
+    subplan_i: int
+    fallback: bool         # doc-only fallback task (stream-1)
+    groups: list           # seed-first ordered FetchGroups
+    stop_checks: tuple     # seed group's near-stop checks
+    mode: str = MODE_PHRASE
+    sortfree: bool = False  # constraint keys already ascending (see below)
+    # filled after execution:
+    keys: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class _Bucket:
+    G: int
+    F: int
+    P0: int                # seed pad (rarest list)
+    P: int                 # constraint-group pad
+    C: int
+    M: int
+    sortfree: bool
+    tasks: list = dataclasses.field(default_factory=list)
+
+
+@partial(jax.jit, static_argnames=("P0", "P", "n_shards", "impl", "interpret",
+                                   "presorted"))
+def _batch_step(arena_doc, arena_pos, arena_dist, near_stop, t, *,
+                P0: int, P: int, n_shards: int, impl: str, interpret: bool,
+                presorted: bool = False):
+    """One shape bucket, one call: gather → keys → per-shard int32 rebase →
+    banded rows intersection.  The seed (group 0) gets its own pad P0 —
+    the planner seeds with the RAREST list, so the membership probe side
+    stays narrow while constraint groups pad to P.  Returns (seed global
+    keys [T, F*P0] int64, found [T, F*P0] bool)."""
+    T, G, F = t["start"].shape
+    A = arena_doc.shape[0]
+    dt1 = t["doc_task"]
+
+    def gather(sl, Pw):
+        """Keys for group slice `sl` padded to Pw: [T, g, F, Pw]."""
+        start, length = t["start"][:, sl], t["length"][:, sl]
+        offset, req = t["offset"][:, sl], t["req_dist"][:, sl]
+        maxab, pfd = t["max_abs"][:, sl], t["pivot_from_dist"][:, sl]
+        iota = jnp.arange(Pw, dtype=jnp.int32)
+        idx = jnp.clip(start[..., None] + iota, 0, A - 1)
+        valid = iota < length[..., None]
+        doc = arena_doc[idx]
+        pos = arena_pos[idx]
+        dist = arena_dist[idx].astype(jnp.int32)
+        valid &= (req[..., None] == NO_DIST) | (dist == req[..., None])
+        valid &= jnp.abs(dist) <= maxab[..., None]
+        valid &= t["active"][:, sl, None, None]
+        # global 63-bit keys (identical to the flexible executor's packing)
+        pos_eff = pos + jnp.where(pfd[..., None], dist, 0)
+        low = pos_eff.astype(jnp.int64) - offset[..., None] + PHRASE_BIAS
+        doc64 = doc.astype(jnp.int64)
+        gk = jnp.where(dt1[:, None, None, None], doc64,
+                       (doc64 << POS_BITS) | low)
+        return idx, jnp.where(valid, gk, SENTINEL)
+
+    idx0, gk0 = gather(slice(0, 1), P0)
+    gk0 = gk0[:, 0]                                            # [T, F, P0]
+    _, gkc = gather(slice(1, None), P)                         # [T, G-1, F, P]
+
+    # near-stop verification on the seed group (type-4 pivot checks)
+    C = t["ns_packed"].shape[1]
+    if C > 0:
+        nb = near_stop.shape[0]
+        ns = near_stop[jnp.clip(idx0[:, 0], 0, nb - 1)]        # [T, F, P0, K]
+        ok = jnp.ones((T, F, P0), bool)
+        Mns = t["ns_packed"].shape[2]
+        for c in range(C):
+            hit_c = jnp.zeros((T, F, P0), bool)
+            for m in range(Mns):
+                tgt = t["ns_packed"][:, c, m][:, None, None, None]
+                val = t["ns_valid"][:, c, m][:, None, None]
+                hit_c |= (ns == tgt).any(axis=-1) & val
+            has_check = t["ns_valid"][:, c].any(axis=-1)[:, None, None]
+            ok &= hit_c | ~has_check
+        gk0 = jnp.where(ok, gk0, SENTINEL)
+
+    m26 = (1 << POS_BITS) - 1
+
+    def rebase(gk, dt_b, s):
+        """Per-doc-shard int32 re-basing (doc-only keys ARE doc ids and are
+        resolved on shard 0 only)."""
+        base = s * DOCS_PER_SHARD
+        dglob = jnp.where(dt_b, gk, gk >> POS_BITS)
+        in_shard = (dglob >= base) & (dglob < base + DOCS_PER_SHARD) \
+            & (gk < SENTINEL)
+        if s > 0:
+            in_shard &= ~dt_b
+        else:
+            in_shard = jnp.where(dt_b, gk < SENTINEL, in_shard)
+        k32 = jnp.where(dt_b, gk, ((dglob - base) << TABLE_POS_BITS) | (gk & m26))
+        return jnp.where(in_shard, k32, I32_SENTINEL).astype(jnp.int32)
+
+    a64 = gk0.reshape(T, F * P0)
+    found = jnp.zeros((T, F * P0), bool)
+    for s in range(n_shards):
+        a32 = rebase(gk0, dt1[:, None, None], s).reshape(T, F * P0)
+        if G > 1:
+            b32 = rebase(gkc, dt1[:, None, None, None], s).reshape(T, G - 1, F * P)
+            if not presorted:
+                b32 = jnp.sort(b32, axis=-1)
+            a_rows = jnp.broadcast_to(a32[:, None], (T, G - 1, F * P0))
+            hit = banded_intersect_rows(
+                a_rows.reshape(T * (G - 1), F * P0),
+                b32.reshape(T * (G - 1), F * P),
+                jnp.broadcast_to(t["band"][:, 1:], (T, G - 1)).reshape(-1),
+                implementation=impl, interpret=interpret)
+            hit = hit.reshape(T, G - 1, F * P0) | ~t["active"][:, 1:, None]
+            shard_found = hit.all(axis=1)
+        else:
+            shard_found = jnp.ones((T, F * P0), bool)
+        found |= shard_found & (a32 != I32_SENTINEL)
+    return a64, found
+
+
+class BatchExecutor:
+    """Executes a batch of QueryPlans with result parity vs. the flexible
+    `Executor` (same doc/pos sets, same postings accounting, same fallback
+    semantics), but in O(#shape-buckets) jit dispatches instead of
+    O(#queries * #groups)."""
+
+    def __init__(self, index: IndexSet, flex: Executor | None = None,
+                 impl: str = "ref", interpret: bool = True):
+        self.index = index
+        self.dev = BatchDeviceIndex(index)
+        self.flex = flex or Executor(index)
+        self.impl = impl
+        self.interpret = interpret
+        # packed-key safety: positions (plus bias and the widest band) must
+        # fit the 17-bit in-doc field or cross-doc false positives appear
+        self._pos_budget = (1 << TABLE_POS_BITS) - PHRASE_BIAS \
+            - self.dev.max_pos - self.dev.max_distance
+
+    # -- tensorization ------------------------------------------------------
+
+    def _task_sortfree(self, ordered) -> bool:
+        """True when every constraint group's key row comes out of the
+        gather already ascending, so the device sort can be skipped: single
+        fetch per non-seed group (multi-fetch unions interleave), no
+        dist/pivot masks (holes in the middle break order — the arena is
+        (doc, pos)-sorted per fetch slice and the key packings are monotone
+        in (doc, pos); invalid-tail sentinels sort last), and a single doc
+        shard (out-of-shard masking would also punch mid-row holes)."""
+        if self.dev.n_shards != 1:
+            return False
+        for g in ordered[1:]:
+            if len(g.fetches) > 1:
+                return False
+            for f in g.fetches:
+                if (f.required_dist is not None or f.max_abs_dist is not None
+                        or f.pivot_from_dist):
+                    return False
+        return True
+
+    def _order_groups(self, groups):
+        """Seed-first ordering; None when no valid seed exists."""
+        ns = [g for g in groups
+              if any(f.stop_checks for f in g.fetches)]
+        if ns:
+            seed = ns[0]
+        else:
+            band0 = [g for g in groups if g.band == 0]
+            if not band0:
+                return None
+            seed = min(band0, key=lambda g: sum(f.length for f in g.fetches))
+        return [seed] + [g for g in groups if g is not seed]
+
+    def _task_fits(self, groups) -> bool:
+        if len(groups) > G_CAP:
+            return False
+        for g in groups:
+            if len(g.fetches) > F_CAP:
+                return False
+            if int(g.band) > self._pos_budget:
+                return False
+            for f in g.fetches:
+                if f.length > P_CAP:
+                    return False
+                if f.stream == "first" and not _is_first_group(g):
+                    return False
+        return True
+
+    def _build_tasks(self, plan_i: int, plan: QueryPlan, tasks: list) -> bool:
+        """Append tasks for one plan; False => route plan to the flexible
+        executor (table caps exceeded)."""
+        if self._pos_budget <= 0:
+            return False
+        for sp_i, sp in enumerate(plan.subplans):
+            if not sp.supported:
+                continue
+            main_dead = (not sp.groups) or any(not g.fetches for g in sp.groups)
+            if not main_dead:
+                ordered = self._order_groups(sp.groups)
+                if ordered is None or not self._task_fits(ordered):
+                    return False
+                checks = ordered[0].fetches[0].stop_checks
+                if any(f.stop_checks != checks for f in ordered[0].fetches) or \
+                   any(f.stop_checks for g in ordered[1:] for f in g.fetches):
+                    return False
+                tasks.append(_Task(plan_i, sp_i, False, ordered, checks,
+                                   mode=sp.mode,
+                                   sortfree=self._task_sortfree(ordered)))
+            if sp.fallback_groups:
+                fb_dead = any(not g.fetches for g in sp.fallback_groups)
+                if not fb_dead:
+                    ordered = self._order_groups(sp.fallback_groups)
+                    if ordered is None or not self._task_fits(ordered):
+                        return False
+                    # fallback tasks are validated eagerly (the flex-routing
+                    # decision must not depend on results) but executed
+                    # lazily: only when the main task comes back empty
+                    tasks.append(_Task(plan_i, sp_i, True, ordered, (),
+                                       mode=MODE_PHRASE,
+                                       sortfree=self._task_sortfree(ordered)))
+        return True
+
+    def _bucket_key(self, task: _Task):
+        G = max(2, _next_pow2(len(task.groups), floor=2))
+        F = _next_pow2(max(len(g.fetches) for g in task.groups), floor=1)
+        P0 = _next_pow2(max((f.length for f in task.groups[0].fetches),
+                            default=1), floor=P_FLOOR)
+        P = _next_pow2(max((f.length for g in task.groups[1:]
+                            for f in g.fetches), default=1), floor=P_FLOOR)
+        # near-stop slots are padded to coarse buckets (invalid slots are
+        # inert) so check-count variation doesn't multiply compile shapes
+        if task.stop_checks:
+            C = _next_pow2(len(task.stop_checks), floor=4)
+            M = _next_pow2(max(len(ids) for _, ids in task.stop_checks), floor=2)
+        else:
+            C = M = 0
+        # only big slabs are worth a separate sort-free compile shape; for
+        # small P the sort is cheap and splitting buckets costs more calls
+        sortfree = task.sortfree and P >= 2048
+        return (G, F, min(P0, P_CAP), min(P, P_CAP), C, M, sortfree)
+
+    def _tensorize_bucket(self, bucket: _Bucket, T_pad: int) -> dict:
+        t = alloc_batch_tables(T_pad, bucket.G, bucket.F, bucket.C, bucket.M)
+        bases = self.dev.bases
+        for ti, task in enumerate(bucket.tasks):
+            t["doc_task"][ti] = task.fallback
+            if task.stop_checks:
+                pack_ns_checks(t, ti, task.stop_checks, self.dev.max_distance)
+            for gi, g in enumerate(task.groups):
+                t["band"][ti, gi] = g.band
+                t["active"][ti, gi] = True
+                for fi, f in enumerate(g.fetches):
+                    t["start"][ti, gi, fi] = f.start + bases[f.stream]
+                    t["length"][ti, gi, fi] = f.length
+                    # mirror Executor._fetch_keys key selection
+                    if f.stream == "first":
+                        continue                        # doc key: no offset
+                    phrase_keyed = (
+                        f.stream == "stop"
+                        or (f.stream == "expanded" and f.required_dist is not None)
+                        or (f.stream in ("basic", "ordinary")
+                            and task.mode == MODE_PHRASE))
+                    if phrase_keyed:
+                        t["offset"][ti, gi, fi] = f.offset
+                    if f.required_dist is not None:
+                        t["req_dist"][ti, gi, fi] = f.required_dist
+                    if f.max_abs_dist is not None:
+                        t["max_abs"][ti, gi, fi] = f.max_abs_dist
+                    t["pivot_from_dist"][ti, gi, fi] = bool(f.pivot_from_dist)
+        return t
+
+    # -- execution ----------------------------------------------------------
+
+    def _run_tasks(self, tasks: list):
+        buckets: dict = {}
+        for task in tasks:
+            key = self._bucket_key(task)
+            b = buckets.setdefault(key, _Bucket(G=key[0], F=key[1], P0=key[2],
+                                                P=key[3], C=key[4], M=key[5],
+                                                sortfree=key[6]))
+            b.tasks.append(task)
+        d = self.dev
+        for (G, F, P0, P, C, M, sortfree), b in buckets.items():
+            per_task = F * P0 + (G - 1) * F * P
+            if C > 0:                  # near-stop gather adds an [F, P0, K] slab
+                per_task += F * P0 * int(d.near_stop.shape[1])
+            chunk = max(1, GATHER_BUDGET // per_task)
+            for lo in range(0, len(b.tasks), chunk):
+                part = b.tasks[lo:lo + chunk]
+                # tight T padding: big-P buckets usually hold 1-4 tasks, and
+                # padding them to a large T multiplies the gather/sort slab;
+                # the extra pow2 compile variants are absorbed by warm-up
+                T_pad = _next_pow2(len(part), floor=4)
+                t = self._tensorize_bucket(
+                    dataclasses.replace(b, tasks=part), T_pad)
+                tj = {k: jnp.asarray(v) for k, v in t.items()}
+                a64, found = _batch_step(
+                    d.arena_doc, d.arena_pos, d.arena_dist, d.near_stop, tj,
+                    P0=P0, P=P, n_shards=d.n_shards, impl=self.impl,
+                    interpret=self.interpret, presorted=sortfree)
+                a64 = np.asarray(a64)
+                found = np.asarray(found)
+                # one pass over the hit mask instead of T boolean-indexings
+                rows, cols = np.nonzero(found)
+                keys = a64[rows, cols]
+                splits = np.searchsorted(rows, np.arange(1, len(part)))
+                for ti, task_keys in enumerate(np.split(keys, splits)):
+                    part[ti].keys = task_keys
+
+    # -- merge (mirrors Executor.execute) -----------------------------------
+
+    def _merge_plan(self, plan: QueryPlan, task_map: dict,
+                    max_results: int | None) -> SearchResult:
+        all_keys, doc_only_keys = [], []
+        postings = 0
+        used_fallback = False
+        types = []
+        for sp_i, sp in enumerate(plan.subplans):
+            if not sp.supported:
+                continue
+            types.append(sp.qtype)
+            postings += sp.postings_read
+            main = task_map.get((sp_i, False))
+            keys = main.keys if main is not None else np.empty(0, np.int64)
+            if len(keys) == 0 and sp.fallback_groups:
+                used_fallback = True
+                postings += sum(g.postings_read for g in sp.fallback_groups)
+                fb = task_map.get((sp_i, True))
+                dkeys = fb.keys if fb is not None else np.empty(0, np.int64)
+                doc_only_keys.append(dkeys)
+            else:
+                all_keys.append(keys)
+        return merge_subplan_keys(all_keys, doc_only_keys, postings,
+                                  used_fallback, tuple(types), max_results)
+
+    # -- public API ---------------------------------------------------------
+
+    def execute_batch(self, plans: list[QueryPlan],
+                      max_results: int | None = None) -> list[SearchResult]:
+        tasks: list[_Task] = []
+        flex_plans: dict[int, QueryPlan] = {}
+        plan_tasks: dict[int, list] = {}
+        for i, plan in enumerate(plans):
+            start = len(tasks)
+            if self._build_tasks(i, plan, tasks):
+                plan_tasks[i] = tasks[start:]
+            else:
+                del tasks[start:]
+                flex_plans[i] = plan
+        # round 1: main tasks; round 2: only the fallback tasks whose main
+        # result came back empty (mirrors the flexible executor, which never
+        # touches stream 1 when the positional search hits)
+        self._run_tasks([t for t in tasks if not t.fallback])
+        main_keys = {(t.plan_i, t.subplan_i): t.keys
+                     for t in tasks if not t.fallback}
+        needed = [t for t in tasks if t.fallback
+                  and len(main_keys.get((t.plan_i, t.subplan_i),
+                                        np.empty(0))) == 0]
+        self._run_tasks(needed)
+        out: list[SearchResult | None] = [None] * len(plans)
+        for i, plan in enumerate(plans):
+            if i in flex_plans:
+                out[i] = self.flex.execute(plan, max_results=max_results)
+            else:
+                task_map = {(t.subplan_i, t.fallback): t for t in plan_tasks[i]}
+                out[i] = self._merge_plan(plan, task_map, max_results)
+        return out
+
+
+def _is_first_group(g) -> bool:
+    return all(f.stream == "first" for f in g.fetches)

@@ -19,6 +19,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.analyzer import Analyzer
+from repro.core.batch_executor import BatchExecutor
 from repro.core.builder import IndexSet, expand_token_forms
 from repro.core.corpus import Corpus
 from repro.core.executor import DeviceIndex, Executor, SearchResult
@@ -27,13 +28,56 @@ from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE, Planner,
                                 QueryPlan, ResolvedFetch, SubPlan)
 
 
-class AdditionalIndexEngine:
-    """The paper's engine: additional indexes + Type 1-4 query processing."""
+def _plan_batch(plan_fn, queries, modes, window):
+    if isinstance(modes, str):
+        modes = [modes] * len(queries)
+    if len(modes) != len(queries):
+        raise ValueError("modes must be a str or match len(queries)")
+    return [plan_fn(list(q), mode=m, window=window)
+            for q, m in zip(queries, modes)]
 
-    def __init__(self, index: IndexSet):
+
+class _BatchSearchMixin:
+    """Shared lazy batch-executor plumbing: the batched arena duplicates the
+    posting streams on device, so per-query-only users never pay for it."""
+
+    def _init_batch(self, batch_impl: str, interpret: bool):
+        self._batch_impl = batch_impl
+        self._interpret = interpret
+        self._batch_executor = None
+
+    @property
+    def batch_executor(self) -> BatchExecutor:
+        if self._batch_executor is None:
+            self._batch_executor = BatchExecutor(
+                self.index, flex=self.executor, impl=self._batch_impl,
+                interpret=self._interpret)
+        return self._batch_executor
+
+    def search_batch(self, queries, modes: str | list = MODE_PHRASE,
+                     window: int | None = None,
+                     max_results: int | None = None) -> list[SearchResult]:
+        """Batched search: queries = sequence of surface-id sequences;
+        modes = one mode for all or a per-query list.  Same results as
+        per-query `search`, one jit'd call per shape bucket."""
+        plans = _plan_batch(self.plan, queries, modes, window)
+        return self.batch_executor.execute_batch(plans, max_results=max_results)
+
+
+class AdditionalIndexEngine(_BatchSearchMixin):
+    """The paper's engine: additional indexes + Type 1-4 query processing.
+
+    `search` runs one query through the flexible executor; `search_batch`
+    runs a whole batch through the plan-compiled batched executor (one jit'd
+    call per shape bucket; identical results — see batch_executor.py).
+    """
+
+    def __init__(self, index: IndexSet, batch_impl: str = "ref",
+                 interpret: bool = True):
         self.index = index
         self.planner = Planner(index)
         self.executor = Executor(index)
+        self._init_batch(batch_impl, interpret)
 
     def search(self, surface_ids, mode: str = MODE_PHRASE,
                window: int | None = None, max_results: int | None = None) -> SearchResult:
@@ -44,12 +88,14 @@ class AdditionalIndexEngine:
         return self.planner.plan(list(surface_ids), mode=mode, window=window)
 
 
-class OrdinaryEngine:
+class OrdinaryEngine(_BatchSearchMixin):
     """Sphinx-style baseline: one inverted index, full posting-list reads."""
 
-    def __init__(self, index: IndexSet):
+    def __init__(self, index: IndexSet, batch_impl: str = "ref",
+                 interpret: bool = True):
         self.index = index
         self.executor = Executor(index)
+        self._init_batch(batch_impl, interpret)
         self._counts = index.ordinary.counts()
 
     def _slot_group(self, slot, forms, band) -> FetchGroup:

@@ -65,6 +65,37 @@ class SearchResult:
     subplan_types: tuple = ()
 
 
+def merge_subplan_keys(all_keys: list, doc_only_keys: list, postings: int,
+                       used_fallback: bool, types: tuple,
+                       max_results: int | None) -> SearchResult:
+    """Union per-subplan key sets into a SearchResult.
+
+    Shared by the flexible and batched executors — their result parity
+    depends on this tail being literally the same code.  Positional keys win
+    over doc-only fallback keys; keys are unpacked doc/pos via the global
+    63-bit codec."""
+    keys = (np.unique(np.concatenate(all_keys)) if all_keys
+            else np.empty(0, np.int64))
+    if len(keys):
+        doc = (keys >> POS_BITS).astype(np.int32)
+        pos = ((keys & ((1 << POS_BITS) - 1)) - PHRASE_BIAS).astype(np.int32)
+        doc_only = False
+    elif doc_only_keys:
+        docs = np.unique(np.concatenate(doc_only_keys))
+        doc = docs.astype(np.int32)
+        pos = np.full(len(doc), -1, dtype=np.int32)
+        doc_only = True
+    else:
+        doc = np.empty(0, np.int32)
+        pos = np.empty(0, np.int32)
+        doc_only = False
+    if max_results is not None:
+        doc, pos = doc[:max_results], pos[:max_results]
+    return SearchResult(doc=doc, pos=pos, postings_read=postings,
+                        used_fallback=used_fallback, doc_only=doc_only,
+                        subplan_types=tuple(types))
+
+
 class DeviceIndex:
     """Index columns as device (jnp) arrays."""
 
@@ -198,23 +229,5 @@ class Executor:
                 doc_only_keys.append(dkeys)
             else:
                 all_keys.append(keys)
-        keys = (np.unique(np.concatenate(all_keys)) if all_keys
-                else np.empty(0, np.int64))
-        if len(keys):
-            doc = (keys >> POS_BITS).astype(np.int32)
-            pos = ((keys & ((1 << POS_BITS) - 1)) - PHRASE_BIAS).astype(np.int32)
-            doc_only = False
-        elif doc_only_keys:
-            docs = np.unique(np.concatenate(doc_only_keys))
-            doc = docs.astype(np.int32)
-            pos = np.full(len(doc), -1, dtype=np.int32)
-            doc_only = True
-        else:
-            doc = np.empty(0, np.int32)
-            pos = np.empty(0, np.int32)
-            doc_only = False
-        if max_results is not None:
-            doc, pos = doc[:max_results], pos[:max_results]
-        return SearchResult(doc=doc, pos=pos, postings_read=postings,
-                            used_fallback=used_fallback, doc_only=doc_only,
-                            subplan_types=tuple(types))
+        return merge_subplan_keys(all_keys, doc_only_keys, postings,
+                                  used_fallback, tuple(types), max_results)

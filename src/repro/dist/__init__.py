@@ -1,0 +1,4 @@
+"""Distribution substrate: explicit collectives (ring all-reduce, int8
+gradient compression with error feedback), production sharding specs for the
+launch cells, and fault tolerance (supervised training with restart +
+straggler-mitigating shard dispatch)."""

@@ -1,0 +1,188 @@
+"""Production sharding specs for the launch cells (launch/steps.py).
+
+Spec trees are derived from the *actual* parameter structure
+(`jax.eval_shape` over init_params) so every leaf is covered regardless of
+config flags (qkv_bias, MoE, tied embeddings, recsys model family), and a
+dimension is only sharded when it divides the mesh axis — otherwise that
+leaf falls back to replication instead of failing to lower.
+
+Layouts:
+  transformer 2d (default): Megatron TP on 'model' (wq/wk/wv/wg/wu column-
+      parallel, wo/wd row-parallel, vocab-sharded embedding), DP on
+      'data' (x 'pod').
+  transformer fsdp: every leaf sharded over ALL mesh axes on its largest
+      divisible dimension (ZeRO-3-style).
+  recsys: embedding tables row-sharded over all axes; the dense tower is
+      tiny and stays replicated.
+  gnn: rows (nodes/edges) partitioned over every axis — the graph doesn't
+      have a 'model' dimension worth TP.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def dp_axis(mesh):
+    """The data-parallel mesh axes ('pod' folds into DP when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def gnn_dp_axis(mesh):
+    """GNNs partition rows on ALL axes (no tensor-parallel dimension)."""
+    return tuple(mesh.axis_names)
+
+
+def _axes_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _shard_dim(shape, dim: int, axes, n: int) -> P:
+    """P sharding `dim` over `axes` when divisible, else fully replicated."""
+    if dim < len(shape) and shape[dim] % n == 0 and shape[dim] >= n:
+        spec = [None] * len(shape)
+        spec[dim] = axes
+        return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def _largest_divisible(shape, axes, n: int) -> P:
+    dims = sorted(range(len(shape)), key=lambda d: -shape[d])
+    for d in dims:
+        if shape[d] % n == 0 and shape[d] >= n:
+            return _shard_dim(shape, d, axes, n)
+    return P(*([None] * len(shape)))
+
+
+def _spec_tree(struct, rule):
+    """Map (key-path, ShapeDtypeStruct) -> P over the whole param tree."""
+    return jax.tree_util.tree_map_with_path(rule, struct)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# transformer
+# ---------------------------------------------------------------------------
+
+# Megatron roles: which dim of the (layer-stacked) weight carries the
+# TP-sharded axis.  Column-parallel = output dim; row-parallel = input dim.
+_TFM_COL = {"wq", "wk", "wv", "wg", "wu", "bq", "bk", "bv"}
+_TFM_ROW = {"wo", "wd"}
+
+
+def transformer_param_specs(cfg, mesh, layout: str = "2d"):
+    from repro.models import transformer as tfm
+    struct = jax.eval_shape(functools.partial(tfm.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    if layout == "fsdp":
+        axes = tuple(mesh.axis_names)
+        n = _axes_size(mesh, axes)
+        return _spec_tree(struct, lambda p, l: _largest_divisible(l.shape, axes, n))
+
+    tp = "model" if "model" in mesh.axis_names else None
+    if tp is None:
+        return _spec_tree(struct, lambda p, l: P(*([None] * l.ndim)))
+    n = mesh.shape[tp]
+    moe = bool(getattr(cfg, "moe", None))
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name in ("embed", "lm_head"):
+            # vocab-sharded (embed: [V, D] dim 0; lm_head: [D, V] dim 1)
+            vdim = 0 if name == "embed" else 1
+            return _shard_dim(shape, vdim, tp, n)
+        in_layer = any(getattr(e, "key", None) == "layers" for e in path)
+        if in_layer and name in _TFM_COL:
+            return _shard_dim(shape, len(shape) - 1, tp, n)
+        if in_layer and name in _TFM_ROW:
+            # MoE experts: [Lx, E, F, D] -> prefer expert dim, else F
+            if moe and len(shape) == 4:
+                sp = _shard_dim(shape, 1, tp, n)
+                return sp if sp != P(*([None] * 4)) else _shard_dim(shape, 2, tp, n)
+            return _shard_dim(shape, len(shape) - 2, tp, n)
+        if in_layer and moe and name in ("wg", "wu"):
+            sp = _shard_dim(shape, 1, tp, n)
+            return sp if sp != P(*([None] * len(shape))) else _shard_dim(shape, len(shape) - 1, tp, n)
+        return P(*([None] * len(shape)))      # norms, router, biases w/o TP
+
+    return _spec_tree(struct, rule)
+
+
+def transformer_batch_specs(mesh) -> dict:
+    dp = dp_axis(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def transformer_cache_specs(cfg, mesh, batch: int) -> dict:
+    """KV cache [Lx, B, S, Hkv, hd]: batch-sharded on DP when divisible,
+    else replicated (serving small batches on big meshes)."""
+    dp = dp_axis(mesh)
+    n = _axes_size(mesh, dp)
+    bspec = dp if (batch % n == 0 and batch >= n) else None
+    spec = P(None, bspec, None, None, None)
+    return {"k": spec, "v": spec}
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+_REC_TABLES = {"table", "item_table", "w_lin"}
+
+
+def recsys_param_specs(cfg, mesh):
+    from repro.models import recsys as rec
+    struct = jax.eval_shape(functools.partial(rec.init_params, cfg),
+                            jax.random.PRNGKey(0))
+    axes = tuple(mesh.axis_names)
+    n = _axes_size(mesh, axes)
+
+    def rule(path, leaf):
+        if _leaf_name(path) in _REC_TABLES:
+            return _shard_dim(leaf.shape, 0, axes, n)
+        return P(*([None] * leaf.ndim))
+
+    return _spec_tree(struct, rule)
+
+
+def recsys_batch_specs(cfg, mesh, retrieval: bool = False) -> dict:
+    dp = dp_axis(mesh)
+    out = {"ids": P(dp, None), "label": P(dp),
+           "hist": P(dp, None), "target": P(dp)}
+    if retrieval:
+        out["cand"] = P()        # candidate set replicated; scores DP-sharded
+    return out
+
+
+# ---------------------------------------------------------------------------
+# gnn
+# ---------------------------------------------------------------------------
+
+def gin_batch_specs(mesh) -> dict:
+    ax = gnn_dp_axis(mesh)
+    return {
+        "nodes": P(ax, None),
+        "src": P(ax),
+        "dst": P(ax),
+        "edge_mask": P(ax),
+        "labels": P(ax),
+        "label_mask": P(ax),
+        "node_mask": P(ax),
+        "send_idx": P(ax),
+        "graph_id": P(ax),
+    }

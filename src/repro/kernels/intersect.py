@@ -17,8 +17,6 @@ band = W  -> positional window join (word-set-with-distance queries)
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -28,7 +26,13 @@ LANES = 128
 I32_SENTINEL = jnp.iinfo(jnp.int32).max
 
 
-def _kernel(lo_ref, nt_ref, a_ref, b_ref, o_ref, *, band: int):
+def _kernel_rows(lo_ref, nt_ref, band_ref, a_ref, b_ref, o_ref):
+    """Dense banded membership on one (a-block, b-block) tile pair: any b
+    within [a - band, a + band].  The band is scalar-prefetched per a-block,
+    so one pallas_call serves both the single-list op (constant band
+    broadcast over blocks) and a whole batch of independent (a, b, band) row
+    pairs (the batch executor's layout: each row = one fetch-group
+    membership test, bands mixing 0 (phrase) and W (word-set window))."""
     i = pl.program_id(0)
     k = pl.program_id(1)
 
@@ -38,13 +42,47 @@ def _kernel(lo_ref, nt_ref, a_ref, b_ref, o_ref, *, band: int):
 
     @pl.when(k < nt_ref[i])
     def _compute():
+        band = band_ref[i]
         a = a_ref[...]                       # (RA, 128) int32
         b = b_ref[...]                       # (RB, 128) int32
-        # dense membership: any b within [a - band, a + band]
         ge = a[:, :, None, None] >= (b[None, None, :, :] - band)
         le = a[:, :, None, None] <= (b[None, None, :, :] + band)
         hit = jnp.logical_and(ge, le).any(axis=(2, 3))
         o_ref[...] = o_ref[...] | hit.astype(jnp.int32)
+
+
+def banded_intersect_rows_pallas(a2d: jax.Array, b2d: jax.Array,
+                                 lo_tiles: jax.Array, n_tiles: jax.Array,
+                                 bands: jax.Array, *, block_a: int,
+                                 block_b: int, max_tiles: int,
+                                 interpret: bool = True) -> jax.Array:
+    """Raw pallas_call for batched rows (a2d/b2d: [R, 128] int32; b sorted
+    within each logical row).
+
+    lo_tiles/n_tiles/bands are per-a-block: first b-block index (absolute,
+    i.e. already offset to the owning row's b segment), number of b blocks to
+    visit, and the row's band width (see ops.banded_intersect_rows)."""
+    ra, rb = block_a // LANES, block_b // LANES
+    n_a_blocks = a2d.shape[0] // ra
+    n_b_blocks = b2d.shape[0] // rb
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_a_blocks, max_tiles),
+        in_specs=[
+            pl.BlockSpec((ra, LANES), lambda i, k, lo, nt, bd: (i, 0)),
+            pl.BlockSpec((rb, LANES),
+                         lambda i, k, lo, nt, bd: (jnp.minimum(lo[i] + k, n_b_blocks - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((ra, LANES), lambda i, k, lo, nt, bd: (i, 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel_rows,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(a2d.shape, jnp.int32),
+        interpret=interpret,
+    )
+    return fn(lo_tiles, n_tiles, bands, a2d, b2d)
 
 
 def banded_intersect_pallas(a2d: jax.Array, b2d: jax.Array, lo_tiles: jax.Array,
@@ -54,26 +92,12 @@ def banded_intersect_pallas(a2d: jax.Array, b2d: jax.Array, lo_tiles: jax.Array,
     """Raw pallas_call (a2d: [Ra, 128] int32; b2d: [Rb, 128] int32 sorted).
 
     lo_tiles/n_tiles: per-a-block first b-block index and number of b blocks
-    to visit (host- or trace-computed; see ops.banded_intersect).
+    to visit (host- or trace-computed; see ops.banded_intersect).  The
+    constant band is broadcast per a-block into the rows kernel — one kernel
+    body serves both entry points.
     """
-    ra, rb = block_a // LANES, block_b // LANES
-    n_a_blocks = a2d.shape[0] // ra
-    n_b_blocks = b2d.shape[0] // rb
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(n_a_blocks, max_tiles),
-        in_specs=[
-            pl.BlockSpec((ra, LANES), lambda i, k, lo, nt: (i, 0)),
-            pl.BlockSpec((rb, LANES),
-                         lambda i, k, lo, nt: (jnp.minimum(lo[i] + k, n_b_blocks - 1), 0)),
-        ],
-        out_specs=pl.BlockSpec((ra, LANES), lambda i, k, lo, nt: (i, 0)),
-    )
-    fn = pl.pallas_call(
-        functools.partial(_kernel, band=band),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(a2d.shape, jnp.int32),
-        interpret=interpret,
-    )
-    return fn(lo_tiles, n_tiles, a2d, b2d)
+    n_a_blocks = a2d.shape[0] // (block_a // LANES)
+    bands = jnp.full((n_a_blocks,), band, jnp.int32)
+    return banded_intersect_rows_pallas(
+        a2d, b2d, lo_tiles, n_tiles, bands, block_a=block_a,
+        block_b=block_b, max_tiles=max_tiles, interpret=interpret)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.flash_prefill import flash_prefill_pallas
-from repro.kernels.intersect import I32_SENTINEL, banded_intersect_pallas
+from repro.kernels.intersect import (I32_SENTINEL, banded_intersect_pallas,
+                                     banded_intersect_rows_pallas)
 from repro.kernels.segment_bag import segment_bag_pallas
 
 
@@ -78,6 +79,76 @@ def banded_intersect(a: jax.Array, b_sorted: jax.Array, band: int, *,
         band=band, block_a=block_a, block_b=block_b, max_tiles=max_tiles,
         interpret=interpret)
     found = out2d.reshape(-1)[:na] > 0
+    return found & (a != I32_SENTINEL)
+
+
+def banded_intersect_rows(a: jax.Array, b_sorted: jax.Array, bands: jax.Array,
+                          *, implementation: str = "pallas",
+                          interpret: bool = True, block_a: int = 1024,
+                          block_b: int = 1024) -> jax.Array:
+    """Batched banded membership: found[n, i] = exists j with
+    |a[n, i] - b_sorted[n, j]| <= bands[n].
+
+    a: [N, Pa] int32 (any order); b_sorted: [N, Pb] int32, ascending per row;
+    bands: [N] int32 (DYNAMIC — one pallas program serves mixed band widths
+    via scalar prefetch, so the batch executor never recompiles per band
+    pattern).  Pa/Pb must be multiples of 128.  I32_SENTINEL entries of `a`
+    never match.  This is the engine hot path: each row is one (seed group,
+    constraint group) membership test of the batched executor.
+    """
+    assert a.dtype == jnp.int32 and b_sorted.dtype == jnp.int32
+    N, pa = a.shape
+    pb = b_sorted.shape[1]
+    if implementation == "ref":
+        def row(av, bv, band):
+            lo = jnp.searchsorted(bv, av - band, side="left")
+            hi = jnp.searchsorted(bv, av + band, side="right")
+            return hi > lo
+        found = jax.vmap(row)(a, b_sorted, bands.astype(jnp.int32))
+        return found & (a != I32_SENTINEL)
+
+    if N == 0 or pa == 0 or pb == 0:
+        return jnp.zeros((N, pa), jnp.bool_)
+
+    def pick_block(p, req):
+        # largest multiple of 128 that divides the row width (tiles must not
+        # straddle rows: each logical row owns whole blocks)
+        for blk in range(max(min(req, p) // 128 * 128, 128), 127, -128):
+            if p % blk == 0:
+                return blk
+        raise ValueError(f"row width {p} not a multiple of 128")
+
+    block_a = pick_block(pa, block_a)
+    block_b = pick_block(pb, block_b)
+    nab_pp = pa // block_a            # a-blocks per row
+    nbb_pp = pb // block_b            # b-blocks per row
+
+    # per-a-block value range (int64: sentinel +/- band must not wrap)
+    a_t = a.reshape(N, nab_pp, block_a)
+    amin = a_t.min(axis=2).astype(jnp.int64)           # [N, nab_pp]
+    amax = a_t.max(axis=2).astype(jnp.int64)
+    b_block_min = b_sorted.reshape(N, nbb_pp, block_b)[:, :, 0].astype(jnp.int64)
+    band64 = bands.astype(jnp.int64)[:, None]
+    # side='left' - 1: duplicates straddling a block boundary (see
+    # banded_intersect); clip keeps the range inside the owning row
+    lo = jax.vmap(lambda bm, q: jnp.searchsorted(bm, q, side="left"))(
+        b_block_min, amin - band64)
+    lo = jnp.clip(lo - 1, 0, nbb_pp - 1)
+    hi = jax.vmap(lambda bm, q: jnp.searchsorted(bm, q, side="right"))(
+        b_block_min, amax + band64)
+    n_tiles = jnp.maximum(hi - lo, 0).astype(jnp.int32)
+    # absolute b-block index: offset into the row's own b segment
+    row_base = (jnp.arange(N, dtype=jnp.int64) * nbb_pp)[:, None]
+    lo_abs = (lo + row_base).astype(jnp.int32)
+    band_per_block = jnp.broadcast_to(bands.astype(jnp.int32)[:, None],
+                                      (N, nab_pp))
+
+    out2d = banded_intersect_rows_pallas(
+        a.reshape(-1, 128), b_sorted.reshape(-1, 128),
+        lo_abs.reshape(-1), n_tiles.reshape(-1), band_per_block.reshape(-1),
+        block_a=block_a, block_b=block_b, max_tiles=nbb_pp,
+        interpret=interpret)
+    found = out2d.reshape(N, pa) > 0
     return found & (a != I32_SENTINEL)
 
 
@@ -151,6 +222,6 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         zeros = jnp.zeros((B, pad, Hkv, D), k.dtype)
         k = jnp.concatenate([k, zeros], axis=1)
         v = jnp.concatenate([v, zeros], axis=1)
-    q4 = q.reshape(B, Hkv, G, D) if Hq == Hkv * G else q.reshape(B, Hkv, G, D)
+    q4 = q.reshape(B, Hkv, G, D)
     out = flash_decode_pallas(q4, k, v, kv_len, block_s=bs, interpret=interpret)
     return out.reshape(B, Hq, D)

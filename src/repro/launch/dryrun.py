@@ -48,6 +48,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # older jax: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = rl.parse_collectives(hlo)
 

@@ -7,7 +7,9 @@ is a single gather) and executes the full query batch; per-shard hits are
 all-gathered and merged.  The `model` axis replicates the index and serves to
 scale query throughput (the launcher round-robins query batches over it).
 
-The planner's resolved plans are tensorized into fixed-shape fetch tables:
+The planner's resolved plans are tensorized into fixed-shape fetch tables
+(schema + tensorization shared with the engine's batch executor via
+core/fetch_tables.py):
 
     start/length/offset/req_dist/band/active : [Q, G]
     ns_packed                                : [Q, C]  (type-4 pivot checks)
@@ -27,13 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.postings import NS_SHIFT
-from jax import shard_map
+from repro.compat import shard_map
+from repro.core.fetch_tables import (NO_DIST, SENT32, SERVE_BIAS,
+                                     SERVE_POS_BITS, query_table_specs,
+                                     tensorize_plans)
 
-SERVE_POS_BITS = 17            # in-doc position < 131072
-SERVE_BIAS = 64
-SENT32 = np.int32(2**30 - 1)   # < int32 max so +band never wraps
-NO_DIST = np.int32(-128)
+__all__ = ["SERVE_POS_BITS", "SERVE_BIAS", "SENT32", "NO_DIST",
+           "SearchServeConfig", "query_table_specs", "arena_specs",
+           "make_search_serve_step", "build_arenas", "tensorize_plans"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,21 +68,6 @@ class SearchServeConfig:
     @property
     def p_seed(self) -> int:
         return self.seed_pad or self.postings_pad
-
-
-def query_table_specs(cfg: SearchServeConfig) -> dict:
-    """ShapeDtypeStructs for one query batch (replicated to every shard)."""
-    Q, G, C = cfg.queries, cfg.groups, cfg.check_slots
-    i32 = jnp.int32
-    return {
-        "start": jax.ShapeDtypeStruct((Q, G), i32),
-        "length": jax.ShapeDtypeStruct((Q, G), i32),
-        "offset": jax.ShapeDtypeStruct((Q, G), i32),
-        "req_dist": jax.ShapeDtypeStruct((Q, G), i32),
-        "band": jax.ShapeDtypeStruct((Q, G), i32),
-        "active": jax.ShapeDtypeStruct((Q, G), jnp.bool_),
-        "ns_packed": jax.ShapeDtypeStruct((Q, C), jnp.int16),
-    }
 
 
 def arena_specs(cfg: SearchServeConfig, n_shards: int) -> dict:
@@ -267,50 +255,6 @@ def build_arenas(index_set, cfg: SearchServeConfig):
     return arenas, bases
 
 
-# ---------------------------------------------------------------------------
-# host-side: tensorize planner output into fetch tables (single shard)
-# ---------------------------------------------------------------------------
-
-def tensorize_plans(cfg: SearchServeConfig, plans, stream_bases: dict | None = None,
-                    lengths_cap: int | None = None, max_distance: int = 5):
-    """Pack QueryPlans (AND-groups, primary fetch per group) into tables.
-
-    The batched serve path executes the conjunctive plan (one fetch per
-    group, primary morphological form); queries needing unions fall back to
-    the flexible executor.  stream_bases maps fetch.stream -> arena offset
-    (from build_arenas).  Returns numpy tables per query_table_specs.
-    """
-    Q, G, C = cfg.queries, cfg.groups, cfg.check_slots
-    bases = stream_bases or {"basic": 0, "expanded": cfg.n_basic,
-                             "stop": cfg.n_basic + cfg.n_expanded}
-    t = {
-        "start": np.zeros((Q, G), np.int32),
-        "length": np.zeros((Q, G), np.int32),
-        "offset": np.zeros((Q, G), np.int32),
-        "req_dist": np.full((Q, G), NO_DIST, np.int32),
-        "band": np.zeros((Q, G), np.int32),
-        "active": np.zeros((Q, G), bool),
-        "ns_packed": np.full((Q, C), -1, np.int16),
-    }
-    cap = lengths_cap or cfg.postings_pad
-    for qi, plan in enumerate(plans[:Q]):
-        sp = plan.subplans[0]
-        groups = [g for g in sp.groups if g.fetches]
-        # seed first: the near-stop-checked pivot if any, else a band-0 group
-        groups = sorted(groups, key=lambda g: (not g.fetches[0].stop_checks
-                                               if g.band == 0 else True, g.band))[: G]
-        for gi, g in enumerate(groups):
-            f = g.fetches[0]
-            if f.stream not in bases:
-                continue            # 'first'/'ordinary' stay on the flex path
-            t["start"][qi, gi] = f.start + bases[f.stream]
-            t["length"][qi, gi] = min(f.length, cfg.p_seed if gi == 0 else cap)
-            t["offset"][qi, gi] = f.offset
-            t["band"][qi, gi] = g.band
-            t["active"][qi, gi] = True
-            if f.required_dist is not None:
-                t["req_dist"][qi, gi] = f.required_dist
-            if gi == 0 and f.stop_checks:
-                for ci, (delta, ids) in enumerate(f.stop_checks[:C]):
-                    t["ns_packed"][qi, ci] = ((delta + max_distance) << NS_SHIFT) | ids[0]
-    return t
+# tensorize_plans (host-side plan->table packing) lives in
+# core/fetch_tables.py, shared with the engine's batch executor; it is
+# re-exported above for callers of this module.

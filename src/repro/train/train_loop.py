@@ -19,7 +19,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.checkpoint import CheckpointManager
 from repro.dist.collectives import compressed_psum_with_feedback

@@ -1,0 +1,199 @@
+"""Batched executor: search_batch must agree with per-query search (the
+flexible executor) and with the brute-force oracle on mixed Type 1-4 query
+batches, including doc-only fallback queries inside a batch; and the Pallas
+banded-intersect path must agree with the ref path on re-based int32 keys."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AdditionalIndexEngine, BatchExecutor, brute_force_search
+from repro.core.planner import MODE_NEAR, MODE_PHRASE
+from repro.kernels import ops
+
+
+def _mixed_batch(small_world, n=50, seed=11):
+    """Phrase + near queries sampled from indexed docs (the paper's 2.1/2.2
+    procedure) plus hand-picked stop-heavy queries for Type 1/4 coverage."""
+    corpus = small_world["corpus"]
+    lex = small_world["lex"]
+    ana = small_world["ana"]
+    rng = np.random.default_rng(seed)
+    queries, modes = [], []
+    while len(queries) < n:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        k = int(rng.integers(3, 6))
+        if len(toks) < 2 * k + 2:
+            continue
+        st = int(rng.integers(0, len(toks) - 2 * k))
+        queries.append(toks[st:st + k].tolist())
+        modes.append(MODE_PHRASE)
+        if len(queries) < n:
+            queries.append(toks[st:st + 2 * k:2].tolist())
+            modes.append(MODE_NEAR)
+    # short queries: single-word (one-group task) and two-word
+    t0 = corpus.doc(0)
+    queries.append([int(t0[0])])
+    modes.append(MODE_PHRASE)
+    queries.append([int(t0[0]), int(t0[1])])
+    modes.append(MODE_PHRASE)
+    # stop-run (Type 1) and stop-mixed (Type 4) windows, if the corpus has any
+    stops = 0
+    for d in range(corpus.n_docs):
+        toks = corpus.doc(d)
+        forms = ana.primary[toks]
+        is_stop = np.asarray(lex.is_stop(forms))
+        for st in range(len(toks) - 3):
+            if is_stop[st:st + 3].all() and stops < 4:
+                queries.append(toks[st:st + 3].tolist())
+                modes.append(MODE_PHRASE)
+                stops += 1
+        if stops >= 4:
+            break
+    return queries, modes
+
+
+def _same_result(r1, r2) -> bool:
+    return (np.array_equal(r1.doc, r2.doc) and np.array_equal(r1.pos, r2.pos)
+            and r1.postings_read == r2.postings_read
+            and r1.used_fallback == r2.used_fallback
+            and r1.doc_only == r2.doc_only
+            and r1.subplan_types == r2.subplan_types)
+
+
+def test_search_batch_matches_per_query(small_world):
+    eng = small_world["engine"]
+    queries, modes = _mixed_batch(small_world)
+    batch = eng.search_batch(queries, modes=modes)
+    assert len(batch) == len(queries)
+    for q, m, got in zip(queries, modes, batch):
+        want = eng.search(q, mode=m)
+        assert _same_result(want, got), (q, m)
+
+
+def test_search_batch_matches_per_query_ordinary(small_world):
+    base = small_world["ordinary"]
+    queries, modes = _mixed_batch(small_world, n=24, seed=3)
+    batch = base.search_batch(queries, modes=modes)
+    for q, m, got in zip(queries, modes, batch):
+        want = base.search(q, mode=m)
+        assert _same_result(want, got), (q, m)
+
+
+def test_search_batch_matches_brute_force(small_world):
+    """Positional results (or the doc-only fallback set) against the
+    O(corpus) oracle, per query of a mixed batch."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    queries, modes = _mixed_batch(small_world, n=20, seed=5)
+    batch = eng.search_batch(queries, modes=modes)
+    for q, m, r in zip(queries, modes, batch):
+        positional, doc_level = brute_force_search(corpus, index, q, mode=m)
+        if r.doc_only:
+            assert set(r.doc.tolist()) == doc_level, (q, m)
+        else:
+            got = set(zip(r.doc.tolist(), r.pos.tolist()))
+            assert got == positional, (q, m)
+
+
+def test_search_batch_fallback_queries_in_batch(small_world):
+    """Queries that positionally miss (scrambled word order across docs) must
+    fall back to doc-only results inside a batch, exactly like per-query."""
+    corpus = small_world["corpus"]
+    eng = small_world["engine"]
+    rng = np.random.default_rng(23)
+    queries = []
+    for _ in range(8):
+        d1, d2 = rng.integers(corpus.n_docs, size=2)
+        t1, t2 = corpus.doc(int(d1)), corpus.doc(int(d2))
+        if len(t1) < 8 or len(t2) < 8:
+            continue
+        queries.append([int(t1[3]), int(t2[5]), int(t1[7])])
+    assert queries
+    batch = eng.search_batch(queries, modes=MODE_PHRASE)
+    n_fallback = 0
+    for q, r in zip(queries, batch):
+        want = eng.search(q, mode=MODE_PHRASE)
+        assert _same_result(want, r)
+        n_fallback += int(r.used_fallback)
+    assert n_fallback > 0    # the batch did exercise the fallback path
+
+
+def test_search_batch_pallas_matches_ref(small_world):
+    eng_p = AdditionalIndexEngine(small_world["index"], batch_impl="pallas")
+    eng_r = small_world["engine"]
+    queries, modes = _mixed_batch(small_world, n=16, seed=7)
+    bp = eng_p.search_batch(queries, modes=modes)
+    br = eng_r.search_batch(queries, modes=modes)
+    for a, b in zip(bp, br):
+        assert np.array_equal(a.doc, b.doc) and np.array_equal(a.pos, b.pos)
+
+
+def test_search_batch_max_results(small_world):
+    eng = small_world["engine"]
+    queries, modes = _mixed_batch(small_world, n=6, seed=13)
+    batch = eng.search_batch(queries, modes=modes, max_results=2)
+    for q, m, r in zip(queries, modes, batch):
+        want = eng.search(q, mode=m, max_results=2)
+        assert np.array_equal(want.doc, r.doc)
+        assert len(r.doc) <= 2
+
+
+def test_batch_executor_flex_escape_hatch(small_world):
+    """Plans exceeding the table caps route through the flexible executor
+    with identical results."""
+    import repro.core.batch_executor as bx
+    eng = small_world["engine"]
+    queries, modes = _mixed_batch(small_world, n=8, seed=17)
+    be = BatchExecutor(small_world["index"], flex=eng.executor)
+    old_cap = bx.P_CAP
+    bx.P_CAP = 1          # every fetch is now "too long" => all plans flex
+    try:
+        plans = [eng.plan(q, mode=m) for q, m in zip(queries, modes)]
+        got = be.execute_batch(plans)
+    finally:
+        bx.P_CAP = old_cap
+    for q, m, r in zip(queries, modes, got):
+        want = eng.search(q, mode=m)
+        assert _same_result(want, r)
+
+
+# ---------------------------------------------------------------------------
+# rows-kernel agreement on re-based int32 keys
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,Pa,Pb,seed", [(4, 256, 256, 0), (9, 512, 1024, 1),
+                                          (16, 256, 2048, 2), (1, 128, 128, 3)])
+def test_banded_intersect_rows_matches_ref(N, Pa, Pb, seed):
+    """Pallas vs ref on keys shaped like the executor's re-based int32 domain
+    (doc_local << 17 | pos), with mixed per-row bands and sentinel padding."""
+    from repro.core.fetch_tables import TABLE_BIAS, TABLE_POS_BITS
+    rng = np.random.default_rng(seed)
+    doc_a = rng.integers(0, 50, (N, Pa))
+    doc_b = rng.integers(0, 50, (N, Pb))
+    pos_a = rng.integers(0, 400, (N, Pa))
+    pos_b = rng.integers(0, 400, (N, Pb))
+    a = ((doc_a << TABLE_POS_BITS) | (pos_a + TABLE_BIAS)).astype(np.int32)
+    b = np.sort((doc_b << TABLE_POS_BITS) | (pos_b + TABLE_BIAS), axis=1).astype(np.int32)
+    a[:, -7:] = np.iinfo(np.int32).max            # sentinel pads
+    b[-1, :] = np.iinfo(np.int32).max             # one empty (dead) group
+    bands = rng.integers(0, 6, N).astype(np.int32)
+    got = ops.banded_intersect_rows(jnp.asarray(a), jnp.asarray(b),
+                                    jnp.asarray(bands))
+    want = ops.banded_intersect_rows(jnp.asarray(a), jnp.asarray(b),
+                                     jnp.asarray(bands), implementation="ref")
+    assert bool((got == want).all())
+    # sentinel entries never match
+    assert not np.asarray(got)[:, -7:].any()
+
+
+def test_banded_intersect_rows_band_isolation():
+    """Rows with band 0 must not leak band-W semantics from neighbours."""
+    a = np.tile(np.arange(0, 1280, 10, np.int32), (2, 1))[:, :128]
+    b = np.tile((np.arange(0, 1280, 10, np.int32) + 3), (2, 1))[:, :128]
+    bands = np.array([0, 5], np.int32)
+    got = np.asarray(ops.banded_intersect_rows(jnp.asarray(a), jnp.asarray(b),
+                                               jnp.asarray(bands)))
+    assert not got[0].any()       # off by 3, band 0 -> no hits
+    assert got[1].all()           # band 5 covers the offset

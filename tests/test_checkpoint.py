@@ -85,8 +85,8 @@ def test_elastic_restore_with_shardings(tmp_path):
     """Restore applies a target sharding tree (single-device NamedSharding
     here; the mesh-shape change path is exercised in test_dist.py)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import auto_axis_types, make_mesh
+    mesh = make_mesh((1,), ("data",), axis_types=auto_axis_types(1))
     t = _tree()
     save_pytree(str(tmp_path / "ck"), t)
     sh = jax.tree_util.tree_map(

@@ -22,7 +22,8 @@ def _run(body: str):
         import numpy as np, jax, jax.numpy as jnp
         import repro
         from jax.sharding import NamedSharding, PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        import repro.compat
+        from repro.compat import shard_map
     """ % os.path.join(_ROOT, "src")) + textwrap.dedent(body)
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=540)
@@ -33,8 +34,8 @@ def _run(body: str):
 def test_ring_all_reduce_8dev():
     out = _run("""
         from repro.dist import collectives
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = repro.compat.make_mesh((8,), ("x",),
+                             axis_types=repro.compat.auto_axis_types(1))
         X = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)).astype(np.float32))
         Xs = jax.device_put(X, NamedSharding(mesh, P("x", None)))
         fn = collectives.make_ring_all_reduce(mesh, "x")
@@ -60,8 +61,8 @@ def test_sharded_train_step_matches_single_device():
         key = jax.random.PRNGKey(0)
         batch = {"x": jax.random.normal(key, (32, 4)),
                  "y": jax.random.normal(jax.random.PRNGKey(1), (32, 1))}
-        mesh = jax.make_mesh((8, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = repro.compat.make_mesh((8, 1), ("data", "model"),
+                             axis_types=repro.compat.auto_axis_types(2))
         sstep = make_sharded_train_step(loss_fn, cfg, mesh)
         with mesh:
             p1, s1, _, m1 = sstep(params, init_state(cfg, params),
@@ -89,8 +90,8 @@ def test_compressed_dp_training_converges():
         x = jax.random.normal(jax.random.PRNGKey(1), (64, 4))
         batch = {"x": x, "y": x @ w_true}
         params = {"w": jnp.zeros((4, 1), jnp.float32)}
-        mesh = jax.make_mesh((8, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = repro.compat.make_mesh((8, 1), ("data", "model"),
+                             axis_types=repro.compat.auto_axis_types(2))
         sstep = make_sharded_train_step(loss_fn, cfg, mesh, compression="int8")
         state = init_state(cfg, params)
         res = init_residual(params)
@@ -110,14 +111,14 @@ def test_elastic_resume_across_mesh_shapes(tmp_path):
     out = _run(f"""
         from repro.checkpoint import CheckpointManager
         tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
-        mesh1 = jax.make_mesh((8, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh1 = repro.compat.make_mesh((8, 1), ("data", "model"),
+                              axis_types=repro.compat.auto_axis_types(2))
         sh1 = {{"w": NamedSharding(mesh1, P("data", None))}}
         t1 = jax.device_put(tree, sh1)
         mgr = CheckpointManager({str(tmp_path)!r}, keep=2)
         mgr.save(3, t1)
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = repro.compat.make_mesh((2, 4), ("data", "model"),
+                              axis_types=repro.compat.auto_axis_types(2))
         sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
         step, got = mgr.restore_latest(tree, shardings=sh2)
         assert step == 3
@@ -133,7 +134,7 @@ def test_gin_halo_exchange_matches_dense():
     out = _run("""
         from repro.models import gnn
         from repro.data import graph_data
-        from jax import shard_map
+        from repro.compat import shard_map
         g = graph_data.generate_graph(400, 3200, d_feat=12, n_classes=4, seed=1)
         cfg = gnn.GINConfig(name="t", n_layers=3, d_hidden=16, d_feat=12, n_classes=4)
         params = gnn.init_params(cfg, jax.random.PRNGKey(0))
@@ -141,8 +142,8 @@ def test_gin_halo_exchange_matches_dense():
              graph_data.full_graph_batch(g, train_frac=1.0, seed=0).items()}
         l_ref, m_ref = gnn.loss_fn(cfg, params, b)
         part = graph_data.partition_for_halo(g, 8)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = repro.compat.make_mesh((8,), ("data",),
+                             axis_types=repro.compat.auto_axis_types(1))
         keys = ("nodes", "src", "dst", "edge_mask", "labels", "label_mask", "send_idx")
         sb = {k: jnp.asarray(part[k]) for k in keys}
         fn = shard_map(lambda p, s: gnn.halo_loss_fn(cfg, p, s, axis_name="data"),
@@ -176,8 +177,8 @@ def test_gin_sharded_step_matches_single():
         b["edge_mask"] = np.concatenate([b["edge_mask"], np.zeros(pad, bool)])
         b = {k: jnp.asarray(v) for k, v in b.items()}
         l1, _ = gnn.loss_fn(cfg, params, b)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = repro.compat.make_mesh((8,), ("data",),
+                             axis_types=repro.compat.auto_axis_types(1))
         shard = {
             "nodes": NamedSharding(mesh, P("data", None)),
             "src": NamedSharding(mesh, P("data")),

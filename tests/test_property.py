@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) on system invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.postings import (CSR, PHRASE_BIAS, pack_near_stop_slot,
                                  pack_stop_phrase_key, shifted_key,
