@@ -1,12 +1,26 @@
 """Paper tables: SEARCH SPEED — mean/max query time and postings read, for
 the additional-index engine vs the ordinary (Sphinx-style) inverted index,
 on the paper's query workload.  Also verifies every query finds its source
-document (the paper's correctness check).
+document (the paper's correctness check).  Near-mode queries that contain a
+stop form are confined to sequential matching by the paper's Type-4 rule
+("the search is confined to sequential words"), so their source document
+legitimately may not match; they are counted separately
+(`near_stop_confined_misses`) and `missed_source_docs` covers exactly the
+queries whose semantics promise recall — it must be 0.
 
-Beyond the paper: a batched-throughput (QPS) measurement of the
-plan-compiled `search_batch` path (core/batch_executor.py) against the
-per-query loop on the same workload — the result set must be identical —
-written to BENCH_search.json for the perf trajectory across PRs."""
+Beyond the paper:
+  * a batched-throughput (QPS) measurement of the plan-compiled
+    `search_batch` path (core/batch_executor.py) against the per-query loop
+    on the same workload — the result set must be identical;
+  * a serve-tier pass (`serve/search_serve.py`): the same workload through
+    the shard_map'd distributed step, which must also be bit-identical and
+    miss no promised source docs;
+  * a doc-shard scaling sweep: batched step time at 1 / ~19 / ~75 doc
+    shards.  With the segmented gather the total work is O(arena), so the
+    cost stays roughly flat instead of linear in the shard count.
+
+All written to BENCH_search.json for the perf trajectory across PRs,
+including a `ci_smoke` baseline the CI perf gate compares against."""
 from __future__ import annotations
 
 import json
@@ -19,6 +33,13 @@ from benchmarks.common import bench_world, paper_query_stream
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_search.json")
+
+
+def _stop_confined(w, q, mode) -> bool:
+    """Near query containing a stop form: Type-4 confines it to sequential
+    matching, so source-doc recall is not promised."""
+    from repro.core import near_query_stop_confined
+    return near_query_stop_confined(w["lex"], w["ana"], q, mode)
 
 
 def run_batched(eng, queries, batch_size: int = 64,
@@ -51,22 +72,91 @@ def run_batched(eng, queries, batch_size: int = 64,
             "results": results}
 
 
+def run_serve(w, queries, batch_size: int = 64,
+              per_query_results=None) -> dict:
+    """Serve-tier pass: the workload through the unified shard_map'd serve
+    step (SearchServe), with result identity + promised-recall checks."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.search_serve import SearchServe, SearchServeConfig
+
+    cfg = SearchServeConfig(queries=batch_size, postings_pad=4096,
+                            seed_pad=1024, n_basic=1, n_expanded=1,
+                            n_stop=1, n_first=1)
+    serve = SearchServe(w["index"], cfg, make_host_mesh(data=1, model=1))
+    qs = [q for q, _m, _s in queries]
+    ms = [m for _q, m, _s in queries]
+    for lo in range(0, len(qs), batch_size):      # warm
+        serve.search_batch(qs[lo:lo + batch_size], modes=ms[lo:lo + batch_size])
+    t0 = time.perf_counter()
+    results = []
+    for lo in range(0, len(qs), batch_size):
+        results.extend(serve.search_batch(qs[lo:lo + batch_size],
+                                          modes=ms[lo:lo + batch_size]))
+    elapsed = time.perf_counter() - t0
+    mismatched = missed = confined = 0
+    for (q, mode, src), r in zip(queries, results):
+        if _stop_confined(w, q, mode):
+            confined += int(src not in set(r.doc.tolist()))
+        else:
+            missed += int(src not in set(r.doc.tolist()))
+    if per_query_results is not None:
+        for r1, r2 in zip(per_query_results, results):
+            if not (np.array_equal(r1.doc, r2.doc)
+                    and np.array_equal(r1.pos, r2.pos)):
+                mismatched += 1
+    return {"qps": len(qs) / elapsed,
+            "missed_source_docs": missed,
+            "near_stop_confined_misses": confined,
+            "result_mismatches": mismatched}
+
+
+def run_shard_scaling(w, queries, batch_size: int = 64,
+                      shard_sizes=(8192, 64, 16)) -> dict:
+    """Batched steady-state time with the corpus cut into 1 / ~N/64 / ~N/16
+    doc shards.  Segmented gather => roughly flat; the pre-segmentation
+    executor re-sorted the full slab once per shard (linear)."""
+    from repro.core import AdditionalIndexEngine
+    qs = [q for q, _m, _s in queries]
+    ms = [m for _q, m, _s in queries]
+    out = {}
+    for dps in shard_sizes:
+        eng = AdditionalIndexEngine(w["index"], docs_per_shard=dps)
+        for lo in range(0, len(qs), batch_size):      # warm
+            eng.search_batch(qs[lo:lo + batch_size],
+                             modes=ms[lo:lo + batch_size])
+        t0 = time.perf_counter()
+        for lo in range(0, len(qs), batch_size):
+            eng.search_batch(qs[lo:lo + batch_size],
+                             modes=ms[lo:lo + batch_size])
+        n_shards = eng.batch_executor.dev.n_shards
+        out[str(n_shards)] = time.perf_counter() - t0
+    times = list(out.values())
+    shards = [int(k) for k in out]
+    return {"time_s_by_n_shards": out,
+            "cost_ratio": times[-1] / times[0],
+            "shard_ratio": shards[-1] / max(shards[0], 1)}
+
+
 CANONICAL = (1200, 400, 64)    # the BENCH_search.json perf-trajectory scale
+CI_SMOKE = (300, 96, 32)       # the CI perf-gate scale
 
 
 def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
-        batch_size: int = 64, write_json: bool | None = None) -> dict:
+        batch_size: int = 64, write_json: bool | None = None,
+        full: bool | None = None) -> dict:
     # default: only a canonical-scale run may touch the committed
     # BENCH_search.json — off-scale numbers aren't comparable across PRs
     if write_json is None:
         write_json = (n_docs, n_queries, batch_size) == CANONICAL
+    if full is None:
+        full = write_json
     w = bench_world(n_docs)
     eng, base = w["engine"], w["ordinary"]
     queries = paper_query_stream(w["corpus"], n_queries, seed=seed)
 
     stats = {"add": {"postings": [], "time": []},
              "ord": {"postings": [], "time": []}}
-    missed = 0
+    missed = confined = 0
     add_results = []
     # full warm pass (jit compile for EVERY shape bucket the workload hits —
     # same warm discipline as the batched pass, so the speedup compares
@@ -81,13 +171,17 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
         stats["add"]["postings"].append(r.postings_read)
         add_results.append(r)
         if src not in set(r.doc.tolist()):
-            missed += 1
+            if _stop_confined(w, q, mode):
+                confined += 1
+            else:
+                missed += 1
         t0 = time.perf_counter()
         r2 = base.search(q, mode=mode)
         stats["ord"]["time"].append(time.perf_counter() - t0)
         stats["ord"]["postings"].append(r2.postings_read)
 
-    out = {"n_queries": len(queries), "missed_source_docs": missed}
+    out = {"n_queries": len(queries), "missed_source_docs": missed,
+           "near_stop_confined_misses": confined}
     for k in ("add", "ord"):
         p = np.array(stats[k]["postings"], np.float64)
         t = np.array(stats[k]["time"], np.float64)
@@ -115,7 +209,29 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
     out["batched_speedup"] = b["qps"] * per_query_time / len(queries)
     out["batched_result_mismatches"] = b["result_mismatches"]
 
+    if full:
+        # serve tier: bit-identical to search_batch, promised recall intact
+        s = run_serve(w, queries, batch_size=batch_size,
+                      per_query_results=add_results)
+        out["serve_qps"] = s["qps"]
+        out["serve_missed_source_docs"] = s["missed_source_docs"]
+        out["serve_near_stop_confined_misses"] = s["near_stop_confined_misses"]
+        out["serve_result_mismatches"] = s["result_mismatches"]
+        # segmented gather: per-shard cost roughly flat, not linear
+        out["shard_scaling"] = run_shard_scaling(w, queries,
+                                                 batch_size=batch_size)
+
     if write_json:
+        # smoke-scale baseline for the CI perf gate (recursion reuses the
+        # bench_world cache; write_json=False so it can't clobber this file)
+        ci = run(n_docs=CI_SMOKE[0], n_queries=CI_SMOKE[1],
+                 batch_size=CI_SMOKE[2], write_json=False, full=False)
+        out["ci_smoke"] = {"n_docs": CI_SMOKE[0], "n_queries": CI_SMOKE[1],
+                           "batch_size": CI_SMOKE[2],
+                           "add_qps_batched": ci["add_qps_batched"],
+                           # the per-query path is the runner-speed yardstick
+                           # the CI gate normalizes against
+                           "add_qps_per_query": ci["add_qps_per_query"]}
         with open(BENCH_JSON, "w") as fh:
             json.dump({k: v for k, v in out.items()}, fh, indent=2, sort_keys=True)
     return out
@@ -129,11 +245,15 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--no-json", action="store_true",
                     help="don't overwrite BENCH_search.json (smoke runs)")
+    ap.add_argument("--full", action="store_true",
+                    help="include the serve + shard-scaling passes")
     args = ap.parse_args()
-    for k, v in run(n_docs=args.docs, n_queries=args.queries,
-                    batch_size=args.batch,
-                    write_json=False if args.no_json else None).items():
-        print(f"search_speed.{k},{v:.6g}" if isinstance(v, float) else f"search_speed.{k},{v}")
+    res = run(n_docs=args.docs, n_queries=args.queries, batch_size=args.batch,
+              write_json=False if args.no_json else None,
+              full=True if args.full else None)
+    for k, v in res.items():
+        print(f"search_speed.{k},{v:.6g}" if isinstance(v, float)
+              else f"search_speed.{k},{v}")
 
 
 if __name__ == "__main__":

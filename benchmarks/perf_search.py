@@ -39,14 +39,13 @@ def measure(cfg, mesh):
 def main():
     mesh = make_production_mesh(multi_pod=False)
     variants = [
-        ("baseline (P0=32k, sort)", dict(seed_pad=0, sort_free=False)),
-        ("seed_pad=8k", dict(seed_pad=8192, sort_free=False)),
-        ("seed_pad=8k + sort-free", dict(seed_pad=8192, sort_free=True)),
-        ("seed_pad=4k + sort-free", dict(seed_pad=4096, sort_free=True)),
-        ("seed_pad=2k + sort-free", dict(seed_pad=2048, sort_free=True)),
-        ("seed4k + packed keys", dict(seed_pad=4096, packed_keys=True)),
-        ("seed4k + packed + sortfree", dict(seed_pad=4096, packed_keys=True,
-                                            sort_free=True)),
+        ("baseline (P0=32k, F=8)", dict(seed_pad=0)),
+        ("seed_pad=8k", dict(seed_pad=8192)),
+        ("seed_pad=4k", dict(seed_pad=4096)),
+        ("seed_pad=2k", dict(seed_pad=2048)),
+        ("seed4k + F=4", dict(seed_pad=4096, fetch_slots=4)),
+        ("seed4k + F=4 + G=4", dict(seed_pad=4096, fetch_slots=4, groups=4)),
+        ("seed4k + P=16k", dict(seed_pad=4096, postings_pad=16384)),
     ]
     for name, kw in variants:
         cfg = dataclasses.replace(ss.SearchServeConfig(), **kw)

@@ -1,5 +1,8 @@
-"""Distributed search demo on 8 simulated devices: document-sharded serving
-with shard_map, ring all-reduce, and elastic checkpoint resume.
+"""Distributed search demo on 8 simulated devices: one corpus document-
+partitioned over 8 shards, served through the unified shard_map'd serve tier
+(each device holds only its own slice of the posting arena and executes only
+its own rows), verified bit-identical against the in-process engine; plus a
+ring all-reduce demo.
 
 Run directly (it re-execs itself with XLA_FLAGS for 8 host devices):
 
@@ -18,49 +21,51 @@ import numpy as np                                                # noqa: E402
 
 import repro.compat                                               # noqa: E402
 
-from repro.core import (CorpusConfig, LexiconConfig, build_all,   # noqa: E402
-                        generate_corpus, make_lexicon_and_analyzer)
+from repro.core import (AdditionalIndexEngine, CorpusConfig,      # noqa: E402
+                        LexiconConfig, build_all, generate_corpus,
+                        make_lexicon_and_analyzer)
+from repro.core.planner import MODE_PHRASE                        # noqa: E402
 from repro.dist.collectives import make_ring_all_reduce           # noqa: E402
-from repro.serve.search_serve import (SearchServeConfig,          # noqa: E402
-                                      make_search_serve_step)
+from repro.serve.search_serve import (SearchServe,                # noqa: E402
+                                      SearchServeConfig)
 
 
 def main():
     print(f"devices: {len(jax.devices())}")
     mesh = repro.compat.make_mesh((8, 1), ("data", "model"),
-                         axis_types=repro.compat.auto_axis_types(2))
+                                  axis_types=repro.compat.auto_axis_types(2))
 
-    # 8 document shards: build one index per shard (separate doc ranges)
+    # ONE corpus, documents partitioned over the 8 dp shards by the serve
+    # tier itself (contiguous doc ranges; each shard's arena holds only its
+    # own postings)
     lex_cfg = LexiconConfig(n_surface=8000, n_base=6000, n_stop=200,
                             n_frequent=600, seed=0)
     lex, ana = make_lexicon_and_analyzer(lex_cfg)
-    cfg = SearchServeConfig(queries=8, groups=3, postings_pad=2048, top_m=32,
-                            n_basic=40_000, n_expanded=60_000, n_stop=80_000)
-    shard_arenas = {k: [] for k in
-                    ("arena_doc", "arena_pos", "arena_dist", "basic_ns")}
-    for shard in range(8):
-        corpus = generate_corpus(lex_cfg, CorpusConfig(n_docs=40, seed=shard))
-        index = build_all(corpus, lex, ana)
-        from repro.serve.search_serve import build_arenas
-        arenas, _ = build_arenas(index, cfg)
-        for k in shard_arenas:
-            shard_arenas[k].append(np.asarray(arenas[k][0]))
-    arenas = {k: jnp.asarray(np.stack(v)) for k, v in shard_arenas.items()}
+    corpus = generate_corpus(lex_cfg, CorpusConfig(n_docs=320, seed=0))
+    index = build_all(corpus, lex, ana)
+    engine = AdditionalIndexEngine(index)
 
-    step = jax.jit(make_search_serve_step(cfg, mesh))
-    q = {
-        "start": jnp.zeros((cfg.queries, cfg.groups), jnp.int32),
-        "length": jnp.full((cfg.queries, cfg.groups), 64, jnp.int32),
-        "offset": jnp.tile(jnp.arange(cfg.groups, dtype=jnp.int32),
-                           (cfg.queries, 1)),
-        "req_dist": jnp.full((cfg.queries, cfg.groups), -128, jnp.int32),
-        "band": jnp.zeros((cfg.queries, cfg.groups), jnp.int32),
-        "active": jnp.ones((cfg.queries, cfg.groups), bool),
-        "ns_packed": jnp.full((cfg.queries, cfg.check_slots), -1, jnp.int32),
-    }
-    with mesh:
-        hits, counts = step(arenas, q)
-    print(f"document-sharded serve over 8 shards: counts={np.asarray(counts)}")
+    cfg = SearchServeConfig(queries=8, postings_pad=2048, seed_pad=512,
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1)
+    serve = SearchServe(index, cfg, mesh)
+    print(f"document-sharded serve: {serve.n_dp} shards x "
+          f"{serve.executor.docs_per_dp} docs")
+
+    rng = np.random.default_rng(0)
+    queries = []
+    while len(queries) < cfg.queries:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        if len(toks) < 10:
+            continue
+        st = int(rng.integers(len(toks) - 6))
+        queries.append(toks[st:st + 3].tolist())
+
+    got = serve.search_batch(queries, modes=MODE_PHRASE)
+    want = engine.search_batch(queries, modes=MODE_PHRASE)
+    assert all(np.array_equal(w.doc, g.doc) and np.array_equal(w.pos, g.pos)
+               for w, g in zip(want, got))
+    print(f"serve over 8 shards == engine: counts={[len(r.doc) for r in got]}")
 
     ring = make_ring_all_reduce(mesh, "data")
     X = jnp.asarray(np.random.default_rng(0).normal(size=(8, 32)).astype(np.float32))

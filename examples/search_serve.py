@@ -1,12 +1,13 @@
-"""End-to-end serving driver: batched phrase queries through the tensorized
-serve step (the same step the multi-pod dry-run lowers at 512 chips), with
-straggler-mitigating dispatch across simulated document shards.
+"""End-to-end serving driver: batched phrase queries through the unified
+serve tier (the same batch-executor tables and bucket math the engine runs,
+shard_map'd over document shards — and the same step the multi-pod dry-run
+lowers at 512 chips), with straggler-mitigating dispatch across simulated
+document shards.
 
     PYTHONPATH=src python examples/search_serve.py
 """
 import time
 
-import jax
 import numpy as np
 
 from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
@@ -14,9 +15,7 @@ from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
 from repro.core.planner import MODE_PHRASE
 from repro.dist.fault_tolerance import ShardDispatcher, merge_topk
 from repro.launch.mesh import make_host_mesh
-from repro.serve.search_serve import (SENT32, SERVE_BIAS, SERVE_POS_BITS,
-                                      SearchServeConfig, build_arenas,
-                                      make_search_serve_step, tensorize_plans)
+from repro.serve.search_serve import SearchServe, SearchServeConfig
 
 
 def main():
@@ -27,44 +26,38 @@ def main():
     index = build_all(corpus, lex, ana)
     engine = AdditionalIndexEngine(index)
 
-    cfg = SearchServeConfig(
-        queries=16, groups=4, postings_pad=8192, top_m=64,
-        n_basic=index.basic.occurrences.n_postings,
-        n_expanded=index.expanded.pairs.n_postings,
-        n_stop=index.stop_phrase.phrases.n_postings)
-    arenas, bases = build_arenas(index, cfg)
     mesh = make_host_mesh(data=1, model=1)
-    step = jax.jit(make_search_serve_step(cfg, mesh))
+    cfg = SearchServeConfig(queries=16, postings_pad=8192, seed_pad=2048,
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1)
+    serve = SearchServe(index, cfg, mesh)
 
     # query batch from indexed documents
     rng = np.random.default_rng(0)
-    plans, queries = [], []
-    while len(plans) < cfg.queries:
+    queries = []
+    while len(queries) < cfg.queries:
         d = int(rng.integers(corpus.n_docs))
         toks = corpus.doc(d)
         if len(toks) < 10:
             continue
         st = int(rng.integers(len(toks) - 6))
-        q = toks[st:st + 3].tolist()
-        plan = engine.plan(q, mode=MODE_PHRASE)
-        sp = plan.subplans[0]
-        if sp.supported and all(len(g.fetches) >= 1 for g in sp.groups):
-            plans.append(plan)
-            queries.append(q)
+        queries.append(toks[st:st + 3].tolist())
 
-    tables = tensorize_plans(cfg, plans, stream_bases=bases)
-    tables = {k: jax.numpy.asarray(v) for k, v in tables.items()}
-    with mesh:
-        t0 = time.perf_counter()
-        hits, counts = step(arenas, tables)
-        jax.block_until_ready(hits)
-        dt = time.perf_counter() - t0
-    print(f"serve_step: {cfg.queries} queries in {dt*1e3:.1f} ms "
+    results = serve.search_batch(queries, modes=MODE_PHRASE)      # warm
+    t0 = time.perf_counter()
+    results = serve.search_batch(queries, modes=MODE_PHRASE)
+    dt = time.perf_counter() - t0
+    print(f"serve: {cfg.queries} queries in {dt*1e3:.1f} ms "
           f"({dt/cfg.queries*1e3:.2f} ms/query)")
     for i in range(4):
-        hs = [(int(h) >> SERVE_POS_BITS, (int(h) & ((1 << SERVE_POS_BITS) - 1)) - SERVE_BIAS)
-              for h in np.asarray(hits[i]) if h < SENT32]
-        print(f"  q{i} {queries[i]}: {int(counts[i])} hits, first: {hs[:4]}")
+        r = results[i]
+        pairs = list(zip(r.doc.tolist(), r.pos.tolist()))
+        print(f"  q{i} {queries[i]}: {len(r.doc)} hits, first: {pairs[:4]}")
+
+    # the unified tier must agree with the engine bit-for-bit
+    wants = engine.search_batch(queries, modes=MODE_PHRASE)
+    assert all(np.array_equal(w.doc, r.doc) and np.array_equal(w.pos, r.pos)
+               for w, r in zip(wants, results))
+    print("serve == engine.search_batch on all queries")
 
     # straggler-mitigating dispatch across simulated shard replicas
     def shard_fn(delay):

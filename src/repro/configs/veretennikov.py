@@ -30,8 +30,9 @@ def make_config() -> SearchServeConfig:
 
 def make_smoke_config() -> SearchServeConfig:
     return SearchServeConfig(name="veretennikov-smoke", queries=4, groups=3,
-                             postings_pad=256, top_m=16, check_slots=2,
-                             n_basic=4096, n_expanded=4096, n_stop=4096)
+                             fetch_slots=2, postings_pad=256, check_slots=2,
+                             n_basic=4096, n_expanded=4096, n_stop=4096,
+                             n_first=1024)
 
 
 SPEC = ArchSpec(arch_id="veretennikov", family="search", make_config=make_config,

@@ -4,7 +4,8 @@ from repro.core.batch_executor import BatchDeviceIndex, BatchExecutor
 from repro.core.builder import IndexParams, IndexSet, build_all
 from repro.core.corpus import Corpus, CorpusConfig, generate_corpus
 from repro.core.engine import (AdditionalIndexEngine, OrdinaryEngine,
-                               brute_force_search)
+                               brute_force_search,
+                               near_query_stop_confined)
 from repro.core.executor import DeviceIndex, Executor, SearchResult
 from repro.core.lexicon import (Lexicon, LexiconConfig, TIER_FREQUENT,
                                 TIER_ORDINARY, TIER_STOP)
@@ -16,6 +17,7 @@ __all__ = [
     "IndexParams", "IndexSet", "build_all",
     "Corpus", "CorpusConfig", "generate_corpus",
     "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_search",
+    "near_query_stop_confined",
     "DeviceIndex", "Executor", "SearchResult",
     "Lexicon", "LexiconConfig", "TIER_FREQUENT", "TIER_ORDINARY", "TIER_STOP",
     "MODE_NEAR", "MODE_PHRASE", "Planner", "QueryPlan",

@@ -3,38 +3,50 @@
 The flexible `Executor` (executor.py) walks plans in Python — one device
 dispatch per fetch group, one host↔device round-trip per query.  That is
 correct but leaves the paper's order-of-magnitude win on the table at serving
-time.  This module makes batched search the first-class engine path:
+time.  This module makes batched search the first-class engine path — and it
+is the SINGLE execution engine: the distributed serve tier
+(serve/search_serve.py) consumes the same tables and the same bucket math
+under shard_map.
 
-1. **Tensorize** — every supported subplan of every query in the batch
-   becomes one *task* row of fixed-shape fetch tables (schema in
-   core/fetch_tables.py): `start/length/offset/req_dist/max_abs :
-   [T, G, F]`, `band/active : [T, G]`, near-stop checks `[T, C, M]`.
+1. **Tensorize + segment** — every supported subplan of every query becomes
+   one or more *rows* of fixed-shape fetch tables (schema in
+   core/fetch_tables.py): `start/length/offset/req_dist/max_abs : [T, G, F]`,
+   `band/active : [T, G]`, `shard_base : [T]`, near-stop checks `[T, C, M]`.
    Group 0 is the seed (the near-stop-checked pivot when present, else the
    smallest band-0 group — the same seed rule as the flexible executor);
    groups 1..G-1 constrain it.  F fetch slots per group carry unions over
    morphological forms / expanded orientations / stop-phrase parts.
 
+   *Shard-segmented gather*: posting slices are split host-side at doc-shard
+   boundaries (the arena is (doc, pos)-sorted per fetch, so a shard's rows
+   are one `searchsorted` away), one row per (task, doc shard) — so each row
+   gathers and intersects only its own shard's postings and the whole batch
+   does O(arena) work total, instead of re-basing and re-sorting the full
+   slab once per shard.  Posting lists longer than P_CAP are split across
+   additional F slots of the same group (a union — exactly the semantics F
+   already has), which lifts the old 32k-postings-per-fetch cap.
+
 2. **Execute** — one jit'd call per shape bucket: gather from a unified
    posting arena (basic | expanded | stop | first | ordinary concatenated,
    so a fetch is a single dynamic-slice) → global 63-bit key construction →
-   per-doc-shard **int32 re-basing** (`(doc - shard_base) << 17 | pos'`, the
-   re-basing intersect.py's docstring promises: TPU vector units have no
-   int64 lanes) → k-way banded intersection via `ops.banded_intersect_rows`
-   (Pallas kernel with per-row dynamic bands, or the `searchsorted` ref path)
-   → OR of per-shard hits.  Near-stop (type 4) checks mask the seed's keys
-   in the same call.
+   per-row int32 re-basing against the row's `shard_base`
+   (`(doc - base) << 17 | pos'` — TPU vector units have no int64 lanes) →
+   k-way banded intersection via `ops.banded_intersect_rows` (Pallas kernel
+   with per-row dynamic bands, or the `searchsorted` ref path).  Near-stop
+   (type 4) checks mask the seed's keys in the same call.
 
-3. **Merge** — host-side, mirroring `Executor.execute` exactly: subplan
-   results are unioned per query; a subplan with no positional hits falls
-   back to its distance-disregarding doc-only task (paper step 3), with
-   fallback postings counted only when triggered.
+3. **Merge** — host-side, mirroring `Executor.execute` exactly: row keys are
+   unioned per task, task results per query; a subplan with no positional
+   hits falls back to its distance-disregarding doc-only task (paper step 3),
+   with fallback postings counted only when triggered.
 
-Shape discipline: tasks are bucketed by (G, F, P, C, M) with `_next_pow2`
+Shape discipline: rows are bucketed by (G, F, P, C, M) with `_next_pow2`
 padding on every axis and chunked to a gather budget, so the jit compile
 cache stays small while padding waste stays bounded.  Queries that exceed
-the table caps (very long unions, > G_CAP groups, giant posting lists) or an
-index whose positions overflow the 17-bit packed domain fall back to the
-flexible executor per plan — identical results, just not batched.
+the table caps (> G_CAP groups, > F_CAP unioned forms, splits overflowing
+F_SPLIT_CAP slots) or an index whose positions overflow the 17-bit packed
+domain fall back to the flexible executor per plan — identical results,
+just not batched.
 """
 from __future__ import annotations
 
@@ -55,18 +67,26 @@ from repro.core.postings import PHRASE_BIAS, POS_BITS
 from repro.kernels.ops import I32_SENTINEL, banded_intersect_rows
 
 # table caps: a task exceeding these routes its whole plan to the flexible
-# executor (rare: >8 AND-groups or >8 unioned fetches per slot)
+# executor (rare: >8 AND-groups or >8 unioned form fetches per slot).
+# Fetches longer than P_CAP no longer escape: they are split across extra
+# F slots (up to F_SPLIT_CAP per group) by the segmented-gather tensorizer.
 G_CAP = 8
 F_CAP = 8
+F_SPLIT_CAP = 64
 P_CAP = 1 << 15
-P_FLOOR = 256
+P_FLOOR = 128
 GATHER_BUDGET = 1 << 23        # max T*G*F*P elements per jit'd gather
 
 
 class BatchDeviceIndex:
-    """All five posting streams concatenated into one device arena."""
+    """All five posting streams concatenated into one device arena.
 
-    def __init__(self, index: IndexSet):
+    `docs_per_shard` sets the doc-shard granularity of the segmented gather
+    (≤ fetch_tables.DOCS_PER_SHARD so packed int32 keys can't overflow);
+    smaller shards only add rows, never change results.
+    """
+
+    def __init__(self, index: IndexSet, docs_per_shard: int | None = None):
         b = index.basic.occurrences
         e = index.expanded.pairs
         s = index.stop_phrase.phrases
@@ -88,56 +108,96 @@ class BatchDeviceIndex:
             poss.append(np.asarray(pos, np.int32))
             dists.append(np.asarray(dist, np.int8) if dist is not None
                          else np.zeros(len(doc), np.int8))
-        self.arena_doc = jnp.asarray(np.concatenate(docs))
-        self.arena_pos = jnp.asarray(np.concatenate(poss))
-        self.arena_dist = jnp.asarray(np.concatenate(dists))
-        self.near_stop = jnp.asarray(np.asarray(index.basic.near_stop, np.int16))
+        self.arena_doc_np = np.concatenate(docs)
+        self.arena_pos_np = np.concatenate(poss)
+        self.arena_dist_np = np.concatenate(dists)
+        self.near_stop_np = np.asarray(index.basic.near_stop, np.int16)
+        # device copies are lazy: the serve tier builds per-dp-shard arenas
+        # from the numpy columns and must not also hold a full global copy
+        # on device
+        self._dev_arrays = None
         self.max_distance = int(index.basic.max_distance)
         self.n_docs = int(max((int(d.max()) + 1 for d in docs if len(d)),
                               default=0))
         self.max_pos = int(max((int(p.max()) for p in poss if len(p)),
                                default=0))
-        self.n_shards = max(1, -(-self.n_docs // DOCS_PER_SHARD))
+        self.docs_per_shard = max(1, min(docs_per_shard or DOCS_PER_SHARD,
+                                         DOCS_PER_SHARD))
+        self.n_shards = max(1, -(-self.n_docs // self.docs_per_shard))
+
+    def _dev(self, i: int):
+        if self._dev_arrays is None:
+            self._dev_arrays = (jnp.asarray(self.arena_doc_np),
+                                jnp.asarray(self.arena_pos_np),
+                                jnp.asarray(self.arena_dist_np),
+                                jnp.asarray(self.near_stop_np))
+        return self._dev_arrays[i]
+
+    @property
+    def arena_doc(self):
+        return self._dev(0)
+
+    @property
+    def arena_pos(self):
+        return self._dev(1)
+
+    @property
+    def arena_dist(self):
+        return self._dev(2)
+
+    @property
+    def near_stop(self):
+        return self._dev(3)
 
 
 @dataclasses.dataclass
 class _Task:
+    """One subplan (or its doc-only fallback): the host-side merge unit."""
     plan_i: int            # which plan in the batch
     subplan_i: int
     fallback: bool         # doc-only fallback task (stream-1)
-    groups: list           # seed-first ordered FetchGroups
     stop_checks: tuple     # seed group's near-stop checks
     mode: str = MODE_PHRASE
+    rows: list = dataclasses.field(default_factory=list)
+
+    def collect_keys(self) -> np.ndarray:
+        parts = [r.keys for r in self.rows if r.keys is not None and len(r.keys)]
+        return np.concatenate(parts) if parts else np.empty(0, np.int64)
+
+
+@dataclasses.dataclass
+class _RowGroup:
+    band: int
+    slots: list            # [(ResolvedFetch, arena_start, length)] — absolute
+
+
+@dataclasses.dataclass
+class _Row:
+    """One (task × doc shard) execution row of the fetch tables."""
+    task: _Task
+    shard: int             # doc-shard id (0 when unsharded / doc-only)
+    shard_base: int        # first doc of the shard (re-basing origin)
+    groups: list           # seed-first ordered _RowGroups, shard-clipped
     sortfree: bool = False  # constraint keys already ascending (see below)
     # filled after execution:
     keys: np.ndarray | None = None
 
 
-@dataclasses.dataclass
-class _Bucket:
-    G: int
-    F: int
-    P0: int                # seed pad (rarest list)
-    P: int                 # constraint-group pad
-    C: int
-    M: int
-    sortfree: bool
-    tasks: list = dataclasses.field(default_factory=list)
-
-
-@partial(jax.jit, static_argnames=("P0", "P", "n_shards", "impl", "interpret",
-                                   "presorted"))
-def _batch_step(arena_doc, arena_pos, arena_dist, near_stop, t, *,
-                P0: int, P: int, n_shards: int, impl: str, interpret: bool,
-                presorted: bool = False):
-    """One shape bucket, one call: gather → keys → per-shard int32 rebase →
-    banded rows intersection.  The seed (group 0) gets its own pad P0 —
-    the planner seeds with the RAREST list, so the membership probe side
-    stays narrow while constraint groups pad to P.  Returns (seed global
-    keys [T, F*P0] int64, found [T, F*P0] bool)."""
+def bucket_step_math(arena_doc, arena_pos, arena_dist, near_stop, t, *,
+                     P0: int, P: int, impl: str, interpret: bool,
+                     presorted: bool = False):
+    """One shape bucket of segmented rows: gather → keys → per-row int32
+    rebase against `shard_base` → banded rows intersection.  The seed
+    (group 0) gets its own pad P0 — the planner seeds with the RAREST list,
+    so the membership probe side stays narrow while constraint groups pad to
+    P.  Rows are shard-clipped host-side, so there is no per-shard device
+    loop and no in-shard masking.  Returns (seed global keys [T, F*P0]
+    int64, found [T, F*P0] bool).  Pure trace function — the engine jit-wraps
+    it (`_batch_step`) and the serve tier calls it inside shard_map."""
     T, G, F = t["start"].shape
     A = arena_doc.shape[0]
     dt1 = t["doc_task"]
+    base = t["shard_base"].astype(jnp.int64)
 
     def gather(sl, Pw):
         """Keys for group slice `sl` padded to Pw: [T, g, F, Pw]."""
@@ -163,7 +223,6 @@ def _batch_step(arena_doc, arena_pos, arena_dist, near_stop, t, *,
 
     idx0, gk0 = gather(slice(0, 1), P0)
     gk0 = gk0[:, 0]                                            # [T, F, P0]
-    _, gkc = gather(slice(1, None), P)                         # [T, G-1, F, P]
 
     # near-stop verification on the seed group (type-4 pivot checks)
     C = t["ns_packed"].shape[1]
@@ -184,52 +243,50 @@ def _batch_step(arena_doc, arena_pos, arena_dist, near_stop, t, *,
 
     m26 = (1 << POS_BITS) - 1
 
-    def rebase(gk, dt_b, s):
-        """Per-doc-shard int32 re-basing (doc-only keys ARE doc ids and are
-        resolved on shard 0 only)."""
-        base = s * DOCS_PER_SHARD
+    def rebase(gk, dt_b, b):
+        """Row-local int32 re-basing (doc-only keys ARE doc ids: globally
+        comparable in int32, no re-basing needed)."""
         dglob = jnp.where(dt_b, gk, gk >> POS_BITS)
-        in_shard = (dglob >= base) & (dglob < base + DOCS_PER_SHARD) \
-            & (gk < SENTINEL)
-        if s > 0:
-            in_shard &= ~dt_b
-        else:
-            in_shard = jnp.where(dt_b, gk < SENTINEL, in_shard)
-        k32 = jnp.where(dt_b, gk, ((dglob - base) << TABLE_POS_BITS) | (gk & m26))
-        return jnp.where(in_shard, k32, I32_SENTINEL).astype(jnp.int32)
+        k32 = jnp.where(dt_b, gk, ((dglob - b) << TABLE_POS_BITS) | (gk & m26))
+        return jnp.where(gk < SENTINEL, k32, I32_SENTINEL).astype(jnp.int32)
 
     a64 = gk0.reshape(T, F * P0)
-    found = jnp.zeros((T, F * P0), bool)
-    for s in range(n_shards):
-        a32 = rebase(gk0, dt1[:, None, None], s).reshape(T, F * P0)
-        if G > 1:
-            b32 = rebase(gkc, dt1[:, None, None, None], s).reshape(T, G - 1, F * P)
-            if not presorted:
-                b32 = jnp.sort(b32, axis=-1)
-            a_rows = jnp.broadcast_to(a32[:, None], (T, G - 1, F * P0))
-            hit = banded_intersect_rows(
-                a_rows.reshape(T * (G - 1), F * P0),
-                b32.reshape(T * (G - 1), F * P),
-                jnp.broadcast_to(t["band"][:, 1:], (T, G - 1)).reshape(-1),
-                implementation=impl, interpret=interpret)
-            hit = hit.reshape(T, G - 1, F * P0) | ~t["active"][:, 1:, None]
-            shard_found = hit.all(axis=1)
-        else:
-            shard_found = jnp.ones((T, F * P0), bool)
-        found |= shard_found & (a32 != I32_SENTINEL)
-    return a64, found
+    a32 = rebase(gk0, dt1[:, None, None], base[:, None, None]).reshape(T, F * P0)
+    if G > 1:
+        _, gkc = gather(slice(1, None), P)                     # [T, G-1, F, P]
+        b32 = rebase(gkc, dt1[:, None, None, None],
+                     base[:, None, None, None]).reshape(T, G - 1, F * P)
+        if not presorted:
+            b32 = jnp.sort(b32, axis=-1)
+        a_rows = jnp.broadcast_to(a32[:, None], (T, G - 1, F * P0))
+        hit = banded_intersect_rows(
+            a_rows.reshape(T * (G - 1), F * P0),
+            b32.reshape(T * (G - 1), F * P),
+            jnp.broadcast_to(t["band"][:, 1:], (T, G - 1)).reshape(-1),
+            implementation=impl, interpret=interpret)
+        hit = hit.reshape(T, G - 1, F * P0) | ~t["active"][:, 1:, None]
+        found = hit.all(axis=1)
+    else:
+        found = jnp.ones((T, F * P0), bool)
+    return a64, found & (a32 != I32_SENTINEL)
+
+
+_batch_step = partial(jax.jit, static_argnames=(
+    "P0", "P", "impl", "interpret", "presorted"))(bucket_step_math)
 
 
 class BatchExecutor:
     """Executes a batch of QueryPlans with result parity vs. the flexible
     `Executor` (same doc/pos sets, same postings accounting, same fallback
     semantics), but in O(#shape-buckets) jit dispatches instead of
-    O(#queries * #groups)."""
+    O(#queries * #groups) — and O(arena) gather/sort work total regardless
+    of the doc-shard count (segmented rows)."""
 
     def __init__(self, index: IndexSet, flex: Executor | None = None,
-                 impl: str = "ref", interpret: bool = True):
+                 impl: str = "ref", interpret: bool = True,
+                 docs_per_shard: int | None = None):
         self.index = index
-        self.dev = BatchDeviceIndex(index)
+        self.dev = BatchDeviceIndex(index, docs_per_shard=docs_per_shard)
         self.flex = flex or Executor(index)
         self.impl = impl
         self.interpret = interpret
@@ -240,24 +297,12 @@ class BatchExecutor:
 
     # -- tensorization ------------------------------------------------------
 
-    def _task_sortfree(self, ordered) -> bool:
-        """True when every constraint group's key row comes out of the
-        gather already ascending, so the device sort can be skipped: single
-        fetch per non-seed group (multi-fetch unions interleave), no
-        dist/pivot masks (holes in the middle break order — the arena is
-        (doc, pos)-sorted per fetch slice and the key packings are monotone
-        in (doc, pos); invalid-tail sentinels sort last), and a single doc
-        shard (out-of-shard masking would also punch mid-row holes)."""
-        if self.dev.n_shards != 1:
-            return False
-        for g in ordered[1:]:
-            if len(g.fetches) > 1:
-                return False
-            for f in g.fetches:
-                if (f.required_dist is not None or f.max_abs_dist is not None
-                        or f.pivot_from_dist):
-                    return False
-        return True
+    def _caps(self):
+        """(g_cap, f_cap, split_cap, p0_cap, p_cap) — module globals by
+        default so tests can shrink them; the serve executor overrides with
+        its fixed-shape table limits (p0_cap = seed pad, p_cap = constraint
+        pad)."""
+        return G_CAP, F_CAP, F_SPLIT_CAP, P_CAP, P_CAP
 
     def _order_groups(self, groups):
         """Seed-first ordering; None when no valid seed exists."""
@@ -273,25 +318,91 @@ class BatchExecutor:
         return [seed] + [g for g in groups if g is not seed]
 
     def _task_fits(self, groups) -> bool:
-        if len(groups) > G_CAP:
+        g_cap, f_cap, _, _, _ = self._caps()
+        if len(groups) > g_cap:
             return False
         for g in groups:
-            if len(g.fetches) > F_CAP:
+            if len(g.fetches) > f_cap:
                 return False
             if int(g.band) > self._pos_budget:
                 return False
             for f in g.fetches:
-                if f.length > P_CAP:
-                    return False
                 if f.stream == "first" and not _is_first_group(g):
                     return False
         return True
 
+    def _build_rows(self, task: _Task, ordered) -> list | None:
+        """Segment a task at doc-shard boundaries: one row per shard the
+        SEED group touches, every fetch clipped to the shard's sub-slice
+        (the arena is doc-sorted per fetch, so a shard's rows are one
+        `searchsorted` away).  Fetches longer than p_cap split across extra
+        F slots of the same group (slot unions).  None => plan goes flex."""
+        d = self.dev
+        dps = d.docs_per_shard
+        _, _, split_cap, p0_cap, p_cap = self._caps()
+        p0_cap, p_cap = max(1, p0_cap), max(1, p_cap)
+        if d.n_shards == 1:
+            per_group = [{0: [(f, d.bases[f.stream] + f.start, f.length)
+                              for f in g.fetches]} for g in ordered]
+            seed_shards = [0]
+        else:
+            per_group = []
+            for g in ordered:
+                m: dict = {}
+                for f in g.fetches:
+                    s0 = d.bases[f.stream] + f.start
+                    arr = d.arena_doc_np[s0:s0 + f.length]
+                    lo, hi = int(arr[0]) // dps, int(arr[-1]) // dps
+                    if lo == hi:
+                        m.setdefault(lo, []).append((f, s0, f.length))
+                        continue
+                    cuts = np.searchsorted(arr, np.arange(lo + 1, hi + 1) * dps)
+                    edges = np.concatenate(([0], cuts, [f.length]))
+                    for i in range(len(edges) - 1):
+                        ln = int(edges[i + 1] - edges[i])
+                        if ln:
+                            m.setdefault(lo + i, []).append(
+                                (f, s0 + int(edges[i]), ln))
+                per_group.append(m)
+            seed_shards = sorted(per_group[0])
+        rows = []
+        for sh in seed_shards:
+            groups, sortfree = [], True
+            for gi in range(len(ordered)):
+                cap = p0_cap if gi == 0 else p_cap
+                slots = []
+                for f, s, ln in per_group[gi].get(sh, ()):
+                    while ln > cap:
+                        slots.append((f, s, cap))
+                        s += cap
+                        ln -= cap
+                    slots.append((f, s, ln))
+                if len(slots) > split_cap:
+                    return None
+                if gi > 0:
+                    # sort-free: a single unsplit slot gathers ascending keys
+                    # (the arena is (doc, pos)-sorted per fetch and the key
+                    # packings are monotone); dist/pivot masks punch holes
+                    # mid-row and multi-slot unions interleave — both break
+                    # order.  Trailing pads sort last, so they are harmless.
+                    if len(slots) > 1:
+                        sortfree = False
+                    for f, _, _ in slots:
+                        if (f.required_dist is not None
+                                or f.max_abs_dist is not None
+                                or f.pivot_from_dist):
+                            sortfree = False
+                groups.append(_RowGroup(band=int(ordered[gi].band), slots=slots))
+            rows.append(_Row(task=task, shard=sh, shard_base=sh * dps,
+                             groups=groups, sortfree=sortfree))
+        return rows
+
     def _build_tasks(self, plan_i: int, plan: QueryPlan, tasks: list) -> bool:
-        """Append tasks for one plan; False => route plan to the flexible
-        executor (table caps exceeded)."""
+        """Append tasks (with segmented rows) for one plan; False => route
+        plan to the flexible executor (table caps exceeded)."""
         if self._pos_budget <= 0:
             return False
+        out = []
         for sp_i, sp in enumerate(plan.subplans):
             if not sp.supported:
                 continue
@@ -304,9 +415,11 @@ class BatchExecutor:
                 if any(f.stop_checks != checks for f in ordered[0].fetches) or \
                    any(f.stop_checks for g in ordered[1:] for f in g.fetches):
                     return False
-                tasks.append(_Task(plan_i, sp_i, False, ordered, checks,
-                                   mode=sp.mode,
-                                   sortfree=self._task_sortfree(ordered)))
+                task = _Task(plan_i, sp_i, False, checks, mode=sp.mode)
+                task.rows = self._build_rows(task, ordered)
+                if task.rows is None:
+                    return False
+                out.append(task)
             if sp.fallback_groups:
                 fb_dead = any(not g.fetches for g in sp.fallback_groups)
                 if not fb_dead:
@@ -316,43 +429,49 @@ class BatchExecutor:
                     # fallback tasks are validated eagerly (the flex-routing
                     # decision must not depend on results) but executed
                     # lazily: only when the main task comes back empty
-                    tasks.append(_Task(plan_i, sp_i, True, ordered, (),
-                                       mode=MODE_PHRASE,
-                                       sortfree=self._task_sortfree(ordered)))
+                    task = _Task(plan_i, sp_i, True, (), mode=MODE_PHRASE)
+                    task.rows = self._build_rows(task, ordered)
+                    if task.rows is None:
+                        return False
+                    out.append(task)
+        tasks.extend(out)
         return True
 
-    def _bucket_key(self, task: _Task):
-        G = max(2, _next_pow2(len(task.groups), floor=2))
-        F = _next_pow2(max(len(g.fetches) for g in task.groups), floor=1)
-        P0 = _next_pow2(max((f.length for f in task.groups[0].fetches),
+    def _bucket_key(self, row: _Row):
+        G = max(2, _next_pow2(len(row.groups), floor=2))
+        F = _next_pow2(max(len(g.slots) for g in row.groups), floor=1)
+        P0 = _next_pow2(max((ln for _, _, ln in row.groups[0].slots),
                             default=1), floor=P_FLOOR)
-        P = _next_pow2(max((f.length for g in task.groups[1:]
-                            for f in g.fetches), default=1), floor=P_FLOOR)
+        P = _next_pow2(max((ln for g in row.groups[1:] for _, _, ln in g.slots),
+                           default=1), floor=P_FLOOR)
         # near-stop slots are padded to coarse buckets (invalid slots are
         # inert) so check-count variation doesn't multiply compile shapes
-        if task.stop_checks:
-            C = _next_pow2(len(task.stop_checks), floor=4)
-            M = _next_pow2(max(len(ids) for _, ids in task.stop_checks), floor=2)
+        checks = row.task.stop_checks
+        if checks:
+            C = _next_pow2(len(checks), floor=4)
+            M = _next_pow2(max(len(ids) for _, ids in checks), floor=2)
         else:
             C = M = 0
         # only big slabs are worth a separate sort-free compile shape; for
         # small P the sort is cheap and splitting buckets costs more calls
-        sortfree = task.sortfree and P >= 2048
-        return (G, F, min(P0, P_CAP), min(P, P_CAP), C, M, sortfree)
+        sortfree = row.sortfree and P >= 2048
+        return (G, F, P0, P, C, M, sortfree)
 
-    def _tensorize_bucket(self, bucket: _Bucket, T_pad: int) -> dict:
-        t = alloc_batch_tables(T_pad, bucket.G, bucket.F, bucket.C, bucket.M)
-        bases = self.dev.bases
-        for ti, task in enumerate(bucket.tasks):
+    def _tensorize_bucket(self, rows: list, G: int, F: int, C: int, M: int,
+                          T_pad: int) -> dict:
+        t = alloc_batch_tables(T_pad, G, F, C, M)
+        for ti, row in enumerate(rows):
+            task = row.task
             t["doc_task"][ti] = task.fallback
+            t["shard_base"][ti] = row.shard_base
             if task.stop_checks:
                 pack_ns_checks(t, ti, task.stop_checks, self.dev.max_distance)
-            for gi, g in enumerate(task.groups):
+            for gi, g in enumerate(row.groups):
                 t["band"][ti, gi] = g.band
                 t["active"][ti, gi] = True
-                for fi, f in enumerate(g.fetches):
-                    t["start"][ti, gi, fi] = f.start + bases[f.stream]
-                    t["length"][ti, gi, fi] = f.length
+                for fi, (f, s, ln) in enumerate(g.slots):
+                    t["start"][ti, gi, fi] = s
+                    t["length"][ti, gi, fi] = ln
                     # mirror Executor._fetch_keys key selection
                     if f.stream == "first":
                         continue                        # doc key: no offset
@@ -372,41 +491,41 @@ class BatchExecutor:
 
     # -- execution ----------------------------------------------------------
 
-    def _run_tasks(self, tasks: list):
+    @staticmethod
+    def _scatter_row_keys(part: list, a64: np.ndarray, found: np.ndarray):
+        """Assign each row its found seed keys — one pass over the hit mask
+        instead of T boolean-indexings.  Shared with the serve executor so
+        the result-extraction semantics can never diverge."""
+        hit_rows, cols = np.nonzero(found)
+        keys = a64[hit_rows, cols]
+        splits = np.searchsorted(hit_rows, np.arange(1, len(part)))
+        for ti, row_keys in enumerate(np.split(keys, splits)):
+            part[ti].keys = row_keys
+
+    def _run_rows(self, rows: list):
         buckets: dict = {}
-        for task in tasks:
-            key = self._bucket_key(task)
-            b = buckets.setdefault(key, _Bucket(G=key[0], F=key[1], P0=key[2],
-                                                P=key[3], C=key[4], M=key[5],
-                                                sortfree=key[6]))
-            b.tasks.append(task)
+        for row in rows:
+            buckets.setdefault(self._bucket_key(row), []).append(row)
         d = self.dev
-        for (G, F, P0, P, C, M, sortfree), b in buckets.items():
+        for (G, F, P0, P, C, M, sortfree), rs in buckets.items():
             per_task = F * P0 + (G - 1) * F * P
             if C > 0:                  # near-stop gather adds an [F, P0, K] slab
-                per_task += F * P0 * int(d.near_stop.shape[1])
+                per_task += F * P0 * int(d.near_stop_np.shape[1])
             chunk = max(1, GATHER_BUDGET // per_task)
-            for lo in range(0, len(b.tasks), chunk):
-                part = b.tasks[lo:lo + chunk]
-                # tight T padding: big-P buckets usually hold 1-4 tasks, and
+            for lo in range(0, len(rs), chunk):
+                part = rs[lo:lo + chunk]
+                # tight T padding: big-P buckets usually hold 1-4 rows, and
                 # padding them to a large T multiplies the gather/sort slab;
                 # the extra pow2 compile variants are absorbed by warm-up
                 T_pad = _next_pow2(len(part), floor=4)
-                t = self._tensorize_bucket(
-                    dataclasses.replace(b, tasks=part), T_pad)
+                t = self._tensorize_bucket(part, G, F, C, M, T_pad)
                 tj = {k: jnp.asarray(v) for k, v in t.items()}
                 a64, found = _batch_step(
                     d.arena_doc, d.arena_pos, d.arena_dist, d.near_stop, tj,
-                    P0=P0, P=P, n_shards=d.n_shards, impl=self.impl,
-                    interpret=self.interpret, presorted=sortfree)
-                a64 = np.asarray(a64)
-                found = np.asarray(found)
-                # one pass over the hit mask instead of T boolean-indexings
-                rows, cols = np.nonzero(found)
-                keys = a64[rows, cols]
-                splits = np.searchsorted(rows, np.arange(1, len(part)))
-                for ti, task_keys in enumerate(np.split(keys, splits)):
-                    part[ti].keys = task_keys
+                    P0=P0, P=P, impl=self.impl, interpret=self.interpret,
+                    presorted=sortfree)
+                self._scatter_row_keys(part, np.asarray(a64),
+                                       np.asarray(found))
 
     # -- merge (mirrors Executor.execute) -----------------------------------
 
@@ -422,12 +541,12 @@ class BatchExecutor:
             types.append(sp.qtype)
             postings += sp.postings_read
             main = task_map.get((sp_i, False))
-            keys = main.keys if main is not None else np.empty(0, np.int64)
+            keys = main.collect_keys() if main is not None else np.empty(0, np.int64)
             if len(keys) == 0 and sp.fallback_groups:
                 used_fallback = True
                 postings += sum(g.postings_read for g in sp.fallback_groups)
                 fb = task_map.get((sp_i, True))
-                dkeys = fb.keys if fb is not None else np.empty(0, np.int64)
+                dkeys = fb.collect_keys() if fb is not None else np.empty(0, np.int64)
                 doc_only_keys.append(dkeys)
             else:
                 all_keys.append(keys)
@@ -446,18 +565,17 @@ class BatchExecutor:
             if self._build_tasks(i, plan, tasks):
                 plan_tasks[i] = tasks[start:]
             else:
-                del tasks[start:]
                 flex_plans[i] = plan
-        # round 1: main tasks; round 2: only the fallback tasks whose main
+        # round 1: main rows; round 2: only the fallback rows whose main
         # result came back empty (mirrors the flexible executor, which never
         # touches stream 1 when the positional search hits)
-        self._run_tasks([t for t in tasks if not t.fallback])
-        main_keys = {(t.plan_i, t.subplan_i): t.keys
+        self._run_rows([r for t in tasks if not t.fallback for r in t.rows])
+        main_keys = {(t.plan_i, t.subplan_i): t.collect_keys()
                      for t in tasks if not t.fallback}
-        needed = [t for t in tasks if t.fallback
-                  and len(main_keys.get((t.plan_i, t.subplan_i),
-                                        np.empty(0))) == 0]
-        self._run_tasks(needed)
+        self._run_rows([r for t in tasks if t.fallback
+                        and len(main_keys.get((t.plan_i, t.subplan_i),
+                                              np.empty(0))) == 0
+                        for r in t.rows])
         out: list[SearchResult | None] = [None] * len(plans)
         for i, plan in enumerate(plans):
             if i in flex_plans:

@@ -41,9 +41,11 @@ class _BatchSearchMixin:
     """Shared lazy batch-executor plumbing: the batched arena duplicates the
     posting streams on device, so per-query-only users never pay for it."""
 
-    def _init_batch(self, batch_impl: str, interpret: bool):
+    def _init_batch(self, batch_impl: str, interpret: bool,
+                    docs_per_shard: int | None = None):
         self._batch_impl = batch_impl
         self._interpret = interpret
+        self._docs_per_shard = docs_per_shard
         self._batch_executor = None
 
     @property
@@ -51,7 +53,8 @@ class _BatchSearchMixin:
         if self._batch_executor is None:
             self._batch_executor = BatchExecutor(
                 self.index, flex=self.executor, impl=self._batch_impl,
-                interpret=self._interpret)
+                interpret=self._interpret,
+                docs_per_shard=self._docs_per_shard)
         return self._batch_executor
 
     def search_batch(self, queries, modes: str | list = MODE_PHRASE,
@@ -73,11 +76,11 @@ class AdditionalIndexEngine(_BatchSearchMixin):
     """
 
     def __init__(self, index: IndexSet, batch_impl: str = "ref",
-                 interpret: bool = True):
+                 interpret: bool = True, docs_per_shard: int | None = None):
         self.index = index
         self.planner = Planner(index)
         self.executor = Executor(index)
-        self._init_batch(batch_impl, interpret)
+        self._init_batch(batch_impl, interpret, docs_per_shard)
 
     def search(self, surface_ids, mode: str = MODE_PHRASE,
                window: int | None = None, max_results: int | None = None) -> SearchResult:
@@ -92,10 +95,10 @@ class OrdinaryEngine(_BatchSearchMixin):
     """Sphinx-style baseline: one inverted index, full posting-list reads."""
 
     def __init__(self, index: IndexSet, batch_impl: str = "ref",
-                 interpret: bool = True):
+                 interpret: bool = True, docs_per_shard: int | None = None):
         self.index = index
         self.executor = Executor(index)
-        self._init_batch(batch_impl, interpret)
+        self._init_batch(batch_impl, interpret, docs_per_shard)
         self._counts = index.ordinary.counts()
 
     def _slot_group(self, slot, forms, band) -> FetchGroup:
@@ -133,6 +136,23 @@ class OrdinaryEngine(_BatchSearchMixin):
                window: int | None = None, max_results: int | None = None) -> SearchResult:
         plan = self.plan(surface_ids, mode=mode, window=window)
         return self.executor.execute(plan, max_results=max_results)
+
+
+def near_query_stop_confined(lexicon, analyzer, surface_ids,
+                             mode: str = MODE_NEAR) -> bool:
+    """True when a near-mode query contains a stop basic form.
+
+    The paper's Type-4 rule ("If one of the query words has a stop basic
+    form, the search is confined to sequential words") re-classifies such
+    queries to sequential matching, so an every-other-word query sampled
+    from an indexed document legitimately may not find its source — recall
+    is only promised for phrase queries and stop-free near queries.  The
+    benchmark's `missed_source_docs` and the serve parity tests share this
+    single predicate."""
+    if mode != MODE_NEAR:
+        return False
+    return any(bool(lexicon.is_stop(np.asarray(analyzer.forms_of(s))).any())
+               for s in surface_ids)
 
 
 # ---------------------------------------------------------------------------

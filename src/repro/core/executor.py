@@ -4,9 +4,11 @@ The planner resolves every fetch to (start, length) slices; the executor is
 pure array math on device: slice -> key construction -> (banded) k-way
 intersection -> anchor unpacking.  Intersections run through jit'd,
 shape-bucketed primitives (padded to powers of two) so the compile cache
-stays small while latencies remain measurable; the same math is what the
-production `serve_step` (serve/search_serve.py) lowers at cluster scale, and
-what the Pallas `banded_intersect` kernel implements for TPU.
+stays small while latencies remain measurable.  This per-query walker is
+the correctness oracle and escape hatch for the batched executor
+(core/batch_executor.py), whose tables both the engine's `search_batch`
+and the distributed serve tier (serve/search_serve.py) execute; the Pallas
+`banded_intersect` kernel implements the same membership test for TPU.
 """
 from __future__ import annotations
 

@@ -1,41 +1,35 @@
 """Tensorized fetch tables — the shared plan→device schema.
 
 The planner resolves every posting fetch to an explicit (start, length) slice
-(planner.py); both batched execution paths consume those plans as fixed-shape
-integer tables instead of Python loops:
+(planner.py); the batched executor (core/batch_executor.py) consumes those
+plans as fixed-shape integer tables instead of Python loops, and the
+distributed serve tier (serve/search_serve.py) runs the SAME tables — plus a
+per-row `owner` column — inside shard_map over document shards.  There is
+one schema, one tensorizer, one bucket step.
 
-* the **serve** path (serve/search_serve.py) packs one conjunctive plan per
-  query into `[Q, G]` tables (one fetch per group, primary form) and runs
-  them inside shard_map over document shards;
-* the **engine** path (core/batch_executor.py) packs every subplan of every
-  query into richer `[T, G, F]` tables (T tasks = subplans, F fetch slots
-  per group, so unions of morphological forms / stop-phrase parts ride along)
-  and runs the whole batch in one jit'd call.
-
-Both share the same key domain: compact per-shard int32 keys
-
-    key = doc_local << TABLE_POS_BITS | (pos - offset + TABLE_BIAS)
-
-with doc_local = doc - shard * DOCS_PER_SHARD, which is the domain the Pallas
-`banded_intersect` kernel operates on (TPU vector units have no native int64
-lane type).  DOCS_PER_SHARD is chosen so packed keys stay below 2**30 and
-`key ± band` can never wrap int32 (the kernel's dense compare adds the band).
-
-Serve-table schema ([Q, G] per query batch; replicated to every shard):
-
-    start/length/offset/req_dist/band : int32 [Q, G]
-    active                            : bool  [Q, G]
-    ns_packed                         : int16 [Q, C]   (type-4 pivot checks)
-
-Batch-executor schema ([T, G, F] per task batch; see batch_executor.py):
+Every subplan of every query becomes one or more *rows* (one per doc shard
+the seed list touches — the shard-segmented gather), with F fetch slots per
+group carrying unions of morphological forms / expanded orientations /
+stop-phrase parts / long-list splits:
 
     start/length/offset/req_dist/max_abs : int32 [T, G, F]
     pivot_from_dist                      : bool  [T, G, F]
     band                                 : int32 [T, G]
     active                               : bool  [T, G]
     doc_task                             : bool  [T]       (doc-level fallback)
+    shard_base                           : int32 [T]       (row's first doc)
     ns_packed                            : int16 [T, C, M]
     ns_valid                             : bool  [T, C, M]
+    owner                                : int32 [T]       (serve only: dp shard)
+
+The intersect key domain is compact per-shard int32
+
+    key = (doc - shard_base) << TABLE_POS_BITS | (pos - offset + TABLE_BIAS)
+
+which is what the Pallas `banded_intersect` kernel operates on (TPU vector
+units have no native int64 lane type).  DOCS_PER_SHARD bounds the shard size
+so packed keys stay below 2**30 and `key ± band` can never wrap int32 (the
+kernel's dense compare adds the band).
 
 Group 0 is always the seed (the pivot / rarest band-0 list, or the
 near-stop-checked pivot); groups 1..G-1 constrain it via banded-key
@@ -51,82 +45,35 @@ from repro.core.postings import NS_SHIFT
 
 TABLE_POS_BITS = 17            # in-doc position < 131072
 TABLE_BIAS = 64                # headroom so (pos - offset) never underflows
-SENT32 = np.int32(2**30 - 1)   # < int32 max so key + band never wraps
 NO_DIST = np.int32(-128)       # req_dist wildcard (int8 dist can't reach it)
 NO_MAX_ABS = np.int32(2**20)   # |dist| cap wildcard (always satisfied)
 
 # doc_local must fit (30 - TABLE_POS_BITS) bits so packed keys stay < 2**30
 DOCS_PER_SHARD = 1 << (30 - TABLE_POS_BITS)
 
-# serve aliases (the original names; search_serve re-exports them)
-SERVE_POS_BITS = TABLE_POS_BITS
-SERVE_BIAS = TABLE_BIAS
 
-
-def query_table_specs(cfg) -> dict:
-    """ShapeDtypeStructs for one serve query batch (replicated to every
-    shard).  `cfg` needs `.queries`, `.groups`, `.check_slots`."""
-    Q, G, C = cfg.queries, cfg.groups, cfg.check_slots
+def batch_table_specs(T: int, G: int, F: int, C: int, M: int,
+                      owner: bool = False) -> dict:
+    """ShapeDtypeStructs matching alloc_batch_tables (+ the serve-only
+    `owner` column when requested)."""
     i32 = jnp.int32
-    return {
-        "start": jax.ShapeDtypeStruct((Q, G), i32),
-        "length": jax.ShapeDtypeStruct((Q, G), i32),
-        "offset": jax.ShapeDtypeStruct((Q, G), i32),
-        "req_dist": jax.ShapeDtypeStruct((Q, G), i32),
-        "band": jax.ShapeDtypeStruct((Q, G), i32),
-        "active": jax.ShapeDtypeStruct((Q, G), jnp.bool_),
-        "ns_packed": jax.ShapeDtypeStruct((Q, C), jnp.int16),
+    specs = {
+        "start": jax.ShapeDtypeStruct((T, G, F), i32),
+        "length": jax.ShapeDtypeStruct((T, G, F), i32),
+        "offset": jax.ShapeDtypeStruct((T, G, F), i32),
+        "req_dist": jax.ShapeDtypeStruct((T, G, F), i32),
+        "max_abs": jax.ShapeDtypeStruct((T, G, F), i32),
+        "pivot_from_dist": jax.ShapeDtypeStruct((T, G, F), jnp.bool_),
+        "band": jax.ShapeDtypeStruct((T, G), i32),
+        "active": jax.ShapeDtypeStruct((T, G), jnp.bool_),
+        "doc_task": jax.ShapeDtypeStruct((T,), jnp.bool_),
+        "shard_base": jax.ShapeDtypeStruct((T,), i32),
+        "ns_packed": jax.ShapeDtypeStruct((T, C, M), jnp.int16),
+        "ns_valid": jax.ShapeDtypeStruct((T, C, M), jnp.bool_),
     }
-
-
-def tensorize_plans(cfg, plans, stream_bases: dict | None = None,
-                    lengths_cap: int | None = None, max_distance: int = 5):
-    """Pack QueryPlans (AND-groups, primary fetch per group) into [Q, G]
-    serve tables.
-
-    The batched serve path executes the conjunctive plan (one fetch per
-    group, primary morphological form); queries needing unions fall back to
-    the flexible executor (or the engine's batch_executor, which keeps F
-    fetch slots per group).  stream_bases maps fetch.stream -> arena offset
-    (from serve.build_arenas).  Returns numpy tables per query_table_specs.
-
-    `cfg` needs `.queries`, `.groups`, `.check_slots`, `.postings_pad`,
-    `.p_seed`, `.n_basic`, `.n_expanded`.
-    """
-    Q, G, C = cfg.queries, cfg.groups, cfg.check_slots
-    bases = stream_bases or {"basic": 0, "expanded": cfg.n_basic,
-                             "stop": cfg.n_basic + cfg.n_expanded}
-    t = {
-        "start": np.zeros((Q, G), np.int32),
-        "length": np.zeros((Q, G), np.int32),
-        "offset": np.zeros((Q, G), np.int32),
-        "req_dist": np.full((Q, G), NO_DIST, np.int32),
-        "band": np.zeros((Q, G), np.int32),
-        "active": np.zeros((Q, G), bool),
-        "ns_packed": np.full((Q, C), -1, np.int16),
-    }
-    cap = lengths_cap or cfg.postings_pad
-    for qi, plan in enumerate(plans[:Q]):
-        sp = plan.subplans[0]
-        groups = [g for g in sp.groups if g.fetches]
-        # seed first: the near-stop-checked pivot if any, else a band-0 group
-        groups = sorted(groups, key=lambda g: (not g.fetches[0].stop_checks
-                                               if g.band == 0 else True, g.band))[: G]
-        for gi, g in enumerate(groups):
-            f = g.fetches[0]
-            if f.stream not in bases:
-                continue            # 'first'/'ordinary' stay on the flex path
-            t["start"][qi, gi] = f.start + bases[f.stream]
-            t["length"][qi, gi] = min(f.length, cfg.p_seed if gi == 0 else cap)
-            t["offset"][qi, gi] = f.offset
-            t["band"][qi, gi] = g.band
-            t["active"][qi, gi] = True
-            if f.required_dist is not None:
-                t["req_dist"][qi, gi] = f.required_dist
-            if gi == 0 and f.stop_checks:
-                for ci, (delta, ids) in enumerate(f.stop_checks[:C]):
-                    t["ns_packed"][qi, ci] = ((delta + max_distance) << NS_SHIFT) | ids[0]
-    return t
+    if owner:
+        specs["owner"] = jax.ShapeDtypeStruct((T,), i32)
+    return specs
 
 
 def alloc_batch_tables(T: int, G: int, F: int, C: int, M: int) -> dict:
@@ -141,6 +88,7 @@ def alloc_batch_tables(T: int, G: int, F: int, C: int, M: int) -> dict:
         "band": np.zeros((T, G), np.int32),
         "active": np.zeros((T, G), bool),
         "doc_task": np.zeros((T,), bool),
+        "shard_base": np.zeros((T,), np.int32),
         "ns_packed": np.full((T, C, M), -1, np.int16),
         "ns_valid": np.zeros((T, C, M), bool),
     }

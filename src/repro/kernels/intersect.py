@@ -9,8 +9,12 @@ tile pair the membership test is a dense broadcast compare on the VPU:
 branch-free, fully vectorized, O(matching-band) tile fetches overall.
 
 Keys are *compact per-shard* int32 (doc_local << pos_bits | pos): TPU vector
-units have no native int64 lane type, so the executor's global 63-bit keys
-are re-based per document shard before hitting this kernel (ops.py).
+units have no native int64 lane type, so the batched executor's global
+63-bit keys are re-based against each row's own doc-shard base before
+hitting this kernel (ops.py).  Rows arrive shard-segmented
+(batch_executor._build_rows): every (a, b, band) row pair holds exactly one
+doc shard's postings, for both the engine's jit'd bucket step and the serve
+tier's shard_map'd step — the kernel itself never sees a shard loop.
 
 band = 0  -> exact membership (precise phrase matching via shifted keys)
 band = W  -> positional window join (word-set-with-distance queries)

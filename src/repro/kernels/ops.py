@@ -94,7 +94,9 @@ def banded_intersect_rows(a: jax.Array, b_sorted: jax.Array, bands: jax.Array,
     via scalar prefetch, so the batch executor never recompiles per band
     pattern).  Pa/Pb must be multiples of 128.  I32_SENTINEL entries of `a`
     never match.  This is the engine hot path: each row is one (seed group,
-    constraint group) membership test of the batched executor.
+    constraint group) membership test of a shard-segmented batch-executor
+    row — the same call the serve tier runs inside shard_map, where every
+    logical row's keys are re-based against its own doc shard.
     """
     assert a.dtype == jnp.int32 and b_sorted.dtype == jnp.int32
     N, pa = a.shape

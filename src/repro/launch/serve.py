@@ -22,52 +22,38 @@ from repro.configs.registry import get_arch
 
 
 def serve_search(n_queries: int):
-    from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
-                            build_all, generate_corpus, make_lexicon_and_analyzer)
+    from repro.core import (CorpusConfig, LexiconConfig, build_all,
+                            generate_corpus, make_lexicon_and_analyzer)
     from repro.core.planner import MODE_PHRASE
     from repro.launch.mesh import make_host_mesh
-    from repro.serve.search_serve import (SearchServeConfig, build_arenas,
-                                          make_search_serve_step,
-                                          tensorize_plans)
+    from repro.serve.search_serve import SearchServe, SearchServeConfig
     lex_cfg = LexiconConfig(n_surface=20_000, n_base=15_000, n_stop=400,
                             n_frequent=1200, seed=0)
     lex, ana = make_lexicon_and_analyzer(lex_cfg)
     corpus = generate_corpus(lex_cfg, CorpusConfig(n_docs=300, seed=0))
     index = build_all(corpus, lex, ana)
-    engine = AdditionalIndexEngine(index)
-    cfg = SearchServeConfig(
-        queries=n_queries, groups=4, postings_pad=8192, seed_pad=2048,
-        packed_keys=True, top_m=64,
-        n_basic=index.basic.occurrences.n_postings,
-        n_expanded=index.expanded.pairs.n_postings,
-        n_stop=index.stop_phrase.phrases.n_postings)
-    arenas, bases = build_arenas(index, cfg)
     mesh = make_host_mesh(data=1, model=1)
-    step = jax.jit(make_search_serve_step(cfg, mesh))
+    cfg = SearchServeConfig(queries=n_queries, postings_pad=8192,
+                            seed_pad=2048, n_basic=1, n_expanded=1,
+                            n_stop=1, n_first=1)
+    serve = SearchServe(index, cfg, mesh)
 
     rng = np.random.default_rng(0)
-    plans = []
-    while len(plans) < cfg.queries:
+    queries = []
+    while len(queries) < n_queries:
         d = int(rng.integers(corpus.n_docs))
         toks = corpus.doc(d)
         if len(toks) < 10:
             continue
         st = int(rng.integers(len(toks) - 6))
-        plan = engine.plan(toks[st:st + 3].tolist(), mode=MODE_PHRASE)
-        if plan.subplans[0].supported:
-            plans.append(plan)
-    tables = {k: jnp.asarray(v) for k, v in
-              tensorize_plans(cfg, plans, stream_bases=bases).items()}
-    with mesh:
-        hits, counts = step(arenas, tables)     # warm
-        jax.block_until_ready(hits)
-        t0 = time.perf_counter()
-        hits, counts = step(arenas, tables)
-        jax.block_until_ready(hits)
-        dt = time.perf_counter() - t0
-    print(f"[serve/search] {cfg.queries} queries in {dt*1e3:.1f} ms "
-          f"({dt/cfg.queries*1e6:.0f} us/query, CPU); "
-          f"hit counts: {np.asarray(counts)[:8].tolist()}...")
+        queries.append(toks[st:st + 3].tolist())
+    results = serve.search_batch(queries, modes=MODE_PHRASE)   # warm
+    t0 = time.perf_counter()
+    results = serve.search_batch(queries, modes=MODE_PHRASE)
+    dt = time.perf_counter() - t0
+    print(f"[serve/search] {n_queries} queries in {dt*1e3:.1f} ms "
+          f"({dt/n_queries*1e6:.0f} us/query, CPU, {serve.n_dp} doc shard(s)); "
+          f"hit counts: {[len(r.doc) for r in results[:8]]}...")
 
 
 def serve_lm(arch: str, n_tokens: int):

@@ -258,7 +258,7 @@ def forward_with_cache(cfg: tfm.TransformerConfig, params, tokens):
         if cfg.moe:
             from repro.models.moe import moe_ffn
             y, _ = moe_ffn(h2, p["router"], p["wg"],
-                           p["wu"], p["wd"], cfg.moe, dt)
+                           p["wu"], p["wd"], cfg.moe, dt, dropless=True)
         else:
             y = L.swiglu(h2, p["wg"], p["wu"], p["wd"], dt)
         x = x + y

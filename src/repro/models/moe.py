@@ -52,10 +52,19 @@ def _dispatch_group(x: jax.Array, gate_idx: jax.Array, C: int, E: int, K: int):
 
 
 def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate: jax.Array, w_up: jax.Array,
-            w_down: jax.Array, cfg: MoEConfig, dtype) -> tuple[jax.Array, jax.Array]:
+            w_down: jax.Array, cfg: MoEConfig, dtype,
+            dropless: bool = False) -> tuple[jax.Array, jax.Array]:
     """x: [..., D] tokens (e.g. [B, S, D] — groups split the LEADING dim so
     dp-sharded batches reshape to [G, Tg, D] without crossing mesh axes);
     router_w: [D, E]; w_*: [E, D, Fe] / [E, Fe, D].
+
+    `dropless=True` sizes the expert buffers to the worst case (an expert can
+    receive at most Tg assignments — top_k experts are distinct per token) so
+    no assignment is ever dropped.  Inference must run dropless: capacity
+    overflow is resolved in token order across the whole group, so a dropped
+    assignment depends on *other* tokens in the batch — semantics incremental
+    decode cannot reproduce (and the source of decode-vs-forward mismatches).
+    Training keeps the capacity-factor dispatch.
 
     Returns (y with x's shape, aux_loss scalar fp32).
     """
@@ -69,7 +78,7 @@ def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate: jax.Array, w_up: jax.Arra
     if G > 1 and (lead[0] % G != 0):
         G = 1                        # groups must split the leading dim
     Tg = T // G
-    C = int((Tg * K / E) * cfg.capacity_factor) + 1
+    C = Tg if dropless else int((Tg * K / E) * cfg.capacity_factor) + 1
 
     xg = x.reshape(G, Tg, D)
     if cfg.group_pspec is not None:

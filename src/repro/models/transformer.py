@@ -133,7 +133,7 @@ def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
 # ---------------------------------------------------------------------------
 
 def _layer_fwd(cfg: TransformerConfig, x: jax.Array, p: dict,
-               positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+               positions: jax.Array, train: bool = False) -> tuple[jax.Array, jax.Array]:
     """One decoder layer.  x: [B, S, D] in cfg.dtype."""
     B, S, D = x.shape
     Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -171,7 +171,7 @@ def _layer_fwd(cfg: TransformerConfig, x: jax.Array, p: dict,
     h = L.rms_norm(x, p["ln2"])
     if cfg.moe:
         y, aux = moe_ffn(h, p["router"], p["wg"], p["wu"],
-                         p["wd"], cfg.moe, dt)
+                         p["wd"], cfg.moe, dt, dropless=not train)
     else:
         y = L.swiglu(h, p["wg"], p["wu"], p["wd"], dt)
         aux = jnp.zeros((), jnp.float32)
@@ -183,8 +183,12 @@ def _layer_fwd(cfg: TransformerConfig, x: jax.Array, p: dict,
 
 
 def forward(cfg: TransformerConfig, params: dict, tokens: jax.Array,
-            positions: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
-    """tokens: [B, S] int32 -> (logits [B, S, V] fp32, aux_loss scalar)."""
+            positions: Optional[jax.Array] = None,
+            train: bool = False) -> tuple[jax.Array, jax.Array]:
+    """tokens: [B, S] int32 -> (logits [B, S, V] fp32, aux_loss scalar).
+
+    `train=True` enables capacity-based MoE token dropping (the training
+    dispatch); eval/serving runs dropless so decode_step matches exactly."""
     B, S = tokens.shape
     dt = cfg.dtype
     x = params["embed"].astype(dt)[tokens]
@@ -194,7 +198,7 @@ def forward(cfg: TransformerConfig, params: dict, tokens: jax.Array,
         positions = jnp.arange(S, dtype=jnp.int32)[None, :]
 
     def body(x, p):
-        y, aux = _layer_fwd(cfg, x, p, positions)
+        y, aux = _layer_fwd(cfg, x, p, positions, train=train)
         return y, aux
 
     if cfg.remat:
@@ -215,7 +219,7 @@ def forward(cfg: TransformerConfig, params: dict, tokens: jax.Array,
 
 def loss_fn(cfg: TransformerConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
     """batch: tokens [B, S] int32, labels [B, S] int32 (-100 = ignore)."""
-    logits, aux = forward(cfg, params, batch["tokens"])
+    logits, aux = forward(cfg, params, batch["tokens"], train=True)
     logits = logits.astype(jnp.float32)  # softmax math always fp32
     if cfg.vocab_padded != cfg.vocab:   # mask padding rows out of the softmax
         pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
@@ -275,7 +279,8 @@ def decode_step(cfg: TransformerConfig, params: dict, cache: dict,
         x = x + jnp.einsum("bh,hd->bd", o.reshape(B, Hq * hd), p["wo"].astype(dt))
         h2 = L.rms_norm(x, p["ln2"])
         if cfg.moe:
-            y, _ = moe_ffn(h2, p["router"], p["wg"], p["wu"], p["wd"], cfg.moe, dt)
+            y, _ = moe_ffn(h2, p["router"], p["wg"], p["wu"], p["wd"], cfg.moe,
+                           dt, dropless=True)
         else:
             y = L.swiglu(h2, p["wg"], p["wu"], p["wd"], dt)
         return x + y, (ck, cv)

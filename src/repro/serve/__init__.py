@@ -1,1 +1,4 @@
 """Serving layer: batched phrase-query serving + LM decode serving."""
+from repro.serve.search_serve import (SearchServe, SearchServeConfig,  # noqa: F401
+                                      arena_specs, make_search_serve_step,
+                                      query_table_specs)

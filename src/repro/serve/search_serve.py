@@ -1,260 +1,302 @@
 """Production batched phrase-query serving over a document-sharded index.
 
-Distributed-IR layout (DESIGN.md §5): documents are partitioned over the
-dp = pod x data mesh axes; every shard holds its own posting arena (all three
-indexes concatenated into one (doc, pos, dist) structure-of-arrays so a fetch
-is a single gather) and executes the full query batch; per-shard hits are
-all-gathered and merged.  The `model` axis replicates the index and serves to
-scale query throughput (the launcher round-robins query batches over it).
+This tier runs the SAME execution engine as the in-process engines: plans
+are tensorized into the batch-executor row tables (core/fetch_tables.py,
+core/batch_executor.py) — full subplan unions, all lemma forms, doc-only
+fallbacks, near-stop checks — and executed with the same `bucket_step_math`
+the engine jit's, wrapped in shard_map over document shards.  The old
+serve-only single-subplan executor (first subplan, primary form per group)
+is gone; serve results are bit-identical to `engine.search_batch`.
 
-The planner's resolved plans are tensorized into fixed-shape fetch tables
-(schema + tensorization shared with the engine's batch executor via
-core/fetch_tables.py):
+Distributed-IR layout: documents are partitioned contiguously over the
+dp = pod x data mesh axes; every dp shard holds only its own slice of the
+posting arena (all five streams concatenated so a fetch is a single gather)
+plus the matching near-stop rows.  Host-side tensorization is shard-
+segmented (batch_executor._build_rows): each execution row targets exactly
+one doc shard, so a row's fetches live wholly inside one dp shard's arena
+and carry an `owner` column.  Inside shard_map every device executes only
+its own rows (others are masked inactive), and the per-row results — each
+produced on exactly one device — are combined with a single `pmin` over the
+dp axes.  The `model` axis replicates the index and serves to scale query
+throughput (the launcher round-robins query batches over it).
 
-    start/length/offset/req_dist/band/active : [Q, G]
-    ns_packed                                : [Q, C]  (type-4 pivot checks)
-
-Group 0 is the seed (the pivot / rarest list); groups 1..G-1 constrain it via
-banded-key membership (band 0 = precise phrase, band W = word-set window).
-Keys are compact per-shard int32 (doc_local << 17 | pos) — the domain the
-Pallas `banded_intersect` kernel operates on.
+Per-row work is O(the row's own postings): no device ever re-sorts another
+shard's slab, so adding doc shards adds rows (capacity) without inflating
+per-shard step cost.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.fetch_tables import (NO_DIST, SENT32, SERVE_BIAS,
-                                     SERVE_POS_BITS, query_table_specs,
-                                     tensorize_plans)
+from repro.core.batch_executor import BatchExecutor, bucket_step_math
+from repro.core.builder import IndexSet
+from repro.core.executor import SENTINEL, SearchResult
+from repro.core.fetch_tables import batch_table_specs
+from repro.core.planner import MODE_PHRASE, Planner
 
-__all__ = ["SERVE_POS_BITS", "SERVE_BIAS", "SENT32", "NO_DIST",
-           "SearchServeConfig", "query_table_specs", "arena_specs",
-           "make_search_serve_step", "build_arenas", "tensorize_plans"]
+__all__ = ["SearchServeConfig", "SearchServe", "arena_specs",
+           "query_table_specs", "make_search_serve_step"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SearchServeConfig:
     name: str = "veretennikov-serve"
-    queries: int = 64              # Q: batch size
-    groups: int = 4                # G: fetch groups per query
-    postings_pad: int = 32768      # P: padded postings per constraint fetch
-    seed_pad: int = 0              # seed (pivot) fetch pad; 0 = postings_pad.
+    queries: int = 64              # query batch size (sizing hint for rows)
+    rows: int = 0                  # T: execution rows per step; 0 = 2*queries
+    groups: int = 8                # G: fetch groups per row (seed + G-1)
+    fetch_slots: int = 8           # F: union slots per group (forms + splits)
+    postings_pad: int = 32768      # P: padded postings per constraint slot
+    seed_pad: int = 0              # P0: seed (pivot) slot pad; 0 = postings_pad.
                                    # The planner seeds with the RAREST list,
-                                   # so a small pad bounds the stream-3
-                                   # gather + membership searches (§Perf)
-    top_m: int = 128               # hits returned per query
+                                   # so a small pad bounds the seed gather +
+                                   # membership searches (§Perf)
     check_slots: int = 4           # C: near-stop checks on the pivot group
+    check_forms: int = 2           # M: stop forms per near-stop check
     ns_k: int = 20                 # stream-3 slots per posting
-    sort_free: bool = False        # cummax-fill instead of sorting dist holes
-    packed_keys: bool = False      # arena stores doc<<17|pos+BIAS pre-packed
-                                   # (one i32 gather per fetch instead of two)
-    # per-shard arena sizes (basic | expanded | stop segments concatenated)
+    # per-shard arena sizes (basic|expanded|stop|first segments concatenated)
     n_basic: int = 10_000_000
     n_expanded: int = 17_000_000
     n_stop: int = 23_000_000
+    n_first: int = 4_000_000
     impl: str = "ref"              # intersect implementation (ref | pallas)
+    interpret: bool = True         # pallas interpreter (True on CPU hosts)
 
     @property
     def n_arena(self) -> int:
-        return self.n_basic + self.n_expanded + self.n_stop
+        return self.n_basic + self.n_expanded + self.n_stop + self.n_first
 
     @property
     def p_seed(self) -> int:
         return self.seed_pad or self.postings_pad
 
+    @property
+    def task_rows(self) -> int:
+        return self.rows or 2 * self.queries
+
+
+def _dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _dp_size(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in _dp_axes(mesh))
+
 
 def arena_specs(cfg: SearchServeConfig, n_shards: int) -> dict:
     """ShapeDtypeStructs for the stacked per-shard index arenas."""
     i32 = jnp.int32
-    if cfg.packed_keys:
-        return {
-            "arena_key": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
-            "arena_dist": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), jnp.int8),
-            "basic_ns": jax.ShapeDtypeStruct((n_shards, cfg.n_basic, cfg.ns_k), jnp.int16),
-        }
     return {
         "arena_doc": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
         "arena_pos": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
         "arena_dist": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), jnp.int8),
-        "basic_ns": jax.ShapeDtypeStruct((n_shards, cfg.n_basic, cfg.ns_k), jnp.int16),
+        "basic_ns": jax.ShapeDtypeStruct((n_shards, cfg.n_basic, cfg.ns_k),
+                                         jnp.int16),
     }
 
 
+def query_table_specs(cfg: SearchServeConfig) -> dict:
+    """ShapeDtypeStructs for one serve row batch (replicated to every shard):
+    the batch-executor schema plus the per-row `owner` column."""
+    return batch_table_specs(cfg.task_rows, cfg.groups, cfg.fetch_slots,
+                             cfg.check_slots, cfg.check_forms, owner=True)
+
+
+# ---------------------------------------------------------------------------
+# the serve step: shard_map'd bucket math + one pmin merge
 # ---------------------------------------------------------------------------
 
 
-def _one_query(cfg: SearchServeConfig, arena_doc, arena_pos, arena_dist,
-               basic_ns, q):
-    n = arena_doc.shape[0]    # packed mode passes arena_key as arena_doc
-
-    def fetch(g, pad):
-        iota = jnp.arange(pad, dtype=jnp.int32)
-        idx = jnp.clip(q["start"][g] + iota, 0, n - 1)
-        ok = iota < q["length"][g]
-        dist = arena_dist[idx].astype(jnp.int32)
-        rd = q["req_dist"][g]
-        ok = ok & ((rd == NO_DIST) | (dist == rd))
-        if arena_pos is None:
-            # packed arena: key already doc<<17|pos+BIAS; offset shifts pos
-            keys = arena_doc[idx] - q["offset"][g]
-        else:
-            doc = arena_doc[idx]
-            pos = arena_pos[idx]
-            keys = (doc << SERVE_POS_BITS) | (pos - q["offset"][g] + SERVE_BIAS)
-        return jnp.where(ok, keys.astype(jnp.int32), SENT32), idx
-
-    keys0, idx0 = fetch(0, cfg.p_seed)
-    found = keys0 < SENT32
-
-    # type-4 pivot verification against stream 3 (near-stop slots)
-    if cfg.check_slots > 0:
-        ns = basic_ns[jnp.clip(idx0, 0, basic_ns.shape[0] - 1)]     # [P0, K]
-        targets = q["ns_packed"]                                    # [C]
-        t_active = targets >= 0
-        hit = (ns[:, :, None] == targets[None, None, :]).any(axis=1)  # [P0, C]
-        ok_checks = (hit | ~t_active[None, :]).all(axis=1)
-        found = found & jnp.where(t_active.any(), ok_checks, True)
-
-    for g in range(1, cfg.groups):
-        kg, _ = fetch(g, cfg.postings_pad)
-        if cfg.sort_free:
-            # dist-filter holes: fill with a running max — stays sorted, and
-            # duplicating an existing key never creates a false member;
-            # leading holes become int32-min (matches nothing: keys >= 0).
-            # O(P) scan instead of an O(P log P) sort.
-            lowest = jnp.int32(-(2**31) + 1)
-            kg = jax.lax.cummax(jnp.where(kg == SENT32, lowest, kg))
-        else:
-            kg = jnp.sort(kg)          # dist-filter holes break sortedness
-        band = q["band"][g]
-        lo = jnp.searchsorted(kg, keys0 - band, side="left")
-        hi = jnp.searchsorted(kg, keys0 + band, side="right")
-        member = hi > lo
-        found = found & jnp.where(q["active"][g], member, True)
-
-    ranked = jnp.where(found, keys0, SENT32)
-    hits = jnp.sort(ranked)[: cfg.top_m]
-    return hits, found.sum(dtype=jnp.int32)
-
-
 def make_search_serve_step(cfg: SearchServeConfig, mesh):
-    """Returns step(arenas, queries) -> (merged_hits [Q, M], total [Q]).
+    """Returns step(arenas, tables) -> (keys [T, F*P0] int64, found bool).
 
     arenas: dict of stacked per-shard arrays (leading dim = n_dp shards),
-    sharded P(dp); queries: dict of [Q, G] tables, replicated.
+    sharded P(dp); tables: dict per query_table_specs, replicated — each
+    row's fetch starts are LOCAL to its owner shard's arena.  Outputs are
+    replicated: `keys` holds the seed's global 63-bit keys where `found`,
+    SENTINEL elsewhere — exactly what the batch executor's merge consumes.
     """
-    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = _dp_axes(mesh)
+    P0, Pc = cfg.p_seed, cfg.postings_pad
 
-    def merge(hits, counts):
-        # merge across shards: total count + global top-M of gathered hits
-        total = jax.lax.psum(counts, dp)
-        all_hits = jax.lax.all_gather(hits, dp, axis=0, tiled=False)
-        all_hits = all_hits.reshape(-1, hits.shape[0], cfg.top_m)
-        merged = jnp.sort(all_hits.transpose(1, 0, 2).reshape(hits.shape[0], -1),
-                          axis=-1)[:, : cfg.top_m]
-        return merged, total
+    def local(arena_doc, arena_pos, arena_dist, basic_ns, t):
+        me = jax.lax.axis_index(dp[0])
+        for a in dp[1:]:
+            me = me * mesh.shape[a] + jax.lax.axis_index(a)
+        own = t["owner"] == me
+        tt = {k: v for k, v in t.items() if k != "owner"}
+        tt["active"] = t["active"] & own[:, None]
+        a64, found = bucket_step_math(
+            arena_doc[0], arena_pos[0], arena_dist[0], basic_ns[0], tt,
+            P0=P0, P=Pc, impl=cfg.impl, interpret=cfg.interpret)
+        # every row is owned by exactly one dp shard: min-combining the
+        # SENTINEL-masked keys is a pure "take the owner's result"
+        a64 = jnp.where(found & own[:, None], a64, SENTINEL)
+        a64 = jax.lax.pmin(a64, dp)
+        return a64, a64 < SENTINEL
 
     spec_shard = P(dp)
     spec_rep = P()
     q_specs = {k: spec_rep for k in query_table_specs(cfg)}
-
-    if cfg.packed_keys:
-        def local(arena_key, arena_dist, basic_ns, queries):
-            run = functools.partial(_one_query, cfg, arena_key[0], None,
-                                    arena_dist[0], basic_ns[0])
-            hits, counts = jax.vmap(run)(queries)
-            return merge(hits, counts)
-
-        fn = shard_map(local, mesh=mesh,
-                       in_specs=(spec_shard, spec_shard, spec_shard, q_specs),
-                       out_specs=(spec_rep, spec_rep), check_vma=False)
-
-        def step(arenas: dict, queries: dict):
-            return fn(arenas["arena_key"], arenas["arena_dist"],
-                      arenas["basic_ns"], queries)
-        return step
-
-    def local(arena_doc, arena_pos, arena_dist, basic_ns, queries):
-        run = functools.partial(_one_query, cfg, arena_doc[0], arena_pos[0],
-                                arena_dist[0], basic_ns[0])
-        hits, counts = jax.vmap(run)(queries)
-        return merge(hits, counts)
-
     fn = shard_map(local, mesh=mesh,
                    in_specs=(spec_shard, spec_shard, spec_shard, spec_shard,
                              q_specs),
                    out_specs=(spec_rep, spec_rep), check_vma=False)
 
-    def step(arenas: dict, queries: dict):
+    def step(arenas: dict, tables: dict):
         return fn(arenas["arena_doc"], arenas["arena_pos"],
-                  arenas["arena_dist"], arenas["basic_ns"], queries)
+                  arenas["arena_dist"], arenas["basic_ns"], tables)
     return step
 
 
 # ---------------------------------------------------------------------------
-# host-side: build real arenas from an IndexSet (tests / small-scale serving)
+# host side: doc-partitioned arenas + the serve batch executor
 # ---------------------------------------------------------------------------
 
-def build_arenas(index_set, cfg: SearchServeConfig):
-    """Concatenate the three indexes into one per-shard posting arena.
 
-    Layout: [basic | expanded | stop]; returns (arenas dict with a leading
-    shard dim of 1, stream_bases dict for tensorize_plans).  Sizes are
-    clipped/padded to the cfg arena segment sizes.
-    """
-    b = index_set.basic.occurrences
-    e = index_set.expanded.pairs
-    s = index_set.stop_phrase.phrases
+class _ServeBatchExecutor(BatchExecutor):
+    """BatchExecutor whose rows execute through the shard_map'd serve step.
 
-    def seg(doc, pos, dist, n):
-        out_d = np.zeros(n, np.int32)
-        out_p = np.zeros(n, np.int32)
-        out_x = np.zeros(n, np.int8)
-        m = min(len(doc), n)
-        out_d[:m], out_p[:m] = doc[:m], pos[:m]
-        if dist is not None:
-            out_x[:m] = dist[:m]
-        return out_d, out_p, out_x
+    Inherits tensorization (seed ordering, shard segmentation, long-list
+    splitting), flex-escape routing, and the merge tail — overriding only
+    the caps (fixed table shapes from cfg) and `_run_rows` (fixed-shape
+    chunks through the jit'd distributed step, with fetch starts remapped
+    into each owner shard's local arena)."""
 
-    bd, bp, bx = seg(b.columns["doc"], b.columns["pos"], None, cfg.n_basic)
-    ed, ep, ex = seg(e.columns["doc"], e.columns["pos"], e.columns["dist"],
-                     cfg.n_expanded)
-    sd, sp, sx = seg(s.columns["doc"], s.columns["pos"], None, cfg.n_stop)
+    def __init__(self, index: IndexSet, cfg: SearchServeConfig, mesh,
+                 docs_per_shard: int | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_dp = _dp_size(mesh)
+        super().__init__(index, impl=cfg.impl, interpret=cfg.interpret,
+                         docs_per_shard=docs_per_shard)
+        # re-grain the segmentation so every doc shard nests inside one dp
+        # shard (rows must never straddle a device's arena slice)
+        d = self.dev
+        dps = min(d.docs_per_shard, max(1, -(-d.n_docs // self.n_dp)))
+        d.docs_per_shard = dps
+        d.n_shards = max(1, -(-d.n_docs // dps))
+        self.shards_per_dp = max(1, -(-d.n_shards // self.n_dp))
+        self.docs_per_dp = dps * self.shards_per_dp
+        self._build_dp_arenas(index)
+        self._step = jax.jit(make_search_serve_step(cfg, mesh))
 
-    ns = np.full((cfg.n_basic, cfg.ns_k), -1, np.int16)
-    src_ns = index_set.basic.near_stop
-    m = min(len(src_ns), cfg.n_basic)
-    k = min(src_ns.shape[1], cfg.ns_k)
-    ns[:m, :k] = src_ns[:m, :k]
-
-    doc = np.concatenate([bd, ed, sd])
-    pos = np.concatenate([bp, ep, sp])
-    if cfg.packed_keys:
-        key = (doc.astype(np.int32) << SERVE_POS_BITS) | (pos + SERVE_BIAS)
-        arenas = {
-            "arena_key": jnp.asarray(key[None]),
-            "arena_dist": jnp.asarray(np.concatenate([bx, ex, sx])[None]),
-            "basic_ns": jnp.asarray(ns[None]),
+    def _build_dp_arenas(self, index: IndexSet):
+        """Bucket the global arena to its owning dp shard host-side: shard d
+        keeps exactly the postings of docs [d*docs_per_dp, (d+1)*docs_per_dp),
+        in global order — so every stream stays a contiguous local segment
+        and a global fetch slice maps to one local slice per shard."""
+        d = self.dev
+        doc_np = d.arena_doc_np
+        pos_np = d.arena_pos_np
+        dist_np = d.arena_dist_np
+        ns_np = d.near_stop_np
+        nb = ns_np.shape[0]                      # basic stream length
+        own = doc_np // self.docs_per_dp
+        self._sel = [np.nonzero(own == dd)[0] for dd in range(self.n_dp)]
+        a_pad = max(max((len(s) for s in self._sel), default=0), 1)
+        nb_l = [int(np.searchsorted(s, nb)) for s in self._sel]
+        nb_pad = max(max(nb_l, default=0), 1)
+        k = ns_np.shape[1]
+        doc_l = np.zeros((self.n_dp, a_pad), np.int32)
+        pos_l = np.zeros((self.n_dp, a_pad), np.int32)
+        dist_l = np.zeros((self.n_dp, a_pad), np.int8)
+        ns_l = np.full((self.n_dp, nb_pad, k), -1, np.int16)
+        for dd, sel in enumerate(self._sel):
+            doc_l[dd, :len(sel)] = doc_np[sel]
+            pos_l[dd, :len(sel)] = pos_np[sel]
+            dist_l[dd, :len(sel)] = dist_np[sel]
+            ns_l[dd, :nb_l[dd]] = ns_np[sel[:nb_l[dd]]]
+        dp = _dp_axes(self.mesh)
+        shard = NamedSharding(self.mesh, P(dp))
+        self.arenas = {
+            "arena_doc": jax.device_put(doc_l, shard),
+            "arena_pos": jax.device_put(pos_l, shard),
+            "arena_dist": jax.device_put(dist_l, shard),
+            "basic_ns": jax.device_put(ns_l, shard),
         }
-    else:
-        arenas = {
-            "arena_doc": jnp.asarray(doc[None]),
-            "arena_pos": jnp.asarray(pos[None]),
-            "arena_dist": jnp.asarray(np.concatenate([bx, ex, sx])[None]),
-            "basic_ns": jnp.asarray(ns[None]),
-        }
-    bases = {"basic": 0, "expanded": cfg.n_basic,
-             "stop": cfg.n_basic + cfg.n_expanded}
-    return arenas, bases
+
+    def _caps(self):
+        cfg = self.cfg
+        return (cfg.groups, cfg.fetch_slots, cfg.fetch_slots,
+                cfg.p_seed, cfg.postings_pad)
+
+    def _task_fits(self, groups) -> bool:
+        if not super()._task_fits(groups):
+            return False
+        # fixed near-stop slots: checks that don't fit can't be truncated
+        # (dropping a check loosens type-4 verification) -> flex
+        cfg = self.cfg
+        for g in groups:
+            for f in g.fetches:
+                if len(f.stop_checks) > cfg.check_slots:
+                    return False
+                if any(len(ids) > cfg.check_forms for _, ids in f.stop_checks):
+                    return False
+        return True
+
+    def _run_rows(self, rows: list):
+        cfg = self.cfg
+        R, G, F = cfg.task_rows, cfg.groups, cfg.fetch_slots
+        for lo in range(0, len(rows), R):
+            part = rows[lo:lo + R]
+            t = self._tensorize_bucket(part, G, F, cfg.check_slots,
+                                       cfg.check_forms, R)
+            owner = np.zeros(R, np.int32)
+            owner[:len(part)] = [row.shard // self.shards_per_dp
+                                 for row in part]
+            # remap global fetch starts into each owner shard's local arena:
+            # one vectorized searchsorted per dp shard touched by the chunk
+            live = t["length"] > 0
+            for dd in np.unique(owner[:len(part)]):
+                m = (owner == dd)[:, None, None] & live
+                t["start"][m] = np.searchsorted(self._sel[dd], t["start"][m])
+            t["owner"] = owner
+            tj = {k: jnp.asarray(v) for k, v in t.items()}
+            with self.mesh:
+                a64, found = self._step(self.arenas, tj)
+            self._scatter_row_keys(part, np.asarray(a64), np.asarray(found))
 
 
-# tensorize_plans (host-side plan->table packing) lives in
-# core/fetch_tables.py, shared with the engine's batch executor; it is
-# re-exported above for callers of this module.
+class SearchServe:
+    """End-to-end distributed serving facade: plan → serve tables → shard_map
+    step → merged SearchResults, bit-identical to `engine.search_batch`.
+
+    Plans that exceed the fixed table shapes run through the flexible
+    executor host-side (the same escape hatch the engine uses)."""
+
+    def __init__(self, index: IndexSet, cfg: SearchServeConfig, mesh,
+                 docs_per_shard: int | None = None):
+        self.index = index
+        self.cfg = cfg
+        self.mesh = mesh
+        self.planner = Planner(index)
+        self.executor = _ServeBatchExecutor(index, cfg, mesh,
+                                            docs_per_shard=docs_per_shard)
+
+    @property
+    def n_dp(self) -> int:
+        return self.executor.n_dp
+
+    def plan(self, surface_ids, mode: str = MODE_PHRASE,
+             window: int | None = None):
+        return self.planner.plan(list(surface_ids), mode=mode, window=window)
+
+    def execute_batch(self, plans, max_results: int | None = None
+                      ) -> list[SearchResult]:
+        return self.executor.execute_batch(plans, max_results=max_results)
+
+    def search_batch(self, queries, modes: str | list = MODE_PHRASE,
+                     window: int | None = None,
+                     max_results: int | None = None) -> list[SearchResult]:
+        if isinstance(modes, str):
+            modes = [modes] * len(queries)
+        plans = [self.plan(q, mode=m, window=window)
+                 for q, m in zip(queries, modes)]
+        return self.execute_batch(plans, max_results=max_results)

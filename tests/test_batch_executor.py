@@ -146,16 +146,156 @@ def test_batch_executor_flex_escape_hatch(small_world):
     eng = small_world["engine"]
     queries, modes = _mixed_batch(small_world, n=8, seed=17)
     be = BatchExecutor(small_world["index"], flex=eng.executor)
-    old_cap = bx.P_CAP
-    bx.P_CAP = 1          # every fetch is now "too long" => all plans flex
+    old_cap, old_split = bx.P_CAP, bx.F_SPLIT_CAP
+    bx.P_CAP = 1          # every fetch must split per posting...
+    bx.F_SPLIT_CAP = 2    # ...and immediately overflows the slots => flex
     try:
         plans = [eng.plan(q, mode=m) for q, m in zip(queries, modes)]
+        # every real posting list (length > 2) overflows the split slots
+        assert sum(not be._build_tasks(i, p, [])
+                   for i, p in enumerate(plans)) >= len(plans) // 2
         got = be.execute_batch(plans)
     finally:
-        bx.P_CAP = old_cap
+        bx.P_CAP, bx.F_SPLIT_CAP = old_cap, old_split
     for q, m, r in zip(queries, modes, got):
         want = eng.search(q, mode=m)
         assert _same_result(want, r)
+
+
+# ---------------------------------------------------------------------------
+# fallback boundaries: each escape hatch routes to flex AND matches the
+# brute-force oracle; the lifted postings cap stays on the batched path
+# ---------------------------------------------------------------------------
+
+
+def _assert_oracle(small_world, q, m, r):
+    positional, doc_level = brute_force_search(
+        small_world["corpus"], small_world["index"], q, mode=m)
+    if r.doc_only:
+        assert set(r.doc.tolist()) == doc_level, (q, m)
+    else:
+        assert set(zip(r.doc.tolist(), r.pos.tolist())) == positional, (q, m)
+
+
+def test_boundary_many_and_groups_routes_flex(small_world):
+    """> G_CAP AND-groups (an 11-word phrase) must route to flex and still
+    match per-query search and the oracle."""
+    import repro.core.batch_executor as bx
+    corpus = small_world["corpus"]
+    eng = small_world["engine"]
+    be = BatchExecutor(small_world["index"], flex=eng.executor)
+    queries, plans = [], []
+    for d in range(corpus.n_docs):
+        toks = corpus.doc(d)
+        for st in range(0, max(len(toks) - bx.G_CAP - 3, 0), 4):
+            q = toks[st:st + bx.G_CAP + 3].tolist()
+            plan = eng.plan(q, mode=MODE_PHRASE)
+            # stop words become checks, not groups: keep only windows whose
+            # plan really carries > G_CAP AND-groups in one subplan
+            if any(sp.supported and len(sp.groups) > bx.G_CAP
+                   for sp in plan.subplans):
+                queries.append(q)
+                plans.append(plan)
+            if len(queries) == 3:
+                break
+        if len(queries) == 3:
+            break
+    assert queries, "no >G_CAP-group windows found"
+    assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
+    for q, r in zip(queries, be.execute_batch(plans)):
+        assert _same_result(eng.search(q, mode=MODE_PHRASE), r), q
+        _assert_oracle(small_world, q, MODE_PHRASE, r)
+
+
+def test_boundary_many_fetches_per_group_routes_flex(small_world):
+    """> F_CAP unioned form fetches in one group must route to flex (shrunk
+    cap: real multi-form groups have 2-4 fetches) and match the oracle."""
+    import repro.core.batch_executor as bx
+    eng = small_world["engine"]
+    be = BatchExecutor(small_world["index"], flex=eng.executor)
+    queries, modes = _mixed_batch(small_world, n=12, seed=29)
+    plans = [eng.plan(q, mode=m) for q, m in zip(queries, modes)]
+    multi = [i for i, p in enumerate(plans)
+             if any(len(g.fetches) > 1 for sp in p.subplans if sp.supported
+                    for g in sp.groups + sp.fallback_groups)]
+    assert multi, "no multi-fetch groups in the workload"
+    old = bx.F_CAP
+    bx.F_CAP = 1
+    try:
+        for i in multi:
+            assert not be._build_tasks(i, plans[i], [])
+        got = be.execute_batch(plans)
+    finally:
+        bx.F_CAP = old
+    for q, m, r in zip(queries, modes, got):
+        assert _same_result(eng.search(q, mode=m), r), (q, m)
+        _assert_oracle(small_world, q, m, r)
+
+
+def test_boundary_long_fetches_stay_batched(small_world):
+    """Fetches longer than P_CAP no longer escape: task-row splitting keeps
+    them on the batched path (slots > 1) with oracle-identical results."""
+    import repro.core.batch_executor as bx
+    eng = small_world["engine"]
+    be = BatchExecutor(small_world["index"], flex=eng.executor)
+    queries, modes = _mixed_batch(small_world, n=12, seed=31)
+    plans = [eng.plan(q, mode=m) for q, m in zip(queries, modes)]
+    long_q = [i for i, p in enumerate(plans)
+              if any(f.length > 256 for sp in p.subplans if sp.supported
+                     for g in sp.groups for f in g.fetches)]
+    assert long_q, "no long posting lists in the workload"
+    old = bx.P_CAP
+    bx.P_CAP = 256
+    try:
+        tasks: list = []
+        assert be._build_tasks(0, plans[long_q[0]], tasks)   # batched, not flex
+        assert any(len(g.slots) > 1 for t in tasks for r in t.rows
+                   for g in r.groups), "long fetch was not split"
+        got = be.execute_batch(plans)
+    finally:
+        bx.P_CAP = old
+    for q, m, r in zip(queries, modes, got):
+        assert _same_result(eng.search(q, mode=m), r), (q, m)
+        _assert_oracle(small_world, q, m, r)
+
+
+def test_boundary_position_overflow_routes_flex():
+    """An index whose positions overflow the 17-bit packed-key field must
+    route every plan to flex and still match the brute-force oracle."""
+    from repro.core import (CorpusConfig, LexiconConfig, build_all,
+                            generate_corpus, make_lexicon_and_analyzer)
+    from repro.core.fetch_tables import TABLE_POS_BITS
+    lc = LexiconConfig(n_surface=2000, n_base=1500, n_stop=50,
+                       n_frequent=200, seed=5)
+    lex, ana = make_lexicon_and_analyzer(lc)
+    corpus = generate_corpus(lc, CorpusConfig(n_docs=2, mean_doc_len=150_000,
+                                              seed=5))
+    index = build_all(corpus, lex, ana)
+    eng = AdditionalIndexEngine(index)
+    be = eng.batch_executor
+    assert be.dev.max_pos + 64 > (1 << TABLE_POS_BITS) - 64, \
+        "corpus too short to overflow the packed-key field"
+    assert be._pos_budget <= 0
+    toks = corpus.doc(0)
+    queries = [toks[10:13].tolist(), toks[100:104].tolist(),
+               toks[140_000:140_003].tolist()]
+    plans = [eng.plan(q, mode=MODE_PHRASE) for q in queries]
+    assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
+    for q, r in zip(queries, be.execute_batch(plans)):
+        assert _same_result(eng.search(q, mode=MODE_PHRASE), r), q
+        _assert_oracle({"corpus": corpus, "index": index}, q, MODE_PHRASE, r)
+
+
+@pytest.mark.parametrize("dps", [16, 64])
+def test_search_batch_segmented_shards_match(small_world, dps):
+    """Shard-segmented gather: cutting the corpus into many small doc shards
+    (one row per task x shard) must not change any result bit."""
+    eng = AdditionalIndexEngine(small_world["index"], docs_per_shard=dps)
+    assert eng.batch_executor.dev.n_shards > 1
+    ref = small_world["engine"]
+    queries, modes = _mixed_batch(small_world, n=24, seed=19)
+    for q, m, got in zip(queries, modes, eng.search_batch(queries, modes=modes)):
+        assert _same_result(ref.search(q, mode=m), got), (q, m, dps)
 
 
 # ---------------------------------------------------------------------------

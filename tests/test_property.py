@@ -1,10 +1,15 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests on system invariants.
+
+Every invariant is a plain `check_*` function.  A seeded numpy case
+generator drives them ALWAYS (so the suite never silently skips in
+containers without `hypothesis`); when `hypothesis` is installed the same
+invariants additionally run under `@given` with its shrinking search.
+"""
+import importlib.util
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.postings import (CSR, PHRASE_BIAS, pack_near_stop_slot,
                                  pack_stop_phrase_key, shifted_key,
@@ -13,12 +18,14 @@ from repro.core.planner import split_query_parts
 from repro.dist.collectives import dequantize_int8, quantize_int8
 from repro.kernels import ops
 
+HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 
-@given(st.lists(st.tuples(st.integers(0, 2**30), st.integers(0, 2**20)),
-                min_size=1, max_size=200),
-       st.integers(0, 16))
-@settings(max_examples=50, deadline=None)
-def test_shifted_key_roundtrip(pairs, offset):
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+def check_shifted_key_roundtrip(pairs, offset):
     doc = np.array([p[0] for p in pairs], np.int64)
     pos = np.array([p[1] for p in pairs], np.int64) + offset
     keys = shifted_key(doc, pos, offset)
@@ -26,9 +33,7 @@ def test_shifted_key_roundtrip(pairs, offset):
     assert np.array_equal(d2, doc) and np.array_equal(p2, pos)
 
 
-@given(st.lists(st.integers(0, 1023), min_size=2, max_size=5))
-@settings(max_examples=100, deadline=None)
-def test_stop_phrase_key_order_invariant(ids):
+def check_stop_phrase_key_order_invariant(ids):
     a = np.sort(np.array(ids, np.int64))
     k1 = pack_stop_phrase_key(a[None, :])[0]
     rng = np.random.default_rng(0)
@@ -42,10 +47,7 @@ def test_stop_phrase_key_order_invariant(ids):
         assert k3 != k1
 
 
-@given(st.integers(-7, 7).filter(lambda d: d != 0), st.integers(0, 1023),
-       st.integers(5, 7))
-@settings(max_examples=50, deadline=None)
-def test_near_stop_slot_roundtrip(delta, sid, maxd):
+def check_near_stop_slot_roundtrip(delta, sid, maxd):
     if abs(delta) > maxd:
         delta = maxd if delta > 0 else -maxd
     slot = pack_near_stop_slot(np.array([delta]), np.array([sid]), maxd)
@@ -53,9 +55,7 @@ def test_near_stop_slot_roundtrip(delta, sid, maxd):
     assert d2[0] == delta and s2[0] == sid
 
 
-@given(st.lists(st.integers(0, 1000), min_size=0, max_size=300))
-@settings(max_examples=50, deadline=None)
-def test_csr_from_unsorted_invariants(keys):
+def check_csr_from_unsorted_invariants(keys):
     keys = np.array(keys, np.int64)
     vals = np.arange(len(keys), dtype=np.int32)
     csr = CSR.from_unsorted(keys, {"v": vals})
@@ -69,9 +69,7 @@ def test_csr_from_unsorted_invariants(keys):
     assert sorted(rebuilt) == sorted(zip(keys.tolist(), vals.tolist()))
 
 
-@given(st.integers(2, 24), st.integers(2, 3), st.integers(3, 6))
-@settings(max_examples=100, deadline=None)
-def test_split_query_parts_cover(n, mn, mx):
+def check_split_query_parts_cover(n, mn, mx):
     if mn > mx or n < mn:
         return
     parts = split_query_parts(n, mn, mx)
@@ -82,11 +80,7 @@ def test_split_query_parts_cover(n, mn, mx):
     assert covered == set(range(n))
 
 
-@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=500),
-       st.lists(st.integers(0, 2**20), min_size=1, max_size=500),
-       st.integers(0, 8))
-@settings(max_examples=30, deadline=None)
-def test_banded_intersect_property(a, b, band):
+def check_banded_intersect(a, b, band):
     a = np.array(a, np.int32)
     b = np.sort(np.array(b, np.int32))
     got = np.asarray(ops.banded_intersect(jnp.asarray(a), jnp.asarray(b), band,
@@ -95,18 +89,14 @@ def test_banded_intersect_property(a, b, band):
     assert np.array_equal(got, want)
 
 
-@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=64))
-@settings(max_examples=50, deadline=None)
-def test_int8_quantization_error_bound(xs):
+def check_int8_quantization_error_bound(xs):
     x = jnp.asarray(np.array(xs, np.float32))
     q, scale = quantize_int8(x)
     err = float(jnp.abs(dequantize_int8(q, scale) - x).max())
     assert err <= float(scale) * 0.5 + 1e-6
 
 
-@given(st.integers(1, 6), st.integers(1, 8), st.integers(2, 50), st.integers(1, 32))
-@settings(max_examples=30, deadline=None)
-def test_segment_bag_property(B, F, V, D):
+def check_segment_bag(B, F, V, D):
     rng = np.random.default_rng(B * 100 + F)
     table = jnp.asarray(rng.normal(size=(V, D)).astype(np.float32))
     ids = jnp.asarray(rng.integers(-1, V, (B, F)).astype(np.int32))
@@ -117,3 +107,131 @@ def test_segment_bag_property(B, F, V, D):
             if int(ids[i, j]) >= 0:
                 want[i] += np.asarray(table)[int(ids[i, j])]
     assert np.abs(got - want).max() < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# seeded hypothesis-free drivers (always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(25))
+def test_shifted_key_roundtrip(seed):
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(1, 201))
+    pairs = list(zip(rng.integers(0, 2**30, n).tolist(),
+                     rng.integers(0, 2**20, n).tolist()))
+    check_shifted_key_roundtrip(pairs, int(rng.integers(0, 17)))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_stop_phrase_key_order_invariant(seed):
+    rng = np.random.default_rng(200 + seed)
+    ids = rng.integers(0, 1024, int(rng.integers(2, 6))).tolist()
+    check_stop_phrase_key_order_invariant(ids)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_near_stop_slot_roundtrip(seed):
+    rng = np.random.default_rng(300 + seed)
+    delta = int(rng.choice([d for d in range(-7, 8) if d != 0]))
+    check_near_stop_slot_roundtrip(delta, int(rng.integers(0, 1024)),
+                                   int(rng.integers(5, 8)))
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_csr_from_unsorted_invariants(seed):
+    rng = np.random.default_rng(400 + seed)
+    n = int(rng.integers(0, 301))
+    check_csr_from_unsorted_invariants(rng.integers(0, 1001, n).tolist())
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_split_query_parts_cover(seed):
+    rng = np.random.default_rng(500 + seed)
+    check_split_query_parts_cover(int(rng.integers(2, 25)),
+                                  int(rng.integers(2, 4)),
+                                  int(rng.integers(3, 7)))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_banded_intersect_property(seed):
+    rng = np.random.default_rng(600 + seed)
+    a = rng.integers(0, 2**20, int(rng.integers(1, 501))).tolist()
+    b = rng.integers(0, 2**20, int(rng.integers(1, 501))).tolist()
+    check_banded_intersect(a, b, int(rng.integers(0, 9)))
+
+
+def test_banded_intersect_edge_cases():
+    # duplicates straddling block boundaries, empty band, all-equal keys
+    check_banded_intersect([7] * 300, [7] * 300, 0)
+    check_banded_intersect([0, 2**20], [2**19], 2**19)
+    check_banded_intersect([5], list(range(500)), 0)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_int8_quantization_error_bound(seed):
+    rng = np.random.default_rng(700 + seed)
+    xs = (rng.uniform(-100, 100, int(rng.integers(1, 65)))
+          .astype(np.float32).tolist())
+    check_int8_quantization_error_bound(xs)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_segment_bag_property(seed):
+    rng = np.random.default_rng(800 + seed)
+    check_segment_bag(int(rng.integers(1, 7)), int(rng.integers(1, 9)),
+                      int(rng.integers(2, 51)), int(rng.integers(1, 33)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers (when installed: adds shrinking + adversarial search)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.tuples(st.integers(0, 2**30), st.integers(0, 2**20)),
+                    min_size=1, max_size=200),
+           st.integers(0, 16))
+    @settings(max_examples=50, deadline=None)
+    def test_shifted_key_roundtrip_hyp(pairs, offset):
+        check_shifted_key_roundtrip(pairs, offset)
+
+    @given(st.lists(st.integers(0, 1023), min_size=2, max_size=5))
+    @settings(max_examples=100, deadline=None)
+    def test_stop_phrase_key_order_invariant_hyp(ids):
+        check_stop_phrase_key_order_invariant(ids)
+
+    @given(st.integers(-7, 7).filter(lambda d: d != 0), st.integers(0, 1023),
+           st.integers(5, 7))
+    @settings(max_examples=50, deadline=None)
+    def test_near_stop_slot_roundtrip_hyp(delta, sid, maxd):
+        check_near_stop_slot_roundtrip(delta, sid, maxd)
+
+    @given(st.lists(st.integers(0, 1000), min_size=0, max_size=300))
+    @settings(max_examples=50, deadline=None)
+    def test_csr_from_unsorted_invariants_hyp(keys):
+        check_csr_from_unsorted_invariants(keys)
+
+    @given(st.integers(2, 24), st.integers(2, 3), st.integers(3, 6))
+    @settings(max_examples=100, deadline=None)
+    def test_split_query_parts_cover_hyp(n, mn, mx):
+        check_split_query_parts_cover(n, mn, mx)
+
+    @given(st.lists(st.integers(0, 2**20), min_size=1, max_size=500),
+           st.lists(st.integers(0, 2**20), min_size=1, max_size=500),
+           st.integers(0, 8))
+    @settings(max_examples=30, deadline=None)
+    def test_banded_intersect_property_hyp(a, b, band):
+        check_banded_intersect(a, b, band)
+
+    @given(st.lists(st.floats(-100, 100, allow_nan=False),
+                    min_size=1, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_int8_quantization_error_bound_hyp(xs):
+        check_int8_quantization_error_bound(xs)
+
+    @given(st.integers(1, 6), st.integers(1, 8), st.integers(2, 50),
+           st.integers(1, 32))
+    @settings(max_examples=30, deadline=None)
+    def test_segment_bag_property_hyp(B, F, V, D):
+        check_segment_bag(B, F, V, D)
