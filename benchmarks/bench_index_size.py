@@ -17,9 +17,11 @@ def run(n_docs: int = 1200) -> dict:
     rows = {
         "stop_phrase_index_bytes": rep["stop_phrase_index_bytes"],
         "expanded_index_bytes": rep["expanded_index_bytes"],
+        "multi_key_index_bytes": rep["multi_key_index_bytes"],
         "basic_index_bytes": rep["basic_index_bytes"],
         "additional_total_bytes": (rep["stop_phrase_index_bytes"]
                                    + rep["expanded_index_bytes"]
+                                   + rep["multi_key_index_bytes"]
                                    + rep["basic_index_bytes"]),
         "ordinary_index_bytes": rep["ordinary_index_bytes"],
         "corpus_bytes_est": corpus_bytes,
@@ -27,10 +29,13 @@ def run(n_docs: int = 1200) -> dict:
         "n_docs": corpus.n_docs,
         "stop_phrase_postings": rep["stop_phrase_postings"],
         "expanded_postings": rep["expanded_postings"],
+        "multi_key_pair_postings": rep["multi_key_pair_postings"],
+        "multi_key_triple_postings": rep["multi_key_triple_postings"],
         "basic_postings": rep["basic_postings"],
         "ordinary_postings": rep["ordinary_postings"],
     }
     rows["additional_over_corpus"] = rows["additional_total_bytes"] / corpus_bytes
+    rows["multi_key_over_corpus"] = rows["multi_key_index_bytes"] / corpus_bytes
     rows["ordinary_over_corpus"] = rows["ordinary_index_bytes"] / corpus_bytes
     rows["paper_additional_over_corpus"] = 259.0 / 45.0      # 5.76x
     rows["paper_ordinary_over_corpus"] = 18.7 / 45.0         # Sphinx 0.42x

@@ -1,12 +1,19 @@
 """Paper tables: SEARCH SPEED — mean/max query time and postings read, for
 the additional-index engine vs the ordinary (Sphinx-style) inverted index,
 on the paper's query workload.  Also verifies every query finds its source
-document (the paper's correctness check).  Near-mode queries that contain a
-stop form are confined to sequential matching by the paper's Type-4 rule
-("the search is confined to sequential words"), so their source document
-legitimately may not match; they are counted separately
-(`near_stop_confined_misses`) and `missed_source_docs` covers exactly the
-queries whose semantics promise recall — it must be 0.
+document (the paper's correctness check).
+
+Near-mode queries that contain a stop form used to be confined to
+sequential matching by the paper's Type-4 rule ("the search is confined to
+sequential words"); the multi-component key index (core/multi_key_index.py,
+QTYPE_MULTI plans) now gives them TRUE windowed semantics, so their misses
+— still reported as `near_stop_confined_misses` for trajectory continuity —
+must be 0, like `missed_source_docs`.  The before-number is re-measured
+each run with a Type-4-confined planner as
+`near_stop_confined_misses_type4_before`.  The ONLY remaining exempt
+population is near queries whose every word form is a stop form
+(`near_stop_seq_only_misses`): those have only the Type-1 contiguous
+interpretation and no doc-level fallback, exactly per the paper.
 
 Beyond the paper:
   * a batched-throughput (QPS) measurement of the plan-compiled
@@ -16,8 +23,12 @@ Beyond the paper:
     the shard_map'd distributed step, which must also be bit-identical and
     miss no promised source docs;
   * a doc-shard scaling sweep: batched step time at 1 / ~19 / ~75 doc
-    shards.  With the segmented gather the total work is O(arena), so the
-    cost stays roughly flat instead of linear in the shard count.
+    shards.  With the segmented gather the total gather work is O(arena)
+    (the old path was strictly linear in the shard count); the windowed
+    QTYPE_MULTI plans add many short multi-key fetches, so over-sharding
+    now multiplies row overhead (~1.3-2x at 75 shards) while ~19 shards stays
+    near parity — the auto-pick default targets the longest-list slab
+    bound, not this sweep's minimum.
 
 All written to BENCH_search.json for the perf trajectory across PRs,
 including a `ci_smoke` baseline the CI perf gate compares against."""
@@ -35,11 +46,33 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_search.json")
 
 
-def _stop_confined(w, q, mode) -> bool:
-    """Near query containing a stop form: Type-4 confines it to sequential
-    matching, so source-doc recall is not promised."""
+def _seq_only(w, q, mode) -> bool:
+    """Near query whose EVERY word form is a stop form: only the Type-1
+    contiguous interpretation exists, so source-doc recall is not promised."""
     from repro.core import near_query_stop_confined
     return near_query_stop_confined(w["lex"], w["ana"], q, mode)
+
+
+def _contains_stop(w, q, mode) -> bool:
+    """Near query containing a stop form — the population Type-4 used to
+    confine and the multi-key index now serves windowed."""
+    from repro.core import near_query_contains_stop
+    return near_query_contains_stop(w["lex"], w["ana"], q, mode)
+
+
+def _recall_buckets(w, queries, results):
+    """(missed, confined_misses, seq_only_misses): source-doc misses split
+    by promise class — the first two are gated at 0."""
+    missed = confined = seq_only = 0
+    for (q, mode, src), r in zip(queries, results):
+        found = src in set(r.doc.tolist())
+        if _seq_only(w, q, mode):
+            seq_only += int(not found)
+        elif _contains_stop(w, q, mode):
+            confined += int(not found)
+        else:
+            missed += int(not found)
+    return missed, confined, seq_only
 
 
 def run_batched(eng, queries, batch_size: int = 64,
@@ -81,7 +114,7 @@ def run_serve(w, queries, batch_size: int = 64,
 
     cfg = SearchServeConfig(queries=batch_size, postings_pad=4096,
                             seed_pad=1024, n_basic=1, n_expanded=1,
-                            n_stop=1, n_first=1)
+                            n_stop=1, n_first=1, n_multi=1)
     serve = SearchServe(w["index"], cfg, make_host_mesh(data=1, model=1))
     qs = [q for q, _m, _s in queries]
     ms = [m for _q, m, _s in queries]
@@ -93,12 +126,8 @@ def run_serve(w, queries, batch_size: int = 64,
         results.extend(serve.search_batch(qs[lo:lo + batch_size],
                                           modes=ms[lo:lo + batch_size]))
     elapsed = time.perf_counter() - t0
-    mismatched = missed = confined = 0
-    for (q, mode, src), r in zip(queries, results):
-        if _stop_confined(w, q, mode):
-            confined += int(src not in set(r.doc.tolist()))
-        else:
-            missed += int(src not in set(r.doc.tolist()))
+    missed, confined, seq_only = _recall_buckets(w, queries, results)
+    mismatched = 0
     if per_query_results is not None:
         for r1, r2 in zip(per_query_results, results):
             if not (np.array_equal(r1.doc, r2.doc)
@@ -107,6 +136,7 @@ def run_serve(w, queries, batch_size: int = 64,
     return {"qps": len(qs) / elapsed,
             "missed_source_docs": missed,
             "near_stop_confined_misses": confined,
+            "near_stop_seq_only_misses": seq_only,
             "result_mismatches": mismatched}
 
 
@@ -156,7 +186,6 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
 
     stats = {"add": {"postings": [], "time": []},
              "ord": {"postings": [], "time": []}}
-    missed = confined = 0
     add_results = []
     # full warm pass (jit compile for EVERY shape bucket the workload hits —
     # same warm discipline as the batched pass, so the speedup compares
@@ -170,18 +199,41 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
         stats["add"]["time"].append(time.perf_counter() - t0)
         stats["add"]["postings"].append(r.postings_read)
         add_results.append(r)
-        if src not in set(r.doc.tolist()):
-            if _stop_confined(w, q, mode):
-                confined += 1
-            else:
-                missed += 1
         t0 = time.perf_counter()
         r2 = base.search(q, mode=mode)
         stats["ord"]["time"].append(time.perf_counter() - t0)
         stats["ord"]["postings"].append(r2.postings_read)
+    missed, confined, seq_only = _recall_buckets(w, queries, add_results)
+
+    # before/after: the same stop-containing near queries through a
+    # Type-4-confined planner (the paper's rule), per-query — the number
+    # the multi-key windowed path exists to drive to 0
+    from repro.core import AdditionalIndexEngine
+    eng_t4 = AdditionalIndexEngine(w["index"], windowed_near_stop=False)
+    before = 0
+    for q, mode, src in queries:
+        if _contains_stop(w, q, mode) and not _seq_only(w, q, mode):
+            before += int(src not in set(
+                eng_t4.search(q, mode=mode).doc.tolist()))
 
     out = {"n_queries": len(queries), "missed_source_docs": missed,
-           "near_stop_confined_misses": confined}
+           "near_stop_confined_misses": confined,
+           "near_stop_confined_misses_type4_before": before,
+           "near_stop_seq_only_misses": seq_only}
+    # multi-key index cost vs the paper's Table figures (arXiv:1812.07640
+    # trades ~constant-factor index growth for the windowed fast path)
+    rep = w["index"].size_report()
+    corpus_bytes = int(w["corpus"].n_tokens) * 6
+    out["multi_key_index_bytes"] = rep["multi_key_index_bytes"]
+    out["multi_key_pair_postings"] = rep["multi_key_pair_postings"]
+    out["multi_key_triple_postings"] = rep["multi_key_triple_postings"]
+    out["multi_key_over_corpus"] = rep["multi_key_index_bytes"] / corpus_bytes
+    out["multi_key_over_ordinary"] = (rep["multi_key_index_bytes"]
+                                      / rep["ordinary_index_bytes"])
+    # anchor: the source paper's additional-index budget (259 GB / 45 GB
+    # corpus) — the multi-key set must stay within the same constant-factor
+    # regime the paper already accepts for its additional indexes
+    out["paper_additional_over_corpus"] = 259.0 / 45.0
     for k in ("add", "ord"):
         p = np.array(stats[k]["postings"], np.float64)
         t = np.array(stats[k]["time"], np.float64)
@@ -216,6 +268,7 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
         out["serve_qps"] = s["qps"]
         out["serve_missed_source_docs"] = s["missed_source_docs"]
         out["serve_near_stop_confined_misses"] = s["near_stop_confined_misses"]
+        out["serve_near_stop_seq_only_misses"] = s["near_stop_seq_only_misses"]
         out["serve_result_mismatches"] = s["result_mismatches"]
         # segmented gather: per-shard cost roughly flat, not linear
         out["shard_scaling"] = run_shard_scaling(w, queries,

@@ -46,7 +46,8 @@ def main():
     engine = AdditionalIndexEngine(index)
 
     cfg = SearchServeConfig(queries=8, postings_pad=2048, seed_pad=512,
-                            n_basic=1, n_expanded=1, n_stop=1, n_first=1)
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1,
+                            n_multi=1)
     serve = SearchServe(index, cfg, mesh)
     print(f"document-sharded serve: {serve.n_dp} shards x "
           f"{serve.executor.docs_per_dp} docs")

@@ -10,7 +10,8 @@ from repro.serve.search_serve import SearchServeConfig
 
 # paper-scale postings per shard at 512 shards (scaled from measured
 # postings-per-token ratios of the synthetic build; see benchmarks)
-_BASE = dict(n_basic=10_000_000, n_expanded=17_000_000, n_stop=23_000_000)
+_BASE = dict(n_basic=10_000_000, n_expanded=17_000_000, n_stop=23_000_000,
+             n_multi=12_000_000)
 
 SEARCH_SHAPES = {
     "serve_batch": {"kind": "search_serve", "queries": 64, "postings_pad": 32768,
@@ -32,7 +33,7 @@ def make_smoke_config() -> SearchServeConfig:
     return SearchServeConfig(name="veretennikov-smoke", queries=4, groups=3,
                              fetch_slots=2, postings_pad=256, check_slots=2,
                              n_basic=4096, n_expanded=4096, n_stop=4096,
-                             n_first=1024)
+                             n_first=1024, n_multi=4096)
 
 
 SPEC = ArchSpec(arch_id="veretennikov", family="search", make_config=make_config,

@@ -1,24 +1,28 @@
 """Core: the paper's additional-index phrase-search system."""
 from repro.core.analyzer import Analyzer, make_lexicon_and_analyzer
 from repro.core.batch_executor import BatchDeviceIndex, BatchExecutor
-from repro.core.builder import IndexParams, IndexSet, build_all
+from repro.core.builder import (IndexParams, IndexSet, auto_docs_per_shard,
+                                build_all, build_multi_key_index)
 from repro.core.corpus import Corpus, CorpusConfig, generate_corpus
 from repro.core.engine import (AdditionalIndexEngine, OrdinaryEngine,
-                               brute_force_search,
+                               brute_force_search, near_query_contains_stop,
                                near_query_stop_confined)
 from repro.core.executor import DeviceIndex, Executor, SearchResult
 from repro.core.lexicon import (Lexicon, LexiconConfig, TIER_FREQUENT,
                                 TIER_ORDINARY, TIER_STOP)
-from repro.core.planner import MODE_NEAR, MODE_PHRASE, Planner, QueryPlan
+from repro.core.multi_key_index import MultiKeyIndex
+from repro.core.planner import (MODE_NEAR, MODE_PHRASE, Planner, QTYPE_MULTI,
+                                QueryPlan)
 
 __all__ = [
     "Analyzer", "make_lexicon_and_analyzer",
     "BatchDeviceIndex", "BatchExecutor",
-    "IndexParams", "IndexSet", "build_all",
+    "IndexParams", "IndexSet", "auto_docs_per_shard", "build_all",
+    "build_multi_key_index", "MultiKeyIndex",
     "Corpus", "CorpusConfig", "generate_corpus",
     "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_search",
-    "near_query_stop_confined",
+    "near_query_contains_stop", "near_query_stop_confined",
     "DeviceIndex", "Executor", "SearchResult",
     "Lexicon", "LexiconConfig", "TIER_FREQUENT", "TIER_ORDINARY", "TIER_STOP",
-    "MODE_NEAR", "MODE_PHRASE", "Planner", "QueryPlan",
+    "MODE_NEAR", "MODE_PHRASE", "Planner", "QTYPE_MULTI", "QueryPlan",
 ]

@@ -27,8 +27,8 @@ under shard_map.
    already has), which lifts the old 32k-postings-per-fetch cap.
 
 2. **Execute** — one jit'd call per shape bucket: gather from a unified
-   posting arena (basic | expanded | stop | first | ordinary concatenated,
-   so a fetch is a single dynamic-slice) → global 63-bit key construction →
+   posting arena (basic | expanded | stop | first | ordinary | multi
+   concatenated, so a fetch is a single dynamic-slice) → global 63-bit key construction →
    per-row int32 re-basing against the row's `shard_base`
    (`(doc - base) << 17 | pos'` — TPU vector units have no int64 lanes) →
    k-way banded intersection via `ops.banded_intersect_rows` (Pallas kernel
@@ -79,7 +79,7 @@ GATHER_BUDGET = 1 << 23        # max T*G*F*P elements per jit'd gather
 
 
 class BatchDeviceIndex:
-    """All five posting streams concatenated into one device arena.
+    """All six posting streams concatenated into one device arena.
 
     `docs_per_shard` sets the doc-shard granularity of the segmented gather
     (≤ fetch_tables.DOCS_PER_SHARD so packed int32 keys can't overflow);
@@ -91,6 +91,7 @@ class BatchDeviceIndex:
         e = index.expanded.pairs
         s = index.stop_phrase.phrases
         f = index.basic.first_occ
+        m = index.multi_key.arena_columns()
         o = index.ordinary
 
         docs, poss, dists = [], [], []
@@ -101,7 +102,8 @@ class BatchDeviceIndex:
                 ("expanded", e.columns["doc"], e.columns["pos"], e.columns["dist"]),
                 ("stop", s.columns["doc"], s.columns["pos"], None),
                 ("first", f.columns["doc"], f.columns["pos"], None),
-                ("ordinary", o.columns["doc"], o.columns["pos"], None)):
+                ("ordinary", o.columns["doc"], o.columns["pos"], None),
+                ("multi", m["doc"], m["pos"], m["dist"])):
             self.bases[name] = off
             off += len(doc)
             docs.append(np.asarray(doc, np.int32))
@@ -121,8 +123,18 @@ class BatchDeviceIndex:
                               default=0))
         self.max_pos = int(max((int(p.max()) for p in poss if len(p)),
                                default=0))
-        self.docs_per_shard = max(1, min(docs_per_shard or DOCS_PER_SHARD,
-                                         DOCS_PER_SHARD))
+        # widest |dist| any pivot_from_dist fetch can add to a position
+        # (expanded reach / multi-key NeighborDistance) — part of the
+        # 17-bit packed-key safety budget
+        self.max_shift = int(np.abs(self.arena_dist_np).max(initial=0))
+        if docs_per_shard is None:
+            # auto-pick the segmentation grain from posting-list stats:
+            # smaller per-row sort slabs beat one big slab (ROADMAP
+            # shard_scaling) — results are identical at any grain
+            from repro.core.builder import auto_docs_per_shard
+            docs_per_shard = auto_docs_per_shard(self.n_docs,
+                                                 index.max_posting_run())
+        self.docs_per_shard = max(1, min(docs_per_shard, DOCS_PER_SHARD))
         self.n_shards = max(1, -(-self.n_docs // self.docs_per_shard))
 
     def _dev(self, i: int):
@@ -290,10 +302,12 @@ class BatchExecutor:
         self.flex = flex or Executor(index)
         self.impl = impl
         self.interpret = interpret
-        # packed-key safety: positions (plus bias and the widest band) must
-        # fit the 17-bit in-doc field or cross-doc false positives appear
+        # packed-key safety: positions (plus bias, the widest dist shift,
+        # and the widest band) must fit the 17-bit in-doc field or
+        # cross-doc false positives appear
         self._pos_budget = (1 << TABLE_POS_BITS) - PHRASE_BIAS \
-            - self.dev.max_pos - self.dev.max_distance
+            - self.dev.max_pos - max(self.dev.max_distance,
+                                     self.dev.max_shift)
 
     # -- tensorization ------------------------------------------------------
 

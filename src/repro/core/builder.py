@@ -5,6 +5,9 @@ Builds, from a tokenized corpus + morphological analyzer:
   * the three-stream basic index (all non-stop basic forms),
   * the expanded (w, v) index for frequently-used words,
   * the stop-phrase index for MinLength..MaxLength stop-word phrases,
+  * the multi-component key index — (s, v) pairs and (s1, s2, v) triples
+    around stop forms (arXiv:1812.07640 / arXiv:2006.07954) that give
+    near-mode queries containing stop words true windowed semantics,
   * an "ordinary" single inverted index (the Sphinx-style baseline the paper
     compares against — every basic form, stop words included).
 
@@ -24,10 +27,14 @@ from repro.core.basic_index import BasicIndex
 from repro.core.corpus import Corpus
 from repro.core.expanded_index import ExpandedIndex
 from repro.core.lexicon import Lexicon
+from repro.core.multi_key_index import MultiKeyIndex
 from repro.core.postings import (
     CSR,
     DenseCSR,
     MAX_STOP_PHRASE_LEN,
+    pack_dist_pair,
+    pack_multi_pair_key,
+    pack_multi_triple_key,
     pack_near_stop_slot,
     pack_stop_phrase_key,
 )
@@ -39,6 +46,17 @@ class IndexParams:
     min_len: int = 2           # MinLength (stop-phrase index)
     max_len: int = 5           # MaxLength (paper uses 5)
     max_distance: int = 5      # MaxDistance for stream 3 (paper: 5-7)
+    near_window: int = 8       # default NEAR-mode window = NeighborDistance
+                               # of the multi-key index and the minimum reach
+                               # of expanded pairs.  8 = 2*(5-1): the paper's
+                               # 2.2 every-other-word queries (<= 5 words)
+                               # are within-window of ANY pivot by
+                               # construction, which is what makes
+                               # near_stop_confined_misses == 0 structural
+                               # rather than empirical (the follow-up papers
+                               # run MaxDistance up to 9 for the same
+                               # reason).  <= 15 so triple distance pairs
+                               # pack into the int8 dpair payload.
     near_slots: int = 20       # fixed-width stream-3 slots per occurrence;
                                # 4*max_distance (2 forms x 2D positions) is
                                # lossless -- smaller trades recall for size
@@ -46,6 +64,7 @@ class IndexParams:
 
     def __post_init__(self):
         assert 2 <= self.min_len <= self.max_len <= MAX_STOP_PHRASE_LEN
+        assert 1 <= self.near_window <= 15
         if self.near_slots < 4 * self.max_distance:
             import warnings
             warnings.warn("near_slots < 4*max_distance: stream-3 verification "
@@ -170,7 +189,10 @@ def build_expanded_index(tf: TokenForms, lexicon: Lexicon, params: IndexParams) 
     m2 = (tf.n2 >= 0) & lexicon.is_frequent(np.maximum(tf.n2, 0))
     w_base = np.concatenate([tf.n1[m1], tf.n2[m2]]).astype(np.int64)
     w_g = np.concatenate([g_idx[m1], g_idx[m2]])
-    w_pd = lexicon.processing_distance(w_base)
+    # pair reach: ProcessingDistance, floored at the near window so the
+    # expanded fast path covers default near-mode queries end to end (the
+    # planner's _expanded_group guards any window beyond this reach)
+    w_pd = np.maximum(lexicon.processing_distance(w_base), params.near_window)
 
     keys_parts, doc_parts, pos_parts, dist_parts = [], [], [], []
     max_pd = int(w_pd.max(initial=0))
@@ -199,23 +221,191 @@ def build_expanded_index(tf: TokenForms, lexicon: Lexicon, params: IndexParams) 
                 pos_parts.append(tf.pos_of[g_k])
                 dist_parts.append(np.full(len(g_k), sd, dtype=np.int8))
 
-    if keys_parts:
-        keys = np.concatenate(keys_parts)
-        doc = np.concatenate(doc_parts)
-        pos = np.concatenate(pos_parts)
-        dist = np.concatenate(dist_parts)
-        order = np.lexsort((pos, doc, keys))
-        pairs = CSR.from_unsorted(
-            keys[order],
-            {"doc": doc[order], "pos": pos[order], "dist": dist[order]},
-            presorted=True,
-        )
-    else:
-        pairs = CSR.from_unsorted(np.empty(0, np.int64),
-                                  {"doc": np.empty(0, np.int32),
-                                   "pos": np.empty(0, np.int32),
-                                   "dist": np.empty(0, np.int8)})
+    # same-token pairs (dist 0): a token whose two basic forms straddle the
+    # frequent tier is its own (w, v) co-occurrence.  Near-mode windows
+    # include the pivot position itself, so without these the expanded path
+    # would miss matches the basic-fetch path (and the oracle) finds.
+    both = (tf.n1 >= 0) & (tf.n2 >= 0)
+    f1 = lexicon.is_frequent(np.maximum(tf.n1, 0)) & both
+    f2 = lexicon.is_frequent(np.maximum(tf.n2, 0)) & both
+    m0 = f1 | f2
+    if m0.any():
+        a, b = tf.n1[m0].astype(np.int64), tf.n2[m0].astype(np.int64)
+        bf = f1[m0] & f2[m0]
+        w0 = np.where(bf, np.minimum(a, b), np.where(f1[m0], a, b))
+        v0 = np.where(bf, np.maximum(a, b), np.where(f1[m0], b, a))
+        g0 = g_idx[m0]
+        keys_parts.append(w0 * n_base + v0)
+        doc_parts.append(tf.doc_of[g0])
+        pos_parts.append(tf.pos_of[g0])
+        dist_parts.append(np.zeros(len(g0), dtype=np.int8))
+
+    pairs = _csr_from_parts(keys_parts, {"doc": doc_parts, "pos": pos_parts,
+                                         "dist": dist_parts})
     return ExpandedIndex(pairs=pairs, n_base=n_base)
+
+
+# ---------------------------------------------------------------------------
+# multi-component key index (pairs + triples around stop forms)
+# ---------------------------------------------------------------------------
+
+def build_multi_key_index(tf: TokenForms, lexicon: Lexicon,
+                          params: IndexParams) -> MultiKeyIndex:
+    """Multi-component keys around stop forms (see multi_key_index.py).
+
+    Pairs are emitted from the stop side (one pass per signed delta,
+    vectorized over every stop occurrence); triples use the arXiv:2006.07954
+    two-phase construction: (1) per non-stop occurrence, the NEAREST
+    distance to each distinct stop form within NeighborDistance; (2) all
+    s1 < s2 combinations per occurrence, enumerated as offset-pairs over
+    the (occurrence, stop form)-sorted record list.  Delta 0 (one token
+    carrying both a stop and a non-stop form) is included — near-mode
+    windows contain the pivot position itself.  NeighborDistance =
+    `params.near_window`, the default near-mode window.
+    """
+    T = len(tf.doc_of)
+    n_base = lexicon.config.n_base
+    n_stop = lexicon.config.n_stop
+    D = params.near_window
+    g_idx = np.arange(T, dtype=np.int64)
+
+    # -- pairs: (s, v), emitted from each stop occurrence -------------------
+    s_base = np.concatenate([c[c >= 0].astype(np.int64)
+                             for c in (tf.s1_local, tf.s2_local)])
+    s_g = np.concatenate([g_idx[c >= 0] for c in (tf.s1_local, tf.s2_local)])
+    keys_p, doc_p, pos_p, dist_p = [], [], [], []
+    for sd in range(-D, D + 1):
+        part = s_g + sd
+        inb = (part >= 0) & (part < T)
+        pc = np.clip(part, 0, T - 1)
+        ok_base = inb & (tf.doc_of[pc] == tf.doc_of[s_g])
+        for col in (tf.n1, tf.n2):
+            v = col[pc].astype(np.int64)
+            ok = ok_base & (v >= 0)
+            if not ok.any():
+                continue
+            keys_p.append(pack_multi_pair_key(s_base[ok], v[ok], n_base))
+            doc_p.append(tf.doc_of[s_g[ok]])
+            pos_p.append(tf.pos_of[s_g[ok]])
+            dist_p.append(np.full(int(ok.sum()), sd, dtype=np.int8))
+    pairs = _csr_from_parts(keys_p, {"doc": doc_p, "pos": pos_p,
+                                     "dist": dist_p})
+
+    # -- triples: (s1, s2, v), one posting per v occurrence -----------------
+    v_base = np.concatenate([c[c >= 0].astype(np.int64)
+                             for c in (tf.n1, tf.n2)])
+    v_g = np.concatenate([g_idx[c >= 0] for c in (tf.n1, tf.n2)])
+    keys_t, doc_t, pos_t, dist_t, dpair_t = [], [], [], [], []
+    for lo in range(0, len(v_base), params.chunk):
+        vb, vg = v_base[lo:lo + params.chunk], v_g[lo:lo + params.chunk]
+        r_idx = np.arange(len(vb), dtype=np.int64)
+        rec_r, rec_s, rec_d = [], [], []
+        for sd in range(-D, D + 1):
+            part = vg + sd
+            inb = (part >= 0) & (part < T)
+            pc = np.clip(part, 0, T - 1)
+            ok_base = inb & (tf.doc_of[pc] == tf.doc_of[vg])
+            for col in (tf.s1_local, tf.s2_local):
+                s = col[pc].astype(np.int64)
+                ok = ok_base & (s >= 0)
+                if not ok.any():
+                    continue
+                rec_r.append(r_idx[ok])
+                rec_s.append(s[ok])
+                rec_d.append(np.full(int(ok.sum()), abs(sd), dtype=np.int64))
+        if not rec_r:
+            continue
+        r = np.concatenate(rec_r)
+        s = np.concatenate(rec_s)
+        d = np.concatenate(rec_d)
+        # phase 1: nearest distance per (occurrence, stop form)
+        rs = r * n_stop + s
+        order = np.lexsort((d, rs))
+        rs, r, s, d = rs[order], r[order], s[order], d[order]
+        keep = np.ones(len(rs), dtype=bool)
+        keep[1:] = rs[1:] != rs[:-1]
+        r, s, d = r[keep], s[keep], d[keep]
+        # phase 2: all s1 < s2 pairs per occurrence (s ascends within each
+        # r segment, so offset-pairs enumerate each combination once)
+        off = 1
+        while off < len(r):
+            same = r[:-off] == r[off:]
+            if not same.any():
+                break
+            i = np.nonzero(same)[0]
+            s1, d1 = s[i], d[i]
+            s2, d2 = s[i + off], d[i + off]
+            ri = r[i]
+            keys_t.append(pack_multi_triple_key(s1, s2, vb[ri], n_stop))
+            doc_t.append(tf.doc_of[vg[ri]])
+            pos_t.append(tf.pos_of[vg[ri]])
+            dist_t.append(np.maximum(d1, d2).astype(np.int8))
+            dpair_t.append(pack_dist_pair(d1, d2))
+            off += 1
+    triples = _csr_from_parts(keys_t, {"doc": doc_t, "pos": pos_t,
+                                       "dist": dist_t, "dpair": dpair_t})
+    return MultiKeyIndex(pairs=pairs, triples=triples, n_base=n_base,
+                         n_stop=n_stop, neighbor_distance=D)
+
+
+def _csr_from_parts(key_parts: list, col_parts: dict[str, list]) -> CSR:
+    """Concatenate emitted parts into a (key, doc, pos)-lexsorted CSR."""
+    if not key_parts:
+        empty_cols = {"doc": np.empty(0, np.int32), "pos": np.empty(0, np.int32),
+                      "dist": np.empty(0, np.int8), "dpair": np.empty(0, np.int8)}
+        return CSR.from_unsorted(np.empty(0, np.int64),
+                                 {k: empty_cols[k] for k in col_parts})
+    keys = np.concatenate(key_parts)
+    cols = {k: np.concatenate(v) for k, v in col_parts.items()}
+    order = np.lexsort((cols["pos"], cols["doc"], keys))
+    return CSR.from_unsorted(keys[order],
+                             {k: v[order] for k, v in cols.items()},
+                             presorted=True)
+
+
+def reference_multi_key_postings(tf: TokenForms, lexicon: Lexicon,
+                                 params: IndexParams):
+    """Literal nested-loop reference for the multi-key construction — the
+    oracle the vectorized builder is cross-checked against in tests.
+
+    Returns (pairs, triples): pairs = list of (key, doc, pos, dist) tuples;
+    triples = list of (key, doc, pos, max_dist, (d1, d2)) tuples.
+    """
+    T = len(tf.doc_of)
+    D = params.near_window
+    n_base, n_stop = lexicon.config.n_base, lexicon.config.n_stop
+    pairs, triples = [], []
+    for g in range(T):
+        stop_forms = [int(c[g]) for c in (tf.s1_local, tf.s2_local) if c[g] >= 0]
+        ns_forms = [int(c[g]) for c in (tf.n1, tf.n2) if c[g] >= 0]
+        # pairs from the stop side
+        for s in stop_forms:
+            for sd in range(-D, D + 1):
+                u = g + sd
+                if not (0 <= u < T) or tf.doc_of[u] != tf.doc_of[g]:
+                    continue
+                for v in (int(c[u]) for c in (tf.n1, tf.n2) if c[u] >= 0):
+                    pairs.append((int(pack_multi_pair_key(s, v, n_base)),
+                                  int(tf.doc_of[g]), int(tf.pos_of[g]), sd))
+        # triples from the non-stop side: nearest distance per stop form
+        for v in ns_forms:
+            nearest: dict[int, int] = {}
+            for sd in range(-D, D + 1):
+                u = g + sd
+                if not (0 <= u < T) or tf.doc_of[u] != tf.doc_of[g]:
+                    continue
+                for s in (int(c[u]) for c in (tf.s1_local, tf.s2_local)
+                          if c[u] >= 0):
+                    nearest[s] = min(nearest.get(s, D + 1), abs(sd))
+            forms = sorted(nearest)
+            for i, s1 in enumerate(forms):
+                for s2 in forms[i + 1:]:
+                    d1, d2 = nearest[s1], nearest[s2]
+                    triples.append((
+                        int(pack_multi_triple_key(s1, s2, v, n_stop)),
+                        int(tf.doc_of[g]), int(tf.pos_of[g]),
+                        max(d1, d2), (d1, d2)))
+    return pairs, triples
 
 
 # ---------------------------------------------------------------------------
@@ -377,6 +567,7 @@ class IndexSet:
     basic: BasicIndex
     expanded: ExpandedIndex
     stop_phrase: StopPhraseIndex
+    multi_key: MultiKeyIndex
     ordinary: DenseCSR
     n_docs: int
 
@@ -384,17 +575,53 @@ class IndexSet:
         """Total occurrences per basic form (ordinary-index view, incl. stop)."""
         return self.ordinary.counts()
 
+    def max_posting_run(self) -> int:
+        """Longest single posting list across every stream — the stat the
+        doc-shard auto-pick keys off (the longest list bounds the per-row
+        sort slab of the segmented gather)."""
+        stores = (self.basic.occurrences, self.basic.first_occ,
+                  self.expanded.pairs, self.stop_phrase.phrases,
+                  self.multi_key.pairs, self.multi_key.triples, self.ordinary)
+        return max((int(np.diff(s.offsets).max(initial=0)) for s in stores),
+                   default=0)
+
     def size_report(self) -> dict[str, int]:
         return {
             "stop_phrase_index_bytes": self.stop_phrase.nbytes(),
             "expanded_index_bytes": self.expanded.nbytes(),
+            "multi_key_index_bytes": self.multi_key.nbytes(),
             "basic_index_bytes": self.basic.nbytes(),
             "ordinary_index_bytes": self.ordinary.nbytes(),
             "stop_phrase_postings": self.stop_phrase.phrases.n_postings,
             "expanded_postings": self.expanded.pairs.n_postings,
+            "multi_key_pair_postings": self.multi_key.n_pair_postings,
+            "multi_key_triple_postings": self.multi_key.n_triple_postings,
             "basic_postings": self.basic.occurrences.n_postings,
             "ordinary_postings": self.ordinary.n_postings,
         }
+
+
+def auto_docs_per_shard(n_docs: int, max_list_len: int,
+                        seg_target: int = 4096) -> int:
+    """Doc-shard granularity for the segmented gather, from posting-list
+    stats (ROADMAP "easy future win"): enough shards that the longest
+    posting list splits into ~seg_target-posting segments, rounded up to a
+    power of two and clamped to the packed-key shard cap.  At the canonical
+    bench scale (1200 docs, longest list ~9e4) this picks 64 docs/shard
+    (19 shards) — ~1.4x faster than 1 shard on the pre-windowed workload
+    and parity on the current one (QTYPE_MULTI plans carry many short
+    multi-key fetches, so over-sharding multiplies rows: 75 shards cost
+    ~1.3-2x; see BENCH_search.json shard_scaling) — while bounding the largest
+    per-row sort slab, which is what matters as corpora grow."""
+    from repro.core.fetch_tables import DOCS_PER_SHARD
+    if n_docs <= 0 or max_list_len <= 0:
+        return DOCS_PER_SHARD
+    n_shards = max(1, -(-max_list_len // seg_target))
+    dps = max(1, -(-n_docs // n_shards))
+    p = 1
+    while p < dps:
+        p <<= 1
+    return min(p, DOCS_PER_SHARD)
 
 
 def build_all(corpus: Corpus, lexicon: Lexicon, analyzer: Analyzer,
@@ -407,6 +634,7 @@ def build_all(corpus: Corpus, lexicon: Lexicon, analyzer: Analyzer,
         basic=build_basic_index(tf, lexicon, params),
         expanded=build_expanded_index(tf, lexicon, params),
         stop_phrase=build_stop_phrase_index(tf, params),
+        multi_key=build_multi_key_index(tf, lexicon, params),
         ordinary=build_ordinary_index(tf, lexicon),
         n_docs=corpus.n_docs,
     )

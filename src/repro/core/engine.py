@@ -76,9 +76,10 @@ class AdditionalIndexEngine(_BatchSearchMixin):
     """
 
     def __init__(self, index: IndexSet, batch_impl: str = "ref",
-                 interpret: bool = True, docs_per_shard: int | None = None):
+                 interpret: bool = True, docs_per_shard: int | None = None,
+                 windowed_near_stop: bool = True):
         self.index = index
-        self.planner = Planner(index)
+        self.planner = Planner(index, windowed_near_stop=windowed_near_stop)
         self.executor = Executor(index)
         self._init_batch(batch_impl, interpret, docs_per_shard)
 
@@ -112,14 +113,12 @@ class OrdinaryEngine(_BatchSearchMixin):
 
     def plan(self, surface_ids, mode: str = MODE_PHRASE, window: int | None = None) -> QueryPlan:
         if window is None:
-            window = self.index.params.max_distance
+            window = self.index.params.near_window
         ana = self.index.analyzer
         form_lists = [ana.forms_of(s) for s in surface_ids]
-        if mode == MODE_NEAR:
-            # stop-containing queries stay sequential, as in the paper's runs
-            lex = self.index.lexicon
-            if any(bool(lex.is_stop(np.asarray(fl)).any()) for fl in form_lists):
-                mode = MODE_PHRASE
+        # near mode is windowed for every query, stop forms included — the
+        # baseline's single index holds stop posting lists, so it pays the
+        # full-list reads the multi-key index exists to avoid
         groups = []
         if mode == MODE_PHRASE:
             for i, forms in enumerate(form_lists):
@@ -138,20 +137,34 @@ class OrdinaryEngine(_BatchSearchMixin):
         return self.executor.execute(plan, max_results=max_results)
 
 
-def near_query_stop_confined(lexicon, analyzer, surface_ids,
+def near_query_contains_stop(lexicon, analyzer, surface_ids,
                              mode: str = MODE_NEAR) -> bool:
-    """True when a near-mode query contains a stop basic form.
-
-    The paper's Type-4 rule ("If one of the query words has a stop basic
-    form, the search is confined to sequential words") re-classifies such
-    queries to sequential matching, so an every-other-word query sampled
-    from an indexed document legitimately may not find its source — recall
-    is only promised for phrase queries and stop-free near queries.  The
-    benchmark's `missed_source_docs` and the serve parity tests share this
-    single predicate."""
+    """True when a near-mode query has at least one stop basic form among
+    its words' forms — the population the paper's Type-4 rule used to
+    confine to sequential matching, and which the multi-component key index
+    (QTYPE_MULTI plans) now serves with true windowed semantics."""
     if mode != MODE_NEAR:
         return False
     return any(bool(lexicon.is_stop(np.asarray(analyzer.forms_of(s))).any())
+               for s in surface_ids)
+
+
+def near_query_stop_confined(lexicon, analyzer, surface_ids,
+                             mode: str = MODE_NEAR) -> bool:
+    """True when EVERY basic form of EVERY query word is a stop form.
+
+    Such a near query has only all-stop tier combinations, so every subquery
+    is Type 1 — contiguous stop-phrase matching, word order disregarded —
+    and it has no doc-level fallback either (stop words carry no meaning
+    doc-level).  An every-other-word query sampled from an indexed document
+    legitimately may not find its source; these are the ONLY near queries
+    recall is not promised for since the multi-component key index
+    (QTYPE_MULTI) gave every mixed stop-containing near query windowed
+    semantics.  The benchmark's `missed_source_docs` and the serve parity
+    tests share this single predicate."""
+    if mode != MODE_NEAR:
+        return False
+    return all(bool(lexicon.is_stop(np.asarray(analyzer.forms_of(s))).all())
                for s in surface_ids)
 
 
@@ -181,10 +194,13 @@ def brute_force_search(corpus: Corpus, index: IndexSet, surface_ids,
       * all-stop subqueries: contiguous window, word order DISREGARDED
         (the stop-phrase index keys are sorted multisets), with the planner's
         part-splitting for phrases longer than MaxLength;
-      * stop-containing subqueries: precise positional match (Type 4 is
-        phrase-only);
+      * stop-containing subqueries, phrase mode: precise positional match
+        (Type 4);
       * otherwise, phrase mode = precise positional; near mode = every word
-        within `window` of the pivot (the planner's pivot rule).
+        within `window` of the pivot (the planner's pivot rule) — INCLUDING
+        stop slots: since the multi-component key index, near-mode
+        subqueries containing stop forms get TRUE windowed answers
+        (QTYPE_MULTI), no Type-4 sequential confinement.
 
     Returns (positional_matches, doc_matches): positional = set[(doc, anchor)]
     where anchor is the phrase start (phrase/stop) or the pivot position
@@ -195,7 +211,7 @@ def brute_force_search(corpus: Corpus, index: IndexSet, surface_ids,
 
     lexicon, analyzer, params = index.lexicon, index.analyzer, index.params
     if window is None:
-        window = params.max_distance
+        window = params.near_window
     occ_counts = index.base_occ_counts()
 
     tf_prim = analyzer.primary[corpus.tokens]
@@ -249,9 +265,7 @@ def brute_force_search(corpus: Corpus, index: IndexSet, surface_ids,
     for tiered in _tier_splits([analyzer.forms_of(s) for s in surface_ids], lexicon):
         tiers = [t for t, _ in tiered]
         n = len(tiered)
-        sub_mode = mode
-        if any(t == TIER_STOP for t in tiers):
-            sub_mode = MODE_PHRASE
+        sub_mode = mode   # near stays windowed even with stop slots (QTYPE_MULTI)
         if all(t == TIER_STOP for t in tiers):
             if n >= params.min_len:
                 positional |= stop_multiset_anchors(tiered)

@@ -115,6 +115,10 @@ class DeviceIndex:
         s = index.stop_phrase.phrases
         self.stop_doc = jnp.asarray(s.columns["doc"])
         self.stop_pos = jnp.asarray(s.columns["pos"])
+        m = index.multi_key.arena_columns()
+        self.multi_doc = jnp.asarray(m["doc"])
+        self.multi_pos = jnp.asarray(m["pos"])
+        self.multi_dist = jnp.asarray(m["dist"])
         o = index.ordinary
         self.ord_doc = jnp.asarray(o.columns["doc"])
         self.ord_pos = jnp.asarray(o.columns["pos"])
@@ -142,9 +146,20 @@ class Executor:
             return self._phrase_keys(d.stop_doc[s:e], d.stop_pos[s:e], f.offset)
         if f.stream == "first":
             return d.first_doc[s:e].astype(jnp.int64)
-        if f.stream == "expanded":
-            doc, pos, dist = d.exp_doc[s:e], d.exp_pos[s:e], d.exp_dist[s:e]
-            if mode == MODE_PHRASE:
+        if f.stream in ("expanded", "multi"):
+            # dist-carrying streams share one keying rule (the math the
+            # batched gather mirrors in bucket_step_math).  Phrase mode
+            # (expanded only): anchor keys + exact-distance mask.  Near
+            # mode: keys at the pivot position — pos + dist when
+            # pivot_from_dist (expanded fetches, (s, v) pairs), pos itself
+            # otherwise ((s1, s2, v) triples, whose dist is the max of the
+            # two nearest stop distances); |dist| <= window masks the band.
+            if f.stream == "expanded":
+                doc, pos, dist = d.exp_doc[s:e], d.exp_pos[s:e], d.exp_dist[s:e]
+            else:
+                doc, pos, dist = (d.multi_doc[s:e], d.multi_pos[s:e],
+                                  d.multi_dist[s:e])
+            if f.stream == "expanded" and mode == MODE_PHRASE:
                 keys = self._phrase_keys(doc, pos, f.offset)
                 mask = dist == f.required_dist
             else:

@@ -10,7 +10,10 @@ one schema, one tensorizer, one bucket step.
 Every subplan of every query becomes one or more *rows* (one per doc shard
 the seed list touches — the shard-segmented gather), with F fetch slots per
 group carrying unions of morphological forms / expanded orientations /
-stop-phrase parts / long-list splits:
+stop-phrase parts / multi-component key lookups (QTYPE_MULTI windowed
+near+stop plans: (s, v) pairs ride `pivot_from_dist` + `max_abs`, (s1, s2,
+v) triples anchor at the pivot with `max_abs` alone — no schema additions)
+/ long-list splits:
 
     start/length/offset/req_dist/max_abs : int32 [T, G, F]
     pivot_from_dist                      : bool  [T, G, F]

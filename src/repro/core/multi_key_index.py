@@ -1,0 +1,91 @@
+"""Multi-component key index: additional indexes built around stop forms
+(arXiv:1812.07640 multi-component keys; arXiv:2006.07954 three-component
+construction).
+
+The paper's Type-4 rule confines near-mode queries that contain stop forms
+to sequential matching, because the basic index holds no stop-word posting
+lists to window against.  Veretennikov's follow-up closes that gap with
+additional indexes whose keys have several word components:
+
+* **pairs** — two-component keys ``(s, v)``: every co-occurrence of a stop
+  basic form *s* with a non-stop basic form *v* within NeighborDistance
+  (= ``IndexParams.near_window``, the default near-mode window), including
+  distance 0 (a single token
+  carrying both forms).  Postings store ``(doc, pos of s, dist = pos_v -
+  pos_s)``, exactly the expanded-index layout, so a near-mode lookup keyed
+  at the *pivot* position is ``pos + dist`` — the same ``pivot_from_dist``
+  math the executor already jits for expanded fetches.
+
+* **triples** — three-component keys ``(s1, s2, v)`` with ``s1 < s2`` two
+  distinct stop forms near a non-stop *v*.  One posting per *v* occurrence
+  that has both stops within NeighborDistance, anchored at ``pos of v``
+  with ``dist = max(nearest |d1|, nearest |d2|)`` — so the executor's
+  ``|dist| <= window`` mask answers "both stops within the window of this
+  pivot occurrence" in one fetch instead of two.  The individual nearest
+  distances ride along as a packed position-pair payload (``dpair``,
+  4 bits each — see postings.pack_dist_pair) for introspection and the
+  construction property tests.
+
+Both CSRs are (doc, pos)-sorted per key, so the batch executor's
+shard-segmented gather splits multi-key fetches at doc-shard boundaries
+with the same single ``searchsorted`` it uses for every other stream; the
+two tables are exposed as ONE concatenated arena stream ("multi").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.postings import (CSR, pack_multi_pair_key,
+                                 pack_multi_triple_key)
+
+
+@dataclasses.dataclass
+class MultiKeyIndex:
+    pairs: CSR      # key = s * n_base + v; columns: doc, pos (of s), dist
+    triples: CSR    # key = (v * n_stop + s2) * n_stop + s1;
+                    # columns: doc, pos (of v), dist (= max nearest), dpair
+    n_base: int
+    n_stop: int
+    neighbor_distance: int   # = IndexParams.near_window at build time
+
+    @property
+    def n_pair_postings(self) -> int:
+        return self.pairs.n_postings
+
+    @property
+    def n_triple_postings(self) -> int:
+        return self.triples.n_postings
+
+    @property
+    def n_postings(self) -> int:
+        return self.n_pair_postings + self.n_triple_postings
+
+    def nbytes(self) -> int:
+        return self.pairs.nbytes() + self.triples.nbytes()
+
+    def arena_columns(self) -> dict[str, np.ndarray]:
+        """doc/pos/dist concatenated pairs-then-triples — the single "multi"
+        stream of the executor arenas.  find_pair/find_triple return slices
+        into this concatenation."""
+        return {
+            "doc": np.concatenate([self.pairs.columns["doc"],
+                                   self.triples.columns["doc"]]),
+            "pos": np.concatenate([self.pairs.columns["pos"],
+                                   self.triples.columns["pos"]]),
+            "dist": np.concatenate([self.pairs.columns["dist"],
+                                    self.triples.columns["dist"]]),
+        }
+
+    def find_pair(self, stop_id: int, v: int) -> tuple[int, int]:
+        """(start, end) slice of the (s, v) postings in the multi stream."""
+        return self.pairs.find(int(pack_multi_pair_key(stop_id, v, self.n_base)))
+
+    def find_triple(self, s1: int, s2: int, v: int) -> tuple[int, int]:
+        """(start, end) slice of the (s1, s2, v) postings in the multi
+        stream (canonicalizes the stop-component order)."""
+        a, b = (s1, s2) if s1 < s2 else (s2, s1)
+        s, e = self.triples.find(int(pack_multi_triple_key(a, b, v, self.n_stop)))
+        off = self.pairs.n_postings
+        return s + off, e + off

@@ -6,7 +6,13 @@ The planner runs host-side.  It
   2. *splits* the query whenever one word's forms span different frequency
      tiers (the paper's PROCESSING QUERIES rule) -- one subquery per tier
      combination, results to be unioned,
-  3. classifies every subquery into the paper's Type 1-4,
+  3. classifies every subquery into the paper's Type 1-4 — plus Type 5
+     (QTYPE_MULTI), this repo's multi-component-key plan: a NEAR-mode
+     subquery containing stop forms is no longer confined to sequential
+     matching (the paper's Type-4 rule); it splits around its stop words
+     into multi-key lookups ((s, pivot) pairs / (s1, s2, pivot) triples,
+     arXiv:1812.07640 / 2006.07954) plus the residual ordinary/expanded
+     fetches, all keyed at the pivot position — true windowed semantics,
   4. resolves every posting fetch down to explicit (start, length) slices in
      the index arrays, so the device executor is pure array math,
   5. accounts the paper's primary metric -- the number of postings read.
@@ -33,6 +39,8 @@ from repro.core.postings import MAX_STOP_PHRASE_LEN
 
 MODE_PHRASE = "phrase"   # precise: order + adjacency
 MODE_NEAR = "near"       # word set: all words within a window of the pivot
+
+QTYPE_MULTI = 5          # windowed near+stop via multi-component keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,17 +124,32 @@ def split_query_parts(n: int, min_len: int, max_len: int) -> list[tuple[int, int
 
 
 class Planner:
-    def __init__(self, index: IndexSet):
+    def __init__(self, index: IndexSet, windowed_near_stop: bool = True):
         self.index = index
         self.lex = index.lexicon
         self._occ_counts = index.base_occ_counts()
+        # expanded-pair reach per basic form: max(ProcessingDistance,
+        # near_window) — precomputed once; planning is on the per-query
+        # latency path
+        self._pair_reach = np.maximum(
+            index.lexicon.processing_distance(
+                np.arange(index.lexicon.config.n_base)),
+            index.params.near_window)
+        # True (default): near-mode subqueries containing stop forms get the
+        # multi-component-key windowed plan (QTYPE_MULTI).  False restores
+        # the paper's Type-4 sequential confinement (kept for the benchmark's
+        # before/after comparison).
+        self.windowed_near_stop = windowed_near_stop
 
     # -- public API ---------------------------------------------------------
 
     def plan(self, surface_ids: list[int], mode: str = MODE_PHRASE,
              window: Optional[int] = None) -> QueryPlan:
         if window is None:
-            window = self.index.params.max_distance
+            # near-mode default: the near window (2*(MaxLength-1)) — every
+            # slot of the paper's 2.2 every-other-word procedure is within
+            # reach of any pivot, making source recall structural
+            window = self.index.params.near_window
         form_lists = [self.index.analyzer.forms_of(s) for s in surface_ids]
         subplans = []
         for tiered in self._split_by_tier(form_lists):
@@ -153,6 +176,8 @@ class Planner:
         if all(t == TIER_STOP for t in tiers):
             return self._plan_type1(tiered)
         if any(t == TIER_STOP for t in tiers):
+            if mode == MODE_NEAR and self.windowed_near_stop:
+                return self._plan_type5(tiered, window)
             return self._plan_type4(tiered, mode, window)
         if all(t == TIER_FREQUENT for t in tiers):
             return self._plan_type2(tiered, mode, window)
@@ -191,22 +216,30 @@ class Planner:
     def _expanded_group(self, slot, forms, pivot_slot, pivot_forms, mode, window) -> Optional[FetchGroup]:
         """Union of expanded (w, v=pivot) fetches over form combinations.
 
-        Returns None when no (w, v) pair exists for any combination -- the
-        caller then falls back to a basic fetch for this slot (paper Type 3:
-        "In the case of words for which no expanded index exists, we use an
-        ordinary index").
-        """
+        Returns None when the expanded index CANNOT cover the slot — the
+        required distance / window exceeds the pair reach
+        (max(ProcessingDistance, near_window)) for some orientation, so a
+        lookup would silently under-cover.  The caller must then fall back
+        to a basic fetch for the slot (paper Type 3: "In the case of words
+        for which no expanded index exists, we use an ordinary index").
+
+        Returns a fetchless group when every combination was looked up
+        within reach and no pair exists — then no within-reach match exists
+        anywhere and the group correctly kills the subplan."""
         exp = self.index.expanded
         fetches = []
         for w, v in itertools.product(forms, pivot_forms):
             for stored_w, stored_v, mirrored in ((w, v, False), (v, w, True)):
+                reach = int(self._pair_reach[stored_w])
+                rd = (slot - pivot_slot) if mirrored else (pivot_slot - slot)
+                if (abs(rd) if mode == MODE_PHRASE else window) > reach:
+                    return None      # under-coverage: slot needs basic fetches
                 s, e = exp.pairs.find(stored_w * exp.n_base + stored_v)
                 if e == s:
                     continue
                 # stored postings: (doc, pos of stored_w, dist to stored_v)
                 anchor_offset = pivot_slot if mirrored else slot
                 if mode == MODE_PHRASE:
-                    rd = (slot - pivot_slot) if mirrored else (pivot_slot - slot)
                     fetches.append(ResolvedFetch(
                         stream="expanded", start=s, length=e - s,
                         offset=anchor_offset, required_dist=rd))
@@ -216,8 +249,6 @@ class Planner:
                         offset=anchor_offset, max_abs_dist=window,
                         pivot_from_dist=not mirrored))
                 break   # canonical orientation found
-        if not fetches:
-            return None
         return FetchGroup(slot=slot, fetches=fetches, band=0)
 
     def _fallback_groups(self, tiered) -> list[FetchGroup]:
@@ -260,6 +291,7 @@ class Planner:
         n = len(tiered)
         pivot = self._pick_pivot(tiered)
         groups = []
+        fell_back = False
         if n == 1:
             groups.append(self._basic_group(0, tiered[0][1]))
         else:
@@ -267,9 +299,16 @@ class Planner:
                 if i == pivot:
                     continue
                 g = self._expanded_group(i, forms, pivot, tiered[pivot][1], mode, window)
-                if g is None:   # pair absent in the corpus => no distance match
-                    g = FetchGroup(slot=i, fetches=[], band=0)
+                if g is None:   # beyond pair reach: exact basic fetches instead
+                    g = self._basic_group(i, forms,
+                                          band=window if mode == MODE_NEAR else 0)
+                    fell_back = True
                 groups.append(g)
+            if fell_back:
+                # basic fallbacks don't imply the pivot's own presence the
+                # way expanded (w, pivot) pairs do — and near mode needs a
+                # band-0 seed — so the pivot's occurrences join the plan
+                groups.insert(0, self._basic_group(pivot, tiered[pivot][1]))
         return SubPlan(qtype=2, mode=mode, groups=groups,
                        fallback_groups=self._fallback_groups(tiered))
 
@@ -285,7 +324,7 @@ class Planner:
             g = None
             if t == TIER_FREQUENT:
                 g = self._expanded_group(i, forms, pivot, tiered[pivot][1], mode, window)
-                if g is not None:
+                if g is not None and g.fetches:
                     n_expanded += 1
             if g is None:
                 band = window if mode == MODE_NEAR else 0
@@ -332,3 +371,112 @@ class Planner:
             note = f"stop slots {unsupported} beyond MaxDistance of pivot; phrase split required"
         return SubPlan(qtype=4, mode=mode, groups=groups,
                        fallback_groups=self._fallback_groups(tiered), note=note)
+
+    # -- Type 5: windowed near + stop via multi-component keys -----------------
+
+    def _pair_group(self, slot, stop_forms, pivot_forms, window) -> FetchGroup:
+        """(s, pivot) two-component lookups: postings are occurrences of s
+        with the pivot form within NeighborDistance, keyed at the pivot
+        position (pos + dist) and masked to |dist| <= window — band-0
+        against the seed, exactly like an expanded near fetch."""
+        mk = self.index.multi_key
+        fetches = []
+        for s, v in itertools.product(stop_forms, pivot_forms):
+            st, e = mk.find_pair(int(s), int(v))
+            if e > st:
+                fetches.append(ResolvedFetch(
+                    stream="multi", start=st, length=e - st, offset=slot,
+                    max_abs_dist=window, pivot_from_dist=True))
+        return FetchGroup(slot=slot, fetches=fetches, band=0)
+
+    def _triple_group(self, slot, s1, s2, pivot_forms, window) -> Optional[FetchGroup]:
+        """(s1, s2, pivot) three-component lookup covering TWO stop slots in
+        one group: postings are pivot occurrences with both stops within
+        NeighborDistance, anchored at the pivot position with dist =
+        max(nearest |d1|, nearest |d2|) — so |dist| <= window answers "both
+        stops inside the window".  None when no pivot form has the key (no
+        windowed match can exist: the caller plants an empty group)."""
+        mk = self.index.multi_key
+        fetches = []
+        for v in pivot_forms:
+            st, e = mk.find_triple(int(s1), int(s2), int(v))
+            if e > st:
+                fetches.append(ResolvedFetch(
+                    stream="multi", start=st, length=e - st, offset=slot,
+                    max_abs_dist=window, pivot_from_dist=False))
+        if not fetches:
+            return None
+        return FetchGroup(slot=slot, fetches=fetches, band=0)
+
+    def _ordinary_band_group(self, slot, forms, window) -> FetchGroup:
+        """Escape for window > NeighborDistance: the stop form's full
+        ordinary-index posting list, banded against the pivot — correct at
+        any window, at the full posting-list cost the multi-key index
+        exists to avoid."""
+        fetches = []
+        for f in forms:
+            s, e = self.index.ordinary.find(f)
+            if e > s:
+                fetches.append(ResolvedFetch(stream="ordinary", start=s,
+                                             length=e - s, offset=slot))
+        return FetchGroup(slot=slot, fetches=fetches, band=window)
+
+    def _multi_key_groups(self, stop_slots, pivot_forms, window) -> list[FetchGroup]:
+        """One constraint group per distinct stop-slot form set: identical
+        form sets impose identical window constraints (one occurrence may
+        satisfy several slots), single-form slots with distinct forms pair
+        into three-component lookups, the rest use two-component lookups."""
+        mk = self.index.multi_key
+        if window > mk.neighbor_distance:
+            return [self._ordinary_band_group(i, forms, window)
+                    for i, forms in stop_slots]
+        uniq, seen = [], set()
+        for i, forms in stop_slots:
+            key = tuple(sorted(forms))
+            if key in seen:
+                continue
+            seen.add(key)
+            uniq.append((i, forms))
+        groups = []
+        singles = [(i, forms[0]) for i, forms in uniq if len(forms) == 1]
+        for k in range(0, len(singles) - 1, 2):
+            (i1, s1), (_i2, s2) = singles[k], singles[k + 1]
+            g = self._triple_group(i1, s1, s2, pivot_forms, window)
+            if g is None:
+                # the stops never co-occur near any pivot form, so the
+                # windowed intersection is empty: a fetchless group kills
+                # the subplan (the doc-only fallback still runs)
+                g = FetchGroup(slot=i1, fetches=[], band=0)
+            groups.append(g)
+        if len(singles) % 2:
+            i, s = singles[-1]
+            groups.append(self._pair_group(i, (s,), pivot_forms, window))
+        for i, forms in uniq:
+            if len(forms) > 1:
+                groups.append(self._pair_group(i, forms, pivot_forms, window))
+        return groups
+
+    def _plan_type5(self, tiered, window) -> SubPlan:
+        """Windowed near-mode subquery containing stop forms: split around
+        the stop words (arXiv:1812.07640) — the pivot's own occurrences
+        seed, non-stop slots constrain as in Type 3 near, and every stop
+        slot becomes a multi-component key lookup keyed at the pivot
+        position.  No Type-4 sequential confinement."""
+        pivot = self._pick_pivot(tiered)
+        pivot_forms = tiered[pivot][1]
+        groups = [self._basic_group(pivot, pivot_forms)]
+        for i, (t, forms) in enumerate(tiered):
+            if i == pivot or t == TIER_STOP:
+                continue
+            g = None
+            if t == TIER_FREQUENT:
+                g = self._expanded_group(i, forms, pivot, pivot_forms,
+                                         MODE_NEAR, window)
+            if g is None:
+                g = self._basic_group(i, forms, band=window)
+            groups.append(g)
+        stop_slots = [(i, forms) for i, (t, forms) in enumerate(tiered)
+                      if t == TIER_STOP]
+        groups.extend(self._multi_key_groups(stop_slots, pivot_forms, window))
+        return SubPlan(qtype=QTYPE_MULTI, mode=MODE_NEAR, groups=groups,
+                       fallback_groups=self._fallback_groups(tiered))

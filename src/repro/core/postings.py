@@ -65,6 +65,56 @@ def pack_stop_phrase_key(sorted_local_ids: np.ndarray) -> np.ndarray:
     return key
 
 
+def pack_multi_pair_key(stop_id, v, n_base) -> np.ndarray:
+    """Two-component multi-key: (s, v) with s a stop basic form and v any
+    non-stop basic form.  s is always the first component (canonical
+    stop-first orientation), so every stop-adjacent word pair in the corpus
+    is reachable via exactly one key."""
+    return np.asarray(stop_id, dtype=np.int64) * np.int64(n_base) \
+        + np.asarray(v, dtype=np.int64)
+
+
+def unpack_multi_pair_key(key, n_base):
+    key = np.asarray(key, dtype=np.int64)
+    return key // n_base, key % n_base
+
+
+def pack_multi_triple_key(s1, s2, v, n_stop) -> np.ndarray:
+    """Three-component multi-key (arXiv:2006.07954): two distinct stop basic
+    forms s1 < s2 (canonical sorted order) around a non-stop form v.  Stop
+    ids < 1024 and base ids < 2**40, so the key fits int64 with room."""
+    s1 = np.asarray(s1, dtype=np.int64)
+    s2 = np.asarray(s2, dtype=np.int64)
+    v = np.asarray(v, dtype=np.int64)
+    return (v * n_stop + s2) * n_stop + s1
+
+
+def unpack_multi_triple_key(key, n_stop):
+    key = np.asarray(key, dtype=np.int64)
+    s1 = key % n_stop
+    rest = key // n_stop
+    return s1, rest % n_stop, rest // n_stop
+
+
+MULTI_DIST_BITS = 4    # nearest-stop distances <= MaxDistance (7) fit 4 bits
+
+
+def pack_dist_pair(d1, d2) -> np.ndarray:
+    """Triple-posting payload: the pair of nearest |distances| (d1 of s1,
+    d2 of s2) packed into one int8 — one nibble each (NeighborDistance
+    <= 15), stored bit-exact in the int8 container (unpack masks the sign
+    away) — compatible with the arena's int8 dist column and the 17-bit
+    packed-key position layout (positions themselves stay in the pos
+    column)."""
+    return ((np.asarray(d1, np.int32) << MULTI_DIST_BITS)
+            | np.asarray(d2, np.int32)).astype(np.int8)
+
+
+def unpack_dist_pair(packed):
+    p = np.asarray(packed).astype(np.int32) & 0xFF
+    return p >> MULTI_DIST_BITS, p & ((1 << MULTI_DIST_BITS) - 1)
+
+
 NS_SHIFT = 10     # stop local id < 1024 -> 10 bits; (delta+MaxD) <= 14 -> 4 bits
 
 

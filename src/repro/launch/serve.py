@@ -35,7 +35,7 @@ def serve_search(n_queries: int):
     mesh = make_host_mesh(data=1, model=1)
     cfg = SearchServeConfig(queries=n_queries, postings_pad=8192,
                             seed_pad=2048, n_basic=1, n_expanded=1,
-                            n_stop=1, n_first=1)
+                            n_stop=1, n_first=1, n_multi=1)
     serve = SearchServe(index, cfg, mesh)
 
     rng = np.random.default_rng(0)

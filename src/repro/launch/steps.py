@@ -440,7 +440,8 @@ def _search_cell(arch_id, shape_name, shape, mesh, smoke=False) -> Cell:
         postings_pad=shape.get("postings_pad", base.postings_pad),
         n_basic=shape.get("n_basic", base.n_basic),
         n_expanded=shape.get("n_expanded", base.n_expanded),
-        n_stop=shape.get("n_stop", base.n_stop))
+        n_stop=shape.get("n_stop", base.n_stop),
+        n_multi=shape.get("n_multi", base.n_multi))
     dp_n = _dp_size(mesh)
     arenas = ss.arena_specs(cfg, dp_n)
     queries = ss.query_table_specs(cfg)

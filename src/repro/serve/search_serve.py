@@ -10,7 +10,7 @@ is gone; serve results are bit-identical to `engine.search_batch`.
 
 Distributed-IR layout: documents are partitioned contiguously over the
 dp = pod x data mesh axes; every dp shard holds only its own slice of the
-posting arena (all five streams concatenated so a fetch is a single gather)
+posting arena (all six streams concatenated so a fetch is a single gather)
 plus the matching near-stop rows.  Host-side tensorization is shard-
 segmented (batch_executor._build_rows): each execution row targets exactly
 one doc shard, so a row's fetches live wholly inside one dp shard's arena
@@ -60,17 +60,20 @@ class SearchServeConfig:
     check_slots: int = 4           # C: near-stop checks on the pivot group
     check_forms: int = 2           # M: stop forms per near-stop check
     ns_k: int = 20                 # stream-3 slots per posting
-    # per-shard arena sizes (basic|expanded|stop|first segments concatenated)
+    # per-shard arena sizes (basic|expanded|stop|first|multi segments
+    # concatenated)
     n_basic: int = 10_000_000
     n_expanded: int = 17_000_000
     n_stop: int = 23_000_000
     n_first: int = 4_000_000
+    n_multi: int = 12_000_000      # multi-component key postings (pairs+triples)
     impl: str = "ref"              # intersect implementation (ref | pallas)
     interpret: bool = True         # pallas interpreter (True on CPU hosts)
 
     @property
     def n_arena(self) -> int:
-        return self.n_basic + self.n_expanded + self.n_stop + self.n_first
+        return (self.n_basic + self.n_expanded + self.n_stop + self.n_first
+                + self.n_multi)
 
     @property
     def p_seed(self) -> int:

@@ -24,6 +24,44 @@ def small_world():
 
 
 @pytest.fixture(scope="session")
+def stop_near_queries(small_world):
+    """Seeded 200-query near-mode generator, biased so nearly every query
+    contains a stop basic form — the population the paper's Type-4 rule used
+    to confine to sequential matching and the multi-component key index now
+    serves with TRUE windowed semantics.  Always runs (no hypothesis
+    dependency); hypothesis drivers add shrinking on top when installed.
+
+    Yields (surface_ids, source_doc) tuples: word-set samples from indexed
+    documents at strides 1..3 (the paper's 2.2 procedure is stride 2), plus
+    explicit stop-injected variants.
+    """
+    from repro.core import near_query_contains_stop
+    corpus = small_world["corpus"]
+    lex, ana = small_world["lex"], small_world["ana"]
+    rng = np.random.default_rng(2024)
+    # a few guaranteed-stop surfaces to inject (surface 0 maps to base 0)
+    stop_surfaces = [s for s in range(200)
+                     if bool(lex.is_stop(np.asarray(ana.forms_of(s))).any())][:8]
+    queries = []
+    while len(queries) < 200:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        n = int(rng.integers(2, 7))
+        stride = int(rng.integers(1, 4))
+        span = stride * (n - 1) + 1
+        if len(toks) <= span:
+            continue
+        st = int(rng.integers(0, len(toks) - span))
+        q = toks[st:st + span:stride].tolist()
+        if not near_query_contains_stop(lex, ana, q):
+            if len(q) < 2:
+                continue
+            q[int(rng.integers(len(q)))] = int(rng.choice(stop_surfaces))
+        queries.append((q, d))
+    return queries
+
+
+@pytest.fixture(scope="session")
 def paper_queries(small_world):
     """The paper's experiment procedure: random doc, consecutive words (2.1)
     and every-other-word (2.2) queries of 3..5 words."""

@@ -38,7 +38,9 @@ def test_stop_phrase_run_counts():
 
 def test_expanded_index_invariants(small_world):
     """(w,v) postings: w frequent, v non-stop, |dist| <= PD(w), and the
-    canonical orientation stores each both-frequent pair once."""
+    canonical orientation stores each both-frequent pair once.  dist == 0
+    postings are same-token pairs (one token carrying both basic forms) —
+    every one must be backed by such a token."""
     idx = small_world["index"]
     lex = idx.lexicon
     pairs = idx.expanded.pairs
@@ -49,13 +51,27 @@ def test_expanded_index_invariants(small_world):
     assert (~lex.is_stop(v)).all()
     both = lex.is_frequent(v)
     assert (w[both] <= v[both]).all()          # canonical orientation
-    # dist bounds per key
-    pd = lex.processing_distance(w)
+    tf = expand_token_forms(small_world["corpus"], lex, idx.analyzer)
+    same_token = {(int(d), int(p), *sorted((int(a), int(b))))
+                  for d, p, a, b in zip(tf.doc_of[(tf.n1 >= 0) & (tf.n2 >= 0)],
+                                        tf.pos_of[(tf.n1 >= 0) & (tf.n2 >= 0)],
+                                        tf.n1[(tf.n1 >= 0) & (tf.n2 >= 0)],
+                                        tf.n2[(tf.n1 >= 0) & (tf.n2 >= 0)])}
+    # dist bounds per key: reach = max(ProcessingDistance, near_window)
+    pd = np.maximum(lex.processing_distance(w),
+                    small_world["index"].params.near_window)
+    n_zero = 0
     for i in range(pairs.n_keys):
         s, e = int(pairs.offsets[i]), int(pairs.offsets[i + 1])
         d = pairs.columns["dist"][s:e]
         assert (np.abs(d.astype(np.int32)) <= pd[i]).all()
-        assert (d != 0).all()
+        for j in np.nonzero(d == 0)[0]:
+            n_zero += 1
+            key = (int(pairs.columns["doc"][s + j]),
+                   int(pairs.columns["pos"][s + j]),
+                   *sorted((int(w[i]), int(v[i]))))
+            assert key in same_token, key
+    assert n_zero > 0      # the corpus does contain multi-form pairs
 
 
 def test_expanded_lookup_mirror(small_world):

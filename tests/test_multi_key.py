@@ -1,0 +1,232 @@
+"""Multi-component key index: construction vs the literal reference,
+canonical-key/payload invariants (arXiv:2006.07954), build determinism, the
+QTYPE_MULTI planner shape, and the docs_per_shard auto-pick heuristic."""
+import numpy as np
+import pytest
+
+from repro.core import auto_docs_per_shard
+from repro.core.builder import (IndexParams, TokenForms, build_multi_key_index,
+                                expand_token_forms,
+                                reference_multi_key_postings)
+from repro.core.fetch_tables import DOCS_PER_SHARD
+from repro.core.lexicon import TIER_STOP
+from repro.core.planner import MODE_NEAR, QTYPE_MULTI
+from repro.core.postings import (pack_dist_pair, pack_multi_pair_key,
+                                 pack_multi_triple_key, unpack_dist_pair,
+                                 unpack_multi_pair_key,
+                                 unpack_multi_triple_key)
+
+
+def _pairs_as_tuples(mk):
+    out = []
+    p = mk.pairs
+    for i, k in enumerate(p.keys):
+        s, e = int(p.offsets[i]), int(p.offsets[i + 1])
+        for d, po, di in zip(p.columns["doc"][s:e], p.columns["pos"][s:e],
+                             p.columns["dist"][s:e]):
+            out.append((int(k), int(d), int(po), int(di)))
+    return out
+
+
+def _triples_as_tuples(mk):
+    out = []
+    t = mk.triples
+    for i, k in enumerate(t.keys):
+        s, e = int(t.offsets[i]), int(t.offsets[i + 1])
+        for d, po, di, dp in zip(t.columns["doc"][s:e], t.columns["pos"][s:e],
+                                 t.columns["dist"][s:e],
+                                 t.columns["dpair"][s:e]):
+            d1, d2 = unpack_dist_pair(int(dp))
+            out.append((int(k), int(d), int(po), int(di),
+                        (int(d1), int(d2))))
+    return out
+
+
+def test_multi_key_matches_literal_reference(small_world):
+    """Vectorized builder == the nested-loop reference, as exact multisets —
+    this is also the 'exactly one canonical key per stop-adjacent pair'
+    property: every (s occurrence, non-stop neighbor) configuration appears
+    exactly once, under the stop-first key."""
+    idx = small_world["index"]
+    tf = expand_token_forms(small_world["corpus"], idx.lexicon, idx.analyzer)
+    ref_pairs, ref_triples = reference_multi_key_postings(
+        tf, idx.lexicon, idx.params)
+    assert sorted(_pairs_as_tuples(idx.multi_key)) == sorted(ref_pairs)
+    assert sorted(_triples_as_tuples(idx.multi_key)) == sorted(ref_triples)
+    assert len(ref_pairs) > 1000 and len(ref_triples) > 1000
+
+
+def test_multi_key_tiny_corpus_by_hand():
+    """One document, hand-checkable: stop run around two non-stop tokens."""
+    #   pos:   0    1    2    3
+    #   forms: s0   v10  s1   v11    (D = 2)
+    tf = TokenForms(
+        doc_of=np.zeros(4, np.int32), pos_of=np.arange(4, dtype=np.int32),
+        s1_local=np.array([0, -1, 1, -1], np.int32),
+        s2_local=np.full(4, -1, np.int32),
+        n1=np.array([-1, 10, -1, 11], np.int32),
+        n2=np.full(4, -1, np.int32))
+
+    class _Lex:
+        class config:
+            n_base = 100
+            n_stop = 5
+    mk = build_multi_key_index(tf, _Lex, IndexParams(max_distance=2, near_window=2))
+    # pairs (pos = pos of s, dist = pos_v - pos_s): s0 sees v10 ahead;
+    # s1 sees v10 behind and v11 ahead
+    assert sorted(_pairs_as_tuples(mk)) == sorted([
+        (int(pack_multi_pair_key(0, 10, 100)), 0, 0, 1),
+        (int(pack_multi_pair_key(1, 10, 100)), 0, 2, -1),
+        (int(pack_multi_pair_key(1, 11, 100)), 0, 2, 1),
+    ])
+    # triples: v10 sees s0 at 1 and s1 at 1 -> (0, 1, 10) with max 1;
+    # v11 sees only s1 (s0 is 3 away > D) -> no triple
+    assert _triples_as_tuples(mk) == [
+        (int(pack_multi_triple_key(0, 1, 10, 5)), 0, 1, 1, (1, 1))]
+    # same-token (dist 0) pair: token carrying both a stop and non-stop form
+    tf2 = TokenForms(
+        doc_of=np.zeros(1, np.int32), pos_of=np.zeros(1, np.int32),
+        s1_local=np.array([3], np.int32), s2_local=np.full(1, -1, np.int32),
+        n1=np.array([42], np.int32), n2=np.full(1, -1, np.int32))
+    mk2 = build_multi_key_index(tf2, _Lex, IndexParams(max_distance=2, near_window=2))
+    assert _pairs_as_tuples(mk2) == [(int(pack_multi_pair_key(3, 42, 100)),
+                                      0, 0, 0)]
+
+
+def test_multi_key_invariants(small_world):
+    """Key-domain invariants: pair keys are (stop, non-stop); triple keys
+    have s1 < s2 both stop around a non-stop v; dist == max of the payload
+    pair; every distance within NeighborDistance."""
+    idx = small_world["index"]
+    lex, mk = idx.lexicon, idx.multi_key
+    D = mk.neighbor_distance
+    s, v = unpack_multi_pair_key(mk.pairs.keys, mk.n_base)
+    assert (lex.base_tier[s] == TIER_STOP).all()
+    assert (~lex.is_stop(v)).all()
+    assert (np.abs(mk.pairs.columns["dist"].astype(np.int32)) <= D).all()
+    s1, s2, tv = unpack_multi_triple_key(mk.triples.keys, mk.n_stop)
+    assert (s1 < s2).all()                    # canonical sorted, distinct
+    assert (lex.base_tier[s1] == TIER_STOP).all()
+    assert (lex.base_tier[s2] == TIER_STOP).all()
+    assert (~lex.is_stop(tv)).all()
+    d1, d2 = unpack_dist_pair(mk.triples.columns["dpair"])
+    dist = mk.triples.columns["dist"].astype(np.int32)
+    assert np.array_equal(dist, np.maximum(d1, d2))
+    assert (dist <= D).all() and (np.minimum(d1, d2) >= 0).all()
+
+
+def test_multi_key_build_deterministic(small_world):
+    """Byte-identical across rebuilds and across chunk sizes (the chunked
+    triple construction must not depend on the chunk boundary)."""
+    idx = small_world["index"]
+    corpus = small_world["corpus"]
+    tf = expand_token_forms(corpus, idx.lexicon, idx.analyzer)
+    base = idx.multi_key
+    import dataclasses
+    for chunk in (1 << 20, 1000, 977):
+        params = dataclasses.replace(idx.params, chunk=chunk)
+        mk = build_multi_key_index(tf, idx.lexicon, params)
+        for a, b in ((base.pairs, mk.pairs), (base.triples, mk.triples)):
+            assert np.array_equal(a.keys, b.keys)
+            assert np.array_equal(a.offsets, b.offsets)
+            for c in a.columns:
+                assert np.array_equal(a.columns[c], b.columns[c]), (chunk, c)
+
+
+def test_multi_key_lookup_reaches_every_adjacency(small_world):
+    """Query-side canonical reachability: for sampled corpus (stop, word)
+    adjacencies, find_pair returns a slice containing that configuration."""
+    idx = small_world["index"]
+    corpus = small_world["corpus"]
+    tf = expand_token_forms(corpus, idx.lexicon, idx.analyzer)
+    mk = idx.multi_key
+    D = mk.neighbor_distance
+    rng = np.random.default_rng(3)
+    stops = np.nonzero(tf.s1_local >= 0)[0]
+    arena = mk.arena_columns()
+    checked = 0
+    for g in rng.choice(stops, size=200, replace=False):
+        s = int(tf.s1_local[g])
+        for sd in range(-D, D + 1):
+            u = g + sd
+            if not (0 <= u < len(tf.doc_of)) or tf.doc_of[u] != tf.doc_of[g]:
+                continue
+            if tf.n1[u] < 0:
+                continue
+            lo, hi = mk.find_pair(s, int(tf.n1[u]))
+            assert hi > lo
+            sl = slice(lo, hi)
+            hit = ((arena["doc"][sl] == tf.doc_of[g])
+                   & (arena["pos"][sl] == tf.pos_of[g])
+                   & (arena["dist"][sl] == sd))
+            assert int(hit.sum()) == 1     # exactly one canonical posting
+            checked += 1
+    assert checked > 100
+
+
+def _single_form_surface(world, base):
+    """A surface whose ONLY basic form is `base`, or None."""
+    ana = world["ana"]
+    lo = int(np.searchsorted(ana.primary, base, side="left"))
+    hi = int(np.searchsorted(ana.primary, base, side="right"))
+    for s in range(lo, hi):
+        if ana.forms_of(s) == [base]:
+            return s
+    return None
+
+
+def test_planner_type5_shape(small_world):
+    """A near query mixing stop + non-stop plans as QTYPE_MULTI with
+    multi-stream fetches; two single-form stop slots share one
+    three-component group; a lone stop slot uses a two-component lookup.
+    Query words are derived from actual index keys, so the lookups hit."""
+    mk = small_world["index"].multi_key
+    planner = small_world["engine"].planner
+    picked = None
+    for key in mk.triples.keys:
+        s1, s2, v = unpack_multi_triple_key(int(key), mk.n_stop)
+        surfs = [_single_form_surface(small_world, int(b))
+                 for b in (s1, v, s2)]
+        if all(s is not None for s in surfs):
+            picked = surfs
+            break
+    assert picked is not None, "no triple key with single-form surfaces"
+    plan = planner.plan(picked, mode=MODE_NEAR)     # [stop, v, stop]
+    sp = plan.subplans[0]
+    assert sp.qtype == QTYPE_MULTI and sp.mode == MODE_NEAR
+    multi_fetches = [f for g in sp.groups for f in g.fetches
+                     if f.stream == "multi"]
+    # both stop slots pair into ONE triple group: anchored at the pivot
+    # (pivot_from_dist False), window via max_abs
+    assert multi_fetches
+    assert all(not f.pivot_from_dist for f in multi_fetches)
+    assert all(f.max_abs_dist is not None for f in multi_fetches)
+    n_multi_groups = sum(1 for g in sp.groups
+                         if any(f.stream == "multi" for f in g.fetches))
+    assert n_multi_groups == 1
+    # a lone stop slot uses a two-component (s, pivot) lookup instead
+    plan2 = planner.plan([picked[0], picked[1]], mode=MODE_NEAR)
+    sp2 = plan2.subplans[0]
+    assert sp2.qtype == QTYPE_MULTI
+    pair_fetches = [f for g in sp2.groups for f in g.fetches
+                    if f.stream == "multi"]
+    assert pair_fetches and all(f.pivot_from_dist for f in pair_fetches)
+
+
+def test_auto_docs_per_shard_heuristic(small_world):
+    """The heuristic is pinned at the canonical bench stats (ROADMAP's
+    19-shard sweet spot) and behaves at the edges."""
+    # canonical scale: 1200 docs, longest list ~9e4 -> 64 docs/shard
+    assert auto_docs_per_shard(1200, 90_000) == 64
+    assert auto_docs_per_shard(0, 0) == DOCS_PER_SHARD      # degenerate
+    assert auto_docs_per_shard(10, 100) <= DOCS_PER_SHARD
+    # short lists never over-shard: one shard covers everything
+    assert auto_docs_per_shard(1200, 1) >= 1200
+    # power of two always
+    for nd, ml in ((1200, 90_000), (300, 21_000), (77, 5_000)):
+        dps = auto_docs_per_shard(nd, ml)
+        assert dps & (dps - 1) == 0
+    # the engine default wires it up
+    dev = small_world["engine"].batch_executor.dev
+    assert dev.docs_per_shard == auto_docs_per_shard(
+        small_world["index"].n_docs, small_world["index"].max_posting_run())

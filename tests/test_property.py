@@ -11,8 +11,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.postings import (CSR, PHRASE_BIAS, pack_near_stop_slot,
-                                 pack_stop_phrase_key, shifted_key,
+from repro.core.postings import (CSR, PHRASE_BIAS, pack_dist_pair,
+                                 pack_multi_pair_key, pack_multi_triple_key,
+                                 pack_near_stop_slot, pack_stop_phrase_key,
+                                 shifted_key, unpack_dist_pair,
+                                 unpack_multi_pair_key,
+                                 unpack_multi_triple_key,
                                  unpack_near_stop_slot, unpack_shifted_key)
 from repro.core.planner import split_query_parts
 from repro.dist.collectives import dequantize_int8, quantize_int8
@@ -53,6 +57,34 @@ def check_near_stop_slot_roundtrip(delta, sid, maxd):
     slot = pack_near_stop_slot(np.array([delta]), np.array([sid]), maxd)
     d2, s2 = unpack_near_stop_slot(slot, maxd)
     assert d2[0] == delta and s2[0] == sid
+
+
+def check_multi_key_roundtrip(s1, s2, v, n_base, n_stop):
+    """Multi-component key codecs (arXiv:2006.07954 canonical keys): pair
+    and triple keys round-trip; triple keys are canonical in (s1, s2) —
+    i.e. a sorted component pair produces the same key regardless of the
+    order the caller discovered the stops in — and the packed distance-pair
+    payload round-trips."""
+    ps, pv = unpack_multi_pair_key(pack_multi_pair_key(s1, v, n_base), n_base)
+    assert (int(ps), int(pv)) == (s1, v)
+    a, b = min(s1, s2), max(s1, s2)
+    if a != b:
+        k = pack_multi_triple_key(a, b, v, n_stop)
+        u1, u2, uv = unpack_multi_triple_key(k, n_stop)
+        assert (int(u1), int(u2), int(uv)) == (a, b, v)
+        # canonicality: same key from either discovery order via sorting
+        assert int(k) == int(pack_multi_triple_key(min(s2, s1), max(s2, s1),
+                                                   v, n_stop))
+        # injective in each component: bumping any one changes the key
+        for da, db, dv in ((1, 0, 0), (0, 1, 0), (0, 0, 1)):
+            if a + da < b + db or db:     # keep canonical a < b
+                assert int(k) != int(pack_multi_triple_key(
+                    a + da, b + db, v + dv, n_stop))
+
+
+def check_dist_pair_roundtrip(d1, d2):
+    u1, u2 = unpack_dist_pair(pack_dist_pair(d1, d2))
+    assert (int(u1), int(u2)) == (d1, d2)
 
 
 def check_csr_from_unsorted_invariants(keys):
@@ -137,6 +169,24 @@ def test_near_stop_slot_roundtrip(seed):
                                    int(rng.integers(5, 8)))
 
 
+@pytest.mark.parametrize("seed", range(25))
+def test_multi_key_roundtrip(seed):
+    rng = np.random.default_rng(900 + seed)
+    n_stop = int(rng.integers(8, 1025))
+    n_base = int(rng.integers(n_stop + 8, 50_001))
+    s1, s2 = rng.integers(0, n_stop, 2)
+    v = int(rng.integers(n_stop, n_base))
+    check_multi_key_roundtrip(int(s1), int(s2), v, n_base, n_stop)
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_dist_pair_roundtrip(seed):
+    rng = np.random.default_rng(1000 + seed)
+    # full nibbles (NeighborDistance <= 15), incl. the int8 sign bit
+    check_dist_pair_roundtrip(int(rng.integers(0, 16)),
+                              int(rng.integers(0, 16)))
+
+
 @pytest.mark.parametrize("seed", range(15))
 def test_csr_from_unsorted_invariants(seed):
     rng = np.random.default_rng(400 + seed)
@@ -211,6 +261,20 @@ if HAS_HYPOTHESIS:
     @settings(max_examples=50, deadline=None)
     def test_csr_from_unsorted_invariants_hyp(keys):
         check_csr_from_unsorted_invariants(keys)
+
+    @given(st.integers(8, 1024), st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_multi_key_roundtrip_hyp(n_stop, data):
+        n_base = data.draw(st.integers(n_stop + 1, 60_000))
+        s1 = data.draw(st.integers(0, n_stop - 1))
+        s2 = data.draw(st.integers(0, n_stop - 1))
+        v = data.draw(st.integers(n_stop, n_base - 1))
+        check_multi_key_roundtrip(s1, s2, v, n_base, n_stop)
+
+    @given(st.integers(0, 15), st.integers(0, 15))
+    @settings(max_examples=50, deadline=None)
+    def test_dist_pair_roundtrip_hyp(d1, d2):
+        check_dist_pair_roundtrip(d1, d2)
 
     @given(st.integers(2, 24), st.integers(2, 3), st.integers(3, 6))
     @settings(max_examples=100, deadline=None)

@@ -40,12 +40,13 @@ def test_serve_matches_engine_on_paper_queries(small_world, serve_setup,
     """Every paper-procedure query (phrase AND near — the old serve path only
     handled conjunctive single-form plans): serve == search == search_batch,
     and the source document is always found (missed_source_docs == 0) on
-    every query whose semantics promise recall.  Near-mode queries containing
-    a stop form are confined to sequential matching by the paper's Type-4
-    rule ("the search is confined to sequential words"), so their source doc
-    legitimately may not match — the engine agrees with the brute-force
-    oracle on those; they are excluded from the recall count, exactly as in
-    the benchmark's missed_source_docs."""
+    every query whose semantics promise recall.  Since the multi-component
+    key index, that promise covers near queries CONTAINING stop forms too
+    (QTYPE_MULTI windowed plans); the only exempt class is near queries
+    whose EVERY word form is a stop form — those have just the Type-1
+    contiguous interpretation and no doc-level fallback, so their source
+    doc legitimately may not match (near_query_stop_confined now means
+    exactly that class, as in the benchmark's near_stop_seq_only bucket)."""
     from repro.core import near_query_stop_confined
     eng = small_world["engine"]
     lex, ana = small_world["lex"], small_world["ana"]

@@ -1,0 +1,341 @@
+"""Windowed recall for near-mode queries containing stop forms, locked to
+the brute-force oracle on BOTH execution paths.
+
+The paper's Type-4 rule confined such queries to sequential matching; the
+multi-component key index (core/multi_key_index.py, QTYPE_MULTI plans) gives
+them TRUE windowed answers.  This suite asserts, on a seeded 200-query
+stop-heavy generator that ALWAYS runs (tests/conftest.py::stop_near_queries):
+
+  * engine `search_batch` == brute-force oracle, exactly;
+  * `SearchServe` == engine, bit-identical, on the same workload;
+  * the promised-recall bookkeeping: a windowed query missing its source
+    document must be missing it in the oracle too;
+
+plus the boundary escapes for the new index: multi-key posting lists
+overflowing F_SPLIT_CAP union slots, positions overflowing the 17-bit
+packed field, and > G_CAP AND-groups mixed with multi-key fetches — each
+oracle-verified on the fast path AND the flex fallback.  Hypothesis drivers
+run in addition when the package is installed.
+"""
+import importlib.util
+
+import numpy as np
+import pytest
+
+from repro.core import (AdditionalIndexEngine, BatchExecutor,
+                        brute_force_search, near_query_stop_confined)
+from repro.core.planner import MODE_NEAR, MODE_PHRASE, QTYPE_MULTI
+
+HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _assert_oracle(corpus, index, q, mode, r, window=None):
+    truth_pos, truth_doc = brute_force_search(corpus, index, q, mode=mode,
+                                              window=window)
+    if r.doc_only:
+        assert not truth_pos, (q, mode)
+        assert set(r.doc.tolist()) == truth_doc, (q, mode)
+    else:
+        got = set(zip(r.doc.tolist(), r.pos.tolist()))
+        assert got == truth_pos, (q, mode)
+
+
+def _same_result(r1, r2) -> bool:
+    return (np.array_equal(r1.doc, r2.doc) and np.array_equal(r1.pos, r2.pos)
+            and r1.postings_read == r2.postings_read
+            and r1.used_fallback == r2.used_fallback
+            and r1.doc_only == r2.doc_only
+            and r1.subplan_types == r2.subplan_types)
+
+
+# ---------------------------------------------------------------------------
+# oracle parity: engine batched path
+# ---------------------------------------------------------------------------
+
+
+def test_engine_batch_matches_windowed_oracle(small_world, stop_near_queries):
+    """search_batch on 200 stop-containing near queries == the TRUE windowed
+    brute-force answer (no Type-4 confinement), bit for bit."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    queries = [q for q, _src in stop_near_queries]
+    results = eng.search_batch(queries, modes=MODE_NEAR)
+    n_multi = 0
+    for (q, _src), r in zip(stop_near_queries, results):
+        _assert_oracle(corpus, index, q, MODE_NEAR, r)
+        plan = eng.plan(q, mode=MODE_NEAR)
+        n_multi += int(any(sp.qtype == QTYPE_MULTI for sp in plan.subplans))
+    assert n_multi >= 150, n_multi   # the workload does exercise QTYPE_MULTI
+
+
+def test_engine_batch_matches_per_query_on_stop_near(small_world,
+                                                     stop_near_queries):
+    """Batched and flexible executors agree on the new plan type."""
+    eng = small_world["engine"]
+    sample = stop_near_queries[:60]
+    results = eng.search_batch([q for q, _ in sample], modes=MODE_NEAR)
+    for (q, _), r in zip(sample, results):
+        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+
+
+def test_windowed_recall_promise(small_world, stop_near_queries):
+    """Source-document recall for the de-confined population: when a
+    stop-containing (but not all-stop) near query misses its source doc,
+    the oracle must agree there is no windowed match there AND the result
+    must not have silently dropped the doc-level fallback."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    lex, ana = small_world["lex"], small_world["ana"]
+    checked = 0
+    for q, src in stop_near_queries:
+        if near_query_stop_confined(lex, ana, q, MODE_NEAR):
+            continue          # all-stop-only: sequential semantics, exempt
+        r = eng.search(q, mode=MODE_NEAR)
+        if src not in set(r.doc.tolist()):
+            truth_pos, truth_doc = brute_force_search(corpus, index, q,
+                                                      mode=MODE_NEAR)
+            assert src not in {d for d, _ in truth_pos}, (q, src)
+            if r.doc_only or not truth_pos:
+                assert src not in truth_doc, (q, src)
+        checked += 1
+    assert checked >= 150
+
+
+# ---------------------------------------------------------------------------
+# oracle parity: serve path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def windowed_serve(small_world):
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.search_serve import SearchServe, SearchServeConfig
+    cfg = SearchServeConfig(queries=16, postings_pad=4096, seed_pad=1024,
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1,
+                            n_multi=1)
+    return SearchServe(small_world["index"], cfg, make_host_mesh(data=1,
+                                                                 model=1))
+
+
+def test_serve_matches_windowed_oracle(small_world, windowed_serve,
+                                       stop_near_queries):
+    """SearchServe on the same 200-query workload: bit-identical to the
+    engine (which the tests above pin to the oracle), source recall
+    included."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    queries = [q for q, _src in stop_near_queries]
+    got = windowed_serve.search_batch(queries, modes=MODE_NEAR)
+    want = eng.search_batch(queries, modes=MODE_NEAR)
+    for (q, _src), w, g in zip(stop_near_queries, want, got):
+        assert _same_result(w, g), q
+    # direct oracle check on a slice, so serve parity can't hide behind a
+    # hypothetical engine bug in the batch above
+    for (q, _src), g in list(zip(stop_near_queries, got))[:40]:
+        _assert_oracle(corpus, index, q, MODE_NEAR, g)
+
+
+# ---------------------------------------------------------------------------
+# boundary escapes: each hatch oracle-verified on fast path AND flex
+# ---------------------------------------------------------------------------
+
+
+def test_boundary_multi_split_overflow_routes_flex(small_world,
+                                                   stop_near_queries):
+    """Multi-key posting lists long enough to overflow F_SPLIT_CAP union
+    slots (caps shrunk) route the plan to the flexible executor with
+    identical, oracle-verified results; moderate splits stay batched."""
+    import repro.core.batch_executor as bx
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    be = BatchExecutor(index, flex=eng.executor)
+    sample = stop_near_queries[:16]
+    plans = [eng.plan(q, mode=MODE_NEAR) for q, _ in sample]
+    multi_long = [i for i, p in enumerate(plans)
+                  if any(f.stream == "multi" and f.length > 16
+                         for sp in p.subplans if sp.supported
+                         for g in sp.groups for f in g.fetches)]
+    assert multi_long, "no long multi-key fetches in the workload"
+    old_cap, old_split = bx.P_CAP, bx.F_SPLIT_CAP
+    bx.P_CAP, bx.F_SPLIT_CAP = 8, 2
+    try:
+        for i in multi_long:
+            assert not be._build_tasks(i, plans[i], [])
+        got = be.execute_batch(plans)
+    finally:
+        bx.P_CAP, bx.F_SPLIT_CAP = old_cap, old_split
+    for (q, _), r in zip(sample, got):
+        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        _assert_oracle(corpus, index, q, MODE_NEAR, r)
+    # moderate shrink: splits fit, the multi plans STAY batched
+    bx.P_CAP = 8
+    try:
+        be2 = BatchExecutor(index, flex=eng.executor)
+        tasks: list = []
+        assert be2._build_tasks(0, plans[multi_long[0]], tasks)
+        assert any(len(g.slots) > 1 for t in tasks for row in t.rows
+                   for g in row.groups), "long multi fetch was not split"
+        got2 = be2.execute_batch(plans)
+    finally:
+        bx.P_CAP = old_cap
+    for (q, _), r in zip(sample, got2):
+        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+
+
+def test_boundary_position_overflow_with_multi_routes_flex():
+    """An index whose positions overflow the 17-bit packed field routes
+    stop-containing near plans to flex — results still windowed and
+    oracle-exact."""
+    from repro.core import (CorpusConfig, LexiconConfig, build_all,
+                            generate_corpus, make_lexicon_and_analyzer,
+                            near_query_contains_stop)
+    from repro.core.fetch_tables import TABLE_POS_BITS
+    lc = LexiconConfig(n_surface=2000, n_base=1500, n_stop=50,
+                       n_frequent=200, seed=5)
+    lex, ana = make_lexicon_and_analyzer(lc)
+    corpus = generate_corpus(lc, CorpusConfig(n_docs=2, mean_doc_len=150_000,
+                                              seed=5))
+    index = build_all(corpus, lex, ana)
+    eng = AdditionalIndexEngine(index)
+    be = eng.batch_executor
+    assert be._pos_budget <= 0
+    toks = corpus.doc(0)
+    rng = np.random.default_rng(9)
+    queries = []
+    while len(queries) < 4:
+        st = int(rng.integers(0, len(toks) - 8))
+        q = toks[st:st + 8:2].tolist()
+        if near_query_contains_stop(lex, ana, q):
+            queries.append(q)
+    plans = [eng.plan(q, mode=MODE_NEAR) for q in queries]
+    assert any(sp.qtype == QTYPE_MULTI for p in plans for sp in p.subplans)
+    assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
+    for q, r in zip(queries, be.execute_batch(plans)):
+        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        _assert_oracle(corpus, index, q, MODE_NEAR, r)
+
+
+def test_boundary_many_groups_with_multi_routes_flex(small_world):
+    """> G_CAP AND-groups in a plan that also carries multi-key fetches
+    (a long stop-mixed near query) must route to flex, oracle-verified."""
+    import repro.core.batch_executor as bx
+    from repro.core import near_query_contains_stop
+    corpus = small_world["corpus"]
+    index = small_world["index"]
+    lex, ana = small_world["lex"], small_world["ana"]
+    eng = small_world["engine"]
+    be = BatchExecutor(index, flex=eng.executor)
+    queries, plans = [], []
+    for d in range(corpus.n_docs):
+        toks = corpus.doc(d)
+        for st in range(0, max(len(toks) - 14, 0), 5):
+            q = toks[st:st + 12].tolist()
+            if not near_query_contains_stop(lex, ana, q):
+                continue
+            plan = eng.plan(q, mode=MODE_NEAR)
+            # the big subplan must be live (a dead group skips the cap
+            # check: the main task is never built, only the fallback)
+            big = [sp for sp in plan.subplans if sp.supported
+                   and len(sp.groups) > bx.G_CAP
+                   and all(g.fetches for g in sp.groups)]
+            if big and any(f.stream == "multi" for sp in big
+                           for g in sp.groups for f in g.fetches):
+                queries.append(q)
+                plans.append(plan)
+            if len(queries) == 3:
+                break
+        if len(queries) == 3:
+            break
+    assert queries, "no >G_CAP stop-mixed near windows found"
+    assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
+    for q, r in zip(queries, be.execute_batch(plans)):
+        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        _assert_oracle(small_world["corpus"], index, q, MODE_NEAR, r)
+
+
+def test_wide_window_beyond_reach_matches_oracle(small_world,
+                                                 stop_near_queries):
+    """A window wider than EVERY index reach (expanded pair reach and
+    multi-key NeighborDistance): frequent slots fall back to exact basic
+    fetches (with the pivot's own group joining Type-2 plans) and stop
+    slots to banded full ordinary-index reads — results must still match
+    the windowed oracle exactly.  Guards both reach-guard failure modes:
+    silent under-coverage AND killing coverable slots."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    lex = small_world["lex"]
+    W = index.params.near_window + 4
+
+    # all-frequent pair (Type 2): derived from a stored both-frequent
+    # expanded key so the wide-window truth is non-empty
+    exp, n_base = index.expanded, index.expanded.n_base
+    t2_query = None
+    for key in exp.pairs.keys:
+        w, v = int(key // n_base), int(key % n_base)
+        if w == v or not (lex.is_frequent(np.asarray([w]))[0]
+                          and lex.is_frequent(np.asarray([v]))[0]):
+            continue
+        sw, sv = (_single_form_surface(small_world, b) for b in (w, v))
+        if sw is not None and sv is not None:
+            t2_query = [sw, sv]
+            break
+    assert t2_query is not None
+    plan = eng.plan(t2_query, mode=MODE_NEAR, window=W)
+    sp = next(sp for sp in plan.subplans if sp.supported)
+    assert sp.qtype == 2
+    # fell back: basic fetches present (reach exceeded), no expanded ones
+    streams = {f.stream for g in sp.groups for f in g.fetches}
+    assert streams == {"basic"}
+    r = eng.search(t2_query, mode=MODE_NEAR, window=W)
+    _assert_oracle(corpus, index, t2_query, MODE_NEAR, r, window=W)
+    assert not r.doc_only and len(r.doc) > 0      # non-vacuous
+
+    # stop-containing near queries: stop slots become banded ordinary reads
+    sample = stop_near_queries[:10]
+    got = eng.search_batch([q for q, _ in sample], modes=MODE_NEAR, window=W)
+    n_ord = 0
+    for (q, _src), r in zip(sample, got):
+        plan = eng.plan(q, mode=MODE_NEAR, window=W)
+        n_ord += any(f.stream == "ordinary"
+                     for sp in plan.subplans if sp.supported
+                     for g in sp.groups for f in g.fetches)
+        assert _same_result(eng.search(q, mode=MODE_NEAR, window=W), r), q
+        _assert_oracle(corpus, index, q, MODE_NEAR, r, window=W)
+    assert n_ord >= 5     # the escape path is actually exercised
+
+
+def _single_form_surface(world, base):
+    """A surface whose ONLY basic form is `base`, or None."""
+    ana = world["ana"]
+    lo = int(np.searchsorted(ana.primary, base, side="left"))
+    hi = int(np.searchsorted(ana.primary, base, side="right"))
+    for s in range(lo, hi):
+        if ana.forms_of(s) == [base]:
+            return s
+    return None
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers (when installed: adversarial query search + shrinking)
+# ---------------------------------------------------------------------------
+
+
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_windowed_oracle_hyp(small_world, data):
+        corpus, index = small_world["corpus"], small_world["index"]
+        eng = small_world["engine"]
+        d = data.draw(st.integers(0, corpus.n_docs - 1))
+        toks = corpus.doc(d)
+        n = data.draw(st.integers(2, 6))
+        stride = data.draw(st.integers(1, 3))
+        span = stride * (n - 1) + 1
+        if len(toks) <= span:
+            return
+        start = data.draw(st.integers(0, len(toks) - span - 1))
+        q = toks[start:start + span:stride].tolist()
+        r = eng.search(q, mode=MODE_NEAR)
+        _assert_oracle(corpus, index, q, MODE_NEAR, r)
