@@ -2,10 +2,38 @@
 
 Reports bytes for each additional index and the ordinary index, plus the
 ratios the paper's claim rests on (total additional-index size vs corpus,
-~5.7x in the paper at 259 GB / 45 GB)."""
+~5.7x in the paper at 259 GB / 45 GB) — and the multi-key size dial from
+the ROADMAP: triples gated to common (s1, s2) stop pairs
+(IndexParams.triple_pair_min_count; the planner answers gated pairs with
+two two-component lookups, semantics identical), with the byte/posting
+delta the gate buys."""
 from __future__ import annotations
 
 from benchmarks.common import bench_world
+
+TRIPLE_GATE_MIN_COUNT = 64     # "common pair" threshold for the gated build
+
+
+def run_triple_gate(w, min_count: int = TRIPLE_GATE_MIN_COUNT) -> dict:
+    """Rebuild ONLY the multi-key index with triples gated to (s1, s2)
+    pairs holding >= min_count postings; report the size delta."""
+    import dataclasses
+
+    from repro.core import build_multi_key_index
+    from repro.core.builder import expand_token_forms
+    idx, corpus = w["index"], w["corpus"]
+    tf = expand_token_forms(corpus, idx.lexicon, idx.analyzer)
+    params = dataclasses.replace(idx.params, triple_pair_min_count=min_count)
+    gated = build_multi_key_index(tf, idx.lexicon, params)
+    full_b, gated_b = idx.multi_key.nbytes(), gated.nbytes()
+    return {
+        "triple_gate_min_count": min_count,
+        "multi_key_gated_bytes": gated_b,
+        "multi_key_gated_triple_postings": gated.n_triple_postings,
+        "multi_key_gated_admitted_pairs": int(len(gated.triple_stop_pairs)),
+        "multi_key_gate_bytes_saved": full_b - gated_b,
+        "multi_key_gate_shrink": (full_b - gated_b) / max(full_b, 1),
+    }
 
 
 def run(n_docs: int = 1200) -> dict:
@@ -39,6 +67,9 @@ def run(n_docs: int = 1200) -> dict:
     rows["ordinary_over_corpus"] = rows["ordinary_index_bytes"] / corpus_bytes
     rows["paper_additional_over_corpus"] = 259.0 / 45.0      # 5.76x
     rows["paper_ordinary_over_corpus"] = 18.7 / 45.0         # Sphinx 0.42x
+    rows.update(run_triple_gate(w))
+    rows["multi_key_gated_over_corpus"] = \
+        rows["multi_key_gated_bytes"] / corpus_bytes
     return rows
 
 

@@ -22,9 +22,8 @@ import numpy as np                                                # noqa: E402
 import repro.compat                                               # noqa: E402
 
 from repro.core import (AdditionalIndexEngine, CorpusConfig,      # noqa: E402
-                        LexiconConfig, build_all, generate_corpus,
-                        make_lexicon_and_analyzer)
-from repro.core.planner import MODE_PHRASE                        # noqa: E402
+                        LexiconConfig, MODE_NEAR, SearchRequest, build_all,
+                        generate_corpus, make_lexicon_and_analyzer)
 from repro.dist.collectives import make_ring_all_reduce           # noqa: E402
 from repro.serve.search_serve import (SearchServe,                # noqa: E402
                                       SearchServeConfig)
@@ -53,20 +52,31 @@ def main():
           f"{serve.executor.docs_per_dp} docs")
 
     rng = np.random.default_rng(0)
-    queries = []
-    while len(queries) < cfg.queries:
+    requests = []
+    while len(requests) < cfg.queries:
         d = int(rng.integers(corpus.n_docs))
         toks = corpus.doc(d)
         if len(toks) < 10:
             continue
         st = int(rng.integers(len(toks) - 6))
-        queries.append(toks[st:st + 3].tolist())
+        requests.append(SearchRequest(toks[st:st + 3].tolist()))
 
-    got = serve.search_batch(queries, modes=MODE_PHRASE)
-    want = engine.search_batch(queries, modes=MODE_PHRASE)
+    got = serve.search_batch(requests)
+    want = engine.search_batch(requests)
     assert all(np.array_equal(w.doc, g.doc) and np.array_equal(w.pos, g.pos)
                for w, g in zip(want, got))
     print(f"serve over 8 shards == engine: counts={[len(r.doc) for r in got]}")
+
+    # ranked across 8 document shards: per-shard scores merge through the
+    # same pmin/pmax step and stay bit-identical to the engine
+    ranked_reqs = [SearchRequest(r.surface_ids, mode=MODE_NEAR, rank=True,
+                                 top_k=3) for r in requests]
+    rs, re_ = serve.search_batch(ranked_reqs), engine.search_batch(ranked_reqs)
+    assert all(np.array_equal(w.doc_ids, g.doc_ids)
+               and np.array_equal(w.doc_scores, g.doc_scores)
+               for w, g in zip(re_, rs))
+    print(f"ranked serve over 8 shards == engine: "
+          f"top docs {[r.doc_ids[:2].tolist() for r in rs[:4]]}")
 
     ring = make_ring_all_reduce(mesh, "data")
     X = jnp.asarray(np.random.default_rng(0).normal(size=(8, 32)).astype(np.float32))

@@ -1,14 +1,15 @@
 """Quickstart: build the paper's additional indexes over a synthetic corpus
-and run the four query types against them.
+and run the four query types against them — then rank a word-set query by
+proximity relevance (SearchRequest(rank=True)).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
-                        OrdinaryEngine, build_all, generate_corpus,
+                        MODE_NEAR, MODE_PHRASE, OrdinaryEngine, SearchRequest,
+                        build_all, generate_corpus,
                         make_lexicon_and_analyzer)
-from repro.core.planner import MODE_NEAR, MODE_PHRASE
 
 
 def main():
@@ -33,12 +34,13 @@ def main():
     phrase = toks[start:start + 4].tolist()
     word_set = toks[start:start + 8:2].tolist()
 
-    for q, mode in ((phrase, MODE_PHRASE), (word_set, MODE_NEAR)):
-        plan = engine.plan(q, mode=mode)
-        r = engine.search(q, mode=mode)
-        r0 = ordinary.search(q, mode=mode)
+    for req in (SearchRequest(phrase, mode=MODE_PHRASE),
+                SearchRequest(word_set, mode=MODE_NEAR)):
+        plan = engine.plan_request(req)
+        r = engine.search(req)
+        r0 = ordinary.search(req)
         types = [sp.qtype for sp in plan.subplans]
-        print(f"\nquery={q} mode={mode} types={types}")
+        print(f"\nquery={list(req.surface_ids)} mode={req.mode} types={types}")
         print(f"  additional-index engine: {len(r.doc)} hits, "
               f"{r.postings_read:,} postings read"
               + (" (doc-level fallback)" if r.doc_only else ""))
@@ -47,6 +49,18 @@ def main():
         print(f"  postings saved: {r0.postings_read / max(r.postings_read, 1):.1f}x")
         assert doc in set(r.doc.tolist())
     print("\nsource document found by every query — index verified.")
+
+    # ranked top-k: proximity relevance from the SAME postings (zero extra
+    # reads) — tighter word sets and repeated matches rank first
+    ranked = engine.search(SearchRequest(word_set, mode=MODE_NEAR, rank=True,
+                                         top_k=5))
+    print(f"\nranked word-set query (top {len(ranked.hits)} of "
+          f"{len(np.unique(ranked.doc))} docs, "
+          f"{ranked.postings_read:,} postings read):")
+    for hit in ranked.hits:
+        print(f"  doc {hit.doc}: score {hit.score:.3f}, "
+              f"{len(hit.positions)} anchors, subplans {hit.subplans}")
+    assert ranked.hits[0].doc == doc or doc in {h.doc for h in ranked.hits}
 
 
 if __name__ == "__main__":

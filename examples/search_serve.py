@@ -11,8 +11,8 @@ import time
 import numpy as np
 
 from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
-                        build_all, generate_corpus, make_lexicon_and_analyzer)
-from repro.core.planner import MODE_PHRASE
+                        MODE_NEAR, SearchRequest, build_all, generate_corpus,
+                        make_lexicon_and_analyzer)
 from repro.dist.fault_tolerance import ShardDispatcher, merge_topk
 from repro.launch.mesh import make_host_mesh
 from repro.serve.search_serve import SearchServe, SearchServeConfig
@@ -34,31 +34,46 @@ def main():
 
     # query batch from indexed documents
     rng = np.random.default_rng(0)
-    queries = []
-    while len(queries) < cfg.queries:
+    requests = []
+    while len(requests) < cfg.queries:
         d = int(rng.integers(corpus.n_docs))
         toks = corpus.doc(d)
         if len(toks) < 10:
             continue
         st = int(rng.integers(len(toks) - 6))
-        queries.append(toks[st:st + 3].tolist())
+        requests.append(SearchRequest(toks[st:st + 3].tolist()))
 
-    results = serve.search_batch(queries, modes=MODE_PHRASE)      # warm
+    results = serve.search_batch(requests)      # warm
     t0 = time.perf_counter()
-    results = serve.search_batch(queries, modes=MODE_PHRASE)
+    results = serve.search_batch(requests)
     dt = time.perf_counter() - t0
     print(f"serve: {cfg.queries} queries in {dt*1e3:.1f} ms "
           f"({dt/cfg.queries*1e3:.2f} ms/query)")
     for i in range(4):
         r = results[i]
         pairs = list(zip(r.doc.tolist(), r.pos.tolist()))
-        print(f"  q{i} {queries[i]}: {len(r.doc)} hits, first: {pairs[:4]}")
+        print(f"  q{i} {list(requests[i].surface_ids)}: {len(r.doc)} hits, "
+              f"first: {pairs[:4]}")
 
     # the unified tier must agree with the engine bit-for-bit
-    wants = engine.search_batch(queries, modes=MODE_PHRASE)
+    wants = engine.search_batch(requests)
     assert all(np.array_equal(w.doc, r.doc) and np.array_equal(w.pos, r.pos)
                for w, r in zip(wants, results))
     print("serve == engine.search_batch on all queries")
+
+    # ranked serving: same postings, proximity-scored top-k DocHits,
+    # bit-identical to the engine's ranked batch
+    ranked_reqs = [SearchRequest(r.surface_ids, mode=MODE_NEAR, rank=True,
+                                 top_k=3) for r in requests[:4]]
+    ranked = serve.search_batch(ranked_reqs)
+    ranked_eng = engine.search_batch(ranked_reqs)
+    assert all(np.array_equal(w.doc_ids, g.doc_ids)
+               and np.array_equal(w.doc_scores, g.doc_scores)
+               for w, g in zip(ranked_eng, ranked))
+    print("ranked serve == ranked engine; sample top-k:")
+    for req, r in zip(ranked_reqs, ranked[:2]):
+        print(f"  {list(req.surface_ids)}: "
+              f"{[(h.doc, round(h.score, 3)) for h in r.hits]}")
 
     # straggler-mitigating dispatch across simulated shard replicas
     def shard_fn(delay):

@@ -22,6 +22,10 @@ SEARCH_SHAPES = {
                     **_BASE},
     "serve_bulk": {"kind": "search_serve", "queries": 256, "postings_pad": 16384,
                    **_BASE},
+    # proximity-ranked serving (arXiv:2108.00410): the bucket step lowers
+    # with the fused scoring pass and a float32 score output per row
+    "serve_ranked": {"kind": "search_serve", "queries": 64,
+                     "postings_pad": 32768, "ranked": True, **_BASE},
 }
 
 

@@ -1,11 +1,19 @@
-"""Core: the paper's additional-index phrase-search system."""
+"""Core: the paper's additional-index phrase-search system.
+
+Public search surface: build a `SearchRequest`, hand it to an engine's
+`search` / `search_batch` (or the serve tier), read the `SearchResponse`
+(ranked `DocHit`s when `rank=True`) — see core/api.py.
+"""
 from repro.core.analyzer import Analyzer, make_lexicon_and_analyzer
+from repro.core.api import (DocHit, RankingParams, SearchRequest,
+                            SearchResponse)
 from repro.core.batch_executor import BatchDeviceIndex, BatchExecutor
 from repro.core.builder import (IndexParams, IndexSet, auto_docs_per_shard,
                                 build_all, build_multi_key_index)
 from repro.core.corpus import Corpus, CorpusConfig, generate_corpus
 from repro.core.engine import (AdditionalIndexEngine, OrdinaryEngine,
-                               brute_force_search, near_query_contains_stop,
+                               brute_force_ranked, brute_force_search,
+                               near_query_contains_stop,
                                near_query_stop_confined)
 from repro.core.executor import DeviceIndex, Executor, SearchResult
 from repro.core.lexicon import (Lexicon, LexiconConfig, TIER_FREQUENT,
@@ -16,12 +24,14 @@ from repro.core.planner import (MODE_NEAR, MODE_PHRASE, Planner, QTYPE_MULTI,
 
 __all__ = [
     "Analyzer", "make_lexicon_and_analyzer",
+    "DocHit", "RankingParams", "SearchRequest", "SearchResponse",
     "BatchDeviceIndex", "BatchExecutor",
     "IndexParams", "IndexSet", "auto_docs_per_shard", "build_all",
     "build_multi_key_index", "MultiKeyIndex",
     "Corpus", "CorpusConfig", "generate_corpus",
-    "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_search",
-    "near_query_contains_stop", "near_query_stop_confined",
+    "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_ranked",
+    "brute_force_search", "near_query_contains_stop",
+    "near_query_stop_confined",
     "DeviceIndex", "Executor", "SearchResult",
     "Lexicon", "LexiconConfig", "TIER_FREQUENT", "TIER_ORDINARY", "TIER_STOP",
     "MODE_NEAR", "MODE_PHRASE", "Planner", "QTYPE_MULTI", "QueryPlan",

@@ -1,0 +1,190 @@
+"""Typed request/response API — the ONE public search surface.
+
+Every public entry point (`AdditionalIndexEngine`, `OrdinaryEngine`,
+`SearchServe`, the launchers, benchmarks, and examples) consumes a
+`SearchRequest` and returns a `SearchResponse`.  The old positional
+signatures (`search(surface_ids, mode=..., window=...)`) survive only as
+thin shims that emit `DeprecationWarning` (CI runs the suite with
+``-W error::DeprecationWarning`` to prove no in-repo caller uses them).
+
+Proximity relevance (arXiv:2108.00410)
+--------------------------------------
+`SearchRequest.rank=True` turns on on-device proximity scoring, computed
+from the SAME (doc, pos, dist) postings the match already fetches — zero
+extra postings read.  The model follows Veretennikov's relevance-ranking
+follow-up on these exact indexes: the score of a match *anchor* (a pivot /
+phrase-start occurrence at position ``p``) is a sum of per-query-slot
+contributions that decay with the slot word's distance from the anchor,
+
+    score(anchor) = sum_i  w(d_i),      w(d) = 1 / (1 + d)
+
+where ``d_i`` is the distance from the anchor to the nearest matching
+occurrence of slot *i* (0 for the pivot itself and for every slot of a
+precise-phrase match; the ``dist`` payload of expanded / multi-component-key
+postings; the banded key distance for full posting-list slots).  A
+document's relevance is the sum over its anchors (duplicated anchors across
+tier-split subqueries dedupe by max), so a phrase occurring twice outranks
+one occurrence, and tighter word sets outrank looser ones.  Doc-only
+fallback hits (the paper's distance-disregarding step 3) carry
+`RankingParams.doc_only_score`.
+
+The executors compute contributions in float32 in one canonical order
+(per-task bias, then the seed group, then each constraint group), which is
+what makes ranked output bit-identical between `engine.search_batch`, the
+flexible per-query executor, and the shard_map'd `SearchServe` tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+MODE_PHRASE = "phrase"
+MODE_NEAR = "near"
+
+_LEGACY_MSG = ("positional search signatures are deprecated: pass a "
+               "SearchRequest (repro.core.api) — e.g. "
+               "engine.search(SearchRequest(ids, mode=MODE_NEAR)) — and "
+               "consume the returned SearchResponse")
+
+
+def warn_legacy(what: str):
+    warnings.warn(f"{what}: {_LEGACY_MSG}", DeprecationWarning, stacklevel=3)
+
+
+@dataclasses.dataclass(frozen=True)
+class RankingParams:
+    """Knobs of the proximity relevance model (see module docstring).
+
+    `proximity_scale` multiplies every positional score host-side (both
+    executors apply it after the device pass, so it never forces a jit
+    recompile); `doc_only_score` is the flat relevance assigned to
+    distance-disregarding fallback hits, which therefore rank below any
+    positional hit at the default 0.0.
+    """
+    proximity_scale: float = 1.0
+    doc_only_score: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One query: surface ids + match semantics + ranking controls.
+
+    mode      : MODE_PHRASE (order + adjacency) or MODE_NEAR (word set
+                within `window` of the pivot).
+    window    : near-mode window; None = IndexParams.near_window.
+    top_k     : ranked => keep the top_k highest-scoring documents;
+                unranked => truncate the flat anchor arrays (the legacy
+                `max_results` semantics).  None = unlimited.
+    rank      : compute proximity relevance and order hits by it.
+    ranking   : scoring weights (ignored unless rank=True).
+    """
+    surface_ids: tuple
+    mode: str = MODE_PHRASE
+    window: int | None = None
+    top_k: int | None = None
+    rank: bool = False
+    ranking: RankingParams = RankingParams()
+
+    def __post_init__(self):
+        object.__setattr__(self, "surface_ids",
+                           tuple(int(s) for s in self.surface_ids))
+        if self.mode not in (MODE_PHRASE, MODE_NEAR):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.top_k is not None and self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class DocHit:
+    """One ranked document: relevance score, its match anchors, and the
+    subplan (tier-split subquery) indices that produced them."""
+    doc: int
+    score: float
+    positions: np.ndarray          # anchor positions, ascending (empty when
+                                   # the hit came from the doc-only fallback)
+    subplans: tuple = ()           # indices into SearchResponse.subplan_types
+
+    def __repr__(self):
+        return (f"DocHit(doc={self.doc}, score={self.score:.4f}, "
+                f"n_pos={len(self.positions)}, subplans={self.subplans})")
+
+
+@dataclasses.dataclass
+class SearchResponse:
+    """Search outcome.  Flat per-anchor arrays (`doc`, `pos`, ascending by
+    (doc, pos) — or per-doc when `doc_only`) keep the unranked path as cheap
+    as the pre-API result object; ranked fields and the `hits` view are
+    filled / built only when the request asked for ranking.
+    """
+    doc: np.ndarray                # per-anchor doc ids (per-doc if doc_only)
+    pos: np.ndarray                # anchor positions (-1 when doc_only)
+    postings_read: int
+    used_fallback: bool
+    doc_only: bool
+    subplan_types: tuple = ()
+    # -- ranked fields (None unless request.rank) ---------------------------
+    ranked: bool = False
+    anchor_scores: np.ndarray | None = None   # float32, aligned with doc/pos
+    anchor_subplans: np.ndarray | None = None  # uint64 bitmask per anchor
+                                               # (exact for subplans 0..63,
+                                               # omitted beyond)
+    doc_ids: np.ndarray | None = None         # ranked docs (top_k applied)
+    doc_scores: np.ndarray | None = None      # float32, aligned with doc_ids
+    request: SearchRequest | None = None
+    _hits: list | None = dataclasses.field(default=None, repr=False)
+
+    def __len__(self):
+        return len(self.doc_ids) if self.ranked else len(self.doc)
+
+    @property
+    def hits(self) -> list[DocHit]:
+        """Ranked DocHit view (score desc, doc asc).  Unranked responses
+        yield doc-ascending hits with score 0.0 and no provenance."""
+        if self._hits is None:
+            self._hits = self._build_hits()
+        return self._hits
+
+    def _build_hits(self) -> list[DocHit]:
+        if not self.ranked:
+            docs = np.unique(self.doc)
+            if self.doc_only:
+                return [DocHit(int(d), 0.0, np.empty(0, np.int32))
+                        for d in docs]
+            return [DocHit(int(d), 0.0,
+                           np.sort(self.pos[self.doc == d]).astype(np.int32))
+                    for d in docs]
+        out = []
+        for d, s in zip(self.doc_ids.tolist(), self.doc_scores.tolist()):
+            if self.doc_only:
+                out.append(DocHit(int(d), float(s), np.empty(0, np.int32),
+                                  self._doc_subplans(d)))
+                continue
+            sel = self.doc == d
+            out.append(DocHit(int(d), float(s),
+                              np.sort(self.pos[sel]).astype(np.int32),
+                              self._doc_subplans(d)))
+        return out
+
+    def _doc_subplans(self, d) -> tuple:
+        if self.anchor_subplans is None:
+            return ()
+        mask = int(np.bitwise_or.reduce(
+            self.anchor_subplans[self.doc == d], initial=np.uint64(0)))
+        return tuple(i for i in range(min(len(self.subplan_types), 64))
+                     if mask >> i & 1)
+
+
+# legacy alias: PR 1-3 code (and any external user) imported SearchResult;
+# the response type is a strict superset of the old dataclass fields
+SearchResult = SearchResponse
+
+
+def as_request(q, mode=MODE_PHRASE, window=None, max_results=None,
+               what: str = "search") -> SearchRequest:
+    """Adapt a legacy positional call to a SearchRequest, warning once per
+    call site (the shim every deprecated signature routes through)."""
+    warn_legacy(what)
+    return SearchRequest(tuple(int(s) for s in q), mode=mode, window=window,
+                         top_k=max_results)

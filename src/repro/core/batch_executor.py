@@ -57,14 +57,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import SearchRequest
 from repro.core.builder import IndexSet
 from repro.core.executor import (SENTINEL, Executor, SearchResult,
-                                 _next_pow2, merge_subplan_keys)
-from repro.core.fetch_tables import (DOCS_PER_SHARD, NO_DIST, TABLE_POS_BITS,
+                                 _next_pow2, merge_subplan_results,
+                                 order_groups_seed_first, proximity_w,
+                                 scored_probe)
+from repro.core.fetch_tables import (DOCS_PER_SHARD, NO_DIST,
+                                     SCORE_DELTA_BITS, TABLE_POS_BITS,
                                      alloc_batch_tables, pack_ns_checks)
 from repro.core.planner import MODE_PHRASE, QueryPlan
 from repro.core.postings import PHRASE_BIAS, POS_BITS
-from repro.kernels.ops import I32_SENTINEL, banded_intersect_rows
+from repro.kernels.ops import (I32_SENTINEL, banded_intersect_rows,
+                               banded_min_delta_rows)
 
 # table caps: a task exceeding these routes its whole plan to the flexible
 # executor (rare: >8 AND-groups or >8 unioned form fetches per slot).
@@ -170,11 +175,18 @@ class _Task:
     fallback: bool         # doc-only fallback task (stream-1)
     stop_checks: tuple     # seed group's near-stop checks
     mode: str = MODE_PHRASE
+    ranked: bool = False   # proximity scoring rides the bucket step
+    score_bias: float = 0.0   # n_slots - n_groups (see SubPlan.n_slots)
     rows: list = dataclasses.field(default_factory=list)
 
     def collect_keys(self) -> np.ndarray:
         parts = [r.keys for r in self.rows if r.keys is not None and len(r.keys)]
         return np.concatenate(parts) if parts else np.empty(0, np.int64)
+
+    def collect_scores(self) -> np.ndarray:
+        parts = [r.scores for r in self.rows
+                 if r.scores is not None and len(r.scores)]
+        return np.concatenate(parts) if parts else np.empty(0, np.float32)
 
 
 @dataclasses.dataclass
@@ -193,26 +205,32 @@ class _Row:
     sortfree: bool = False  # constraint keys already ascending (see below)
     # filled after execution:
     keys: np.ndarray | None = None
+    scores: np.ndarray | None = None   # ranked rows only, aligned with keys
 
 
 def bucket_step_math(arena_doc, arena_pos, arena_dist, near_stop, t, *,
                      P0: int, P: int, impl: str, interpret: bool,
-                     presorted: bool = False):
+                     presorted: bool = False, ranked: bool = False):
     """One shape bucket of segmented rows: gather → keys → per-row int32
     rebase against `shard_base` → banded rows intersection.  The seed
     (group 0) gets its own pad P0 — the planner seeds with the RAREST list,
     so the membership probe side stays narrow while constraint groups pad to
     P.  Rows are shard-clipped host-side, so there is no per-shard device
     loop and no in-shard masking.  Returns (seed global keys [T, F*P0]
-    int64, found [T, F*P0] bool).  Pure trace function — the engine jit-wraps
-    it (`_batch_step`) and the serve tier calls it inside shard_map."""
+    int64, found [T, F*P0] bool) — plus proximity scores [T, F*P0] float32
+    when `ranked` (see api.py: bias + w(seed delta) + sum over constraint
+    groups of w(banded min key-distance + stored |dist| delta), computed in
+    this one fused pass from the postings already gathered).  Pure trace
+    function — the engine jit-wraps it (`_batch_step`) and the serve tier
+    calls it inside shard_map."""
     T, G, F = t["start"].shape
     A = arena_doc.shape[0]
     dt1 = t["doc_task"]
     base = t["shard_base"].astype(jnp.int64)
 
     def gather(sl, Pw):
-        """Keys for group slice `sl` padded to Pw: [T, g, F, Pw]."""
+        """Keys for group slice `sl` padded to Pw: [T, g, F, Pw] (+ the
+        per-posting score delta when ranked)."""
         start, length = t["start"][:, sl], t["length"][:, sl]
         offset, req = t["offset"][:, sl], t["req_dist"][:, sl]
         maxab, pfd = t["max_abs"][:, sl], t["pivot_from_dist"][:, sl]
@@ -231,9 +249,13 @@ def bucket_step_math(arena_doc, arena_pos, arena_dist, near_stop, t, *,
         doc64 = doc.astype(jnp.int64)
         gk = jnp.where(dt1[:, None, None, None], doc64,
                        (doc64 << POS_BITS) | low)
-        return idx, jnp.where(valid, gk, SENTINEL)
+        if not ranked:
+            return idx, jnp.where(valid, gk, SENTINEL), None
+        sfd = t["score_from_dist"][:, sl]
+        delta = jnp.where(sfd[..., None], jnp.abs(dist), 0)
+        return idx, jnp.where(valid, gk, SENTINEL), delta
 
-    idx0, gk0 = gather(slice(0, 1), P0)
+    idx0, gk0, delta0 = gather(slice(0, 1), P0)
     gk0 = gk0[:, 0]                                            # [T, F, P0]
 
     # near-stop verification on the seed group (type-4 pivot checks)
@@ -264,8 +286,61 @@ def bucket_step_math(arena_doc, arena_pos, arena_dist, near_stop, t, *,
 
     a64 = gk0.reshape(T, F * P0)
     a32 = rebase(gk0, dt1[:, None, None], base[:, None, None]).reshape(T, F * P0)
+    if ranked:
+        # proximity scores, canonical accumulation order (mirrored exactly by
+        # Executor._run_groups_ranked): per-task bias, the seed's own delta,
+        # then each constraint group seed-first.  Constraint deltas come from
+        # one banded min-(key distance + |dist|) pass per group — the scoring
+        # twin of the boolean membership test, on the same gathered slab.
+        score = t["score_bias"][:, None] + proximity_w(delta0[:, 0].reshape(T, F * P0))
+        found = jnp.ones((T, F * P0), bool)
+        if G > 1:
+            _, gkc, deltac = gather(slice(1, None), P)         # [T, G-1, F, P]
+            b32 = rebase(gkc, dt1[:, None, None, None],
+                         base[:, None, None, None]).reshape(T, G - 1, F * P)
+            dl = deltac.reshape(T, G - 1, F * P)
+            bands = t["band"][:, 1:]                           # [T, G-1]
+            if impl == "pallas":
+                b_sorted = jnp.sort(
+                    jnp.where(b32 == I32_SENTINEL, jnp.int64(1) << 40,
+                              (b32.astype(jnp.int64) << SCORE_DELTA_BITS)
+                              | dl.astype(jnp.int64)), axis=-1)
+                bk = (b_sorted >> SCORE_DELTA_BITS).astype(jnp.int32)
+                bk = jnp.where(b_sorted >= jnp.int64(1) << 40, I32_SENTINEL, bk)
+                bd = (b_sorted & ((1 << SCORE_DELTA_BITS) - 1)).astype(jnp.int32)
+                a_rows = jnp.broadcast_to(a32[:, None], (T, G - 1, F * P0))
+                delta_g = banded_min_delta_rows(
+                    a_rows.reshape(T * (G - 1), F * P0),
+                    bk.reshape(T * (G - 1), F * P),
+                    bd.reshape(T * (G - 1), F * P),
+                    jnp.broadcast_to(bands, (T, G - 1)).reshape(-1),
+                    implementation=impl, interpret=interpret)
+                delta_g = delta_g.reshape(T, G - 1, F * P0)
+            else:
+                pad = jnp.int64(1) << 40
+                comp = jnp.where(
+                    b32 == I32_SENTINEL, pad,
+                    (b32.astype(jnp.int64) << SCORE_DELTA_BITS)
+                    | dl.astype(jnp.int64))
+                comp = jnp.sort(comp, axis=-1)
+                probe = jnp.where(a32 == I32_SENTINEL, pad,
+                                  a32.astype(jnp.int64) << SCORE_DELTA_BITS)
+                probe = jnp.broadcast_to(probe[:, None], (T, G - 1, F * P0))
+                delta_g = scored_probe(
+                    comp.reshape(T * (G - 1), F * P),
+                    probe.reshape(T * (G - 1), F * P0),
+                    jnp.broadcast_to(bands, (T, G - 1)).reshape(-1, 1))
+                delta_g = delta_g.reshape(T, G - 1, F * P0)
+            active_c = t["active"][:, 1:, None]
+            for gi in range(G - 1):
+                hit_g = delta_g[:, gi] < I32_SENTINEL
+                live = hit_g & active_c[:, gi]
+                score = score + jnp.where(live, proximity_w(delta_g[:, gi]), 0.0)
+                found &= hit_g | ~active_c[:, gi]
+        found &= a32 != I32_SENTINEL
+        return a64, found, jnp.where(found, score, 0.0)
     if G > 1:
-        _, gkc = gather(slice(1, None), P)                     # [T, G-1, F, P]
+        _, gkc, _ = gather(slice(1, None), P)                  # [T, G-1, F, P]
         b32 = rebase(gkc, dt1[:, None, None, None],
                      base[:, None, None, None]).reshape(T, G - 1, F * P)
         if not presorted:
@@ -284,7 +359,7 @@ def bucket_step_math(arena_doc, arena_pos, arena_dist, near_stop, t, *,
 
 
 _batch_step = partial(jax.jit, static_argnames=(
-    "P0", "P", "impl", "interpret", "presorted"))(bucket_step_math)
+    "P0", "P", "impl", "interpret", "presorted", "ranked"))(bucket_step_math)
 
 
 class BatchExecutor:
@@ -319,17 +394,10 @@ class BatchExecutor:
         return G_CAP, F_CAP, F_SPLIT_CAP, P_CAP, P_CAP
 
     def _order_groups(self, groups):
-        """Seed-first ordering; None when no valid seed exists."""
-        ns = [g for g in groups
-              if any(f.stop_checks for f in g.fetches)]
-        if ns:
-            seed = ns[0]
-        else:
-            band0 = [g for g in groups if g.band == 0]
-            if not band0:
-                return None
-            seed = min(band0, key=lambda g: sum(f.length for f in g.fetches))
-        return [seed] + [g for g in groups if g is not seed]
+        """Seed-first ordering; None when no valid seed exists.  Shared with
+        the flexible ranked path (executor.order_groups_seed_first) so the
+        two executors accumulate float32 scores in the same group order."""
+        return order_groups_seed_first(groups)
 
     def _task_fits(self, groups) -> bool:
         g_cap, f_cap, _, _, _ = self._caps()
@@ -411,7 +479,8 @@ class BatchExecutor:
                              groups=groups, sortfree=sortfree))
         return rows
 
-    def _build_tasks(self, plan_i: int, plan: QueryPlan, tasks: list) -> bool:
+    def _build_tasks(self, plan_i: int, plan: QueryPlan, tasks: list,
+                     ranked: bool = False) -> bool:
         """Append tasks (with segmented rows) for one plan; False => route
         plan to the flexible executor (table caps exceeded)."""
         if self._pos_budget <= 0:
@@ -429,7 +498,9 @@ class BatchExecutor:
                 if any(f.stop_checks != checks for f in ordered[0].fetches) or \
                    any(f.stop_checks for g in ordered[1:] for f in g.fetches):
                     return False
-                task = _Task(plan_i, sp_i, False, checks, mode=sp.mode)
+                task = _Task(plan_i, sp_i, False, checks, mode=sp.mode,
+                             ranked=ranked,
+                             score_bias=float(sp.n_slots - len(sp.groups)))
                 task.rows = self._build_rows(task, ordered)
                 if task.rows is None:
                     return False
@@ -468,8 +539,9 @@ class BatchExecutor:
             C = M = 0
         # only big slabs are worth a separate sort-free compile shape; for
         # small P the sort is cheap and splitting buckets costs more calls
-        sortfree = row.sortfree and P >= 2048
-        return (G, F, P0, P, C, M, sortfree)
+        # (ranked rows always sort: scoring needs the composite order)
+        sortfree = row.sortfree and P >= 2048 and not row.task.ranked
+        return (G, F, P0, P, C, M, sortfree, row.task.ranked)
 
     def _tensorize_bucket(self, rows: list, G: int, F: int, C: int, M: int,
                           T_pad: int) -> dict:
@@ -478,6 +550,7 @@ class BatchExecutor:
             task = row.task
             t["doc_task"][ti] = task.fallback
             t["shard_base"][ti] = row.shard_base
+            t["score_bias"][ti] = task.score_bias
             if task.stop_checks:
                 pack_ns_checks(t, ti, task.stop_checks, self.dev.max_distance)
             for gi, g in enumerate(row.groups):
@@ -501,27 +574,35 @@ class BatchExecutor:
                     if f.max_abs_dist is not None:
                         t["max_abs"][ti, gi, fi] = f.max_abs_dist
                     t["pivot_from_dist"][ti, gi, fi] = bool(f.pivot_from_dist)
+                    t["score_from_dist"][ti, gi, fi] = \
+                        bool(f.score_delta_from_dist)
         return t
 
     # -- execution ----------------------------------------------------------
 
     @staticmethod
-    def _scatter_row_keys(part: list, a64: np.ndarray, found: np.ndarray):
-        """Assign each row its found seed keys — one pass over the hit mask
-        instead of T boolean-indexings.  Shared with the serve executor so
-        the result-extraction semantics can never diverge."""
+    def _scatter_row_keys(part: list, a64: np.ndarray, found: np.ndarray,
+                          scores: np.ndarray | None = None):
+        """Assign each row its found seed keys (and scores, when ranked) —
+        one pass over the hit mask instead of T boolean-indexings.  Shared
+        with the serve executor so the result-extraction semantics can never
+        diverge."""
         hit_rows, cols = np.nonzero(found)
         keys = a64[hit_rows, cols]
         splits = np.searchsorted(hit_rows, np.arange(1, len(part)))
         for ti, row_keys in enumerate(np.split(keys, splits)):
             part[ti].keys = row_keys
+        if scores is not None:
+            svals = scores[hit_rows, cols].astype(np.float32)
+            for ti, row_scores in enumerate(np.split(svals, splits)):
+                part[ti].scores = row_scores
 
     def _run_rows(self, rows: list):
         buckets: dict = {}
         for row in rows:
             buckets.setdefault(self._bucket_key(row), []).append(row)
         d = self.dev
-        for (G, F, P0, P, C, M, sortfree), rs in buckets.items():
+        for (G, F, P0, P, C, M, sortfree, ranked), rs in buckets.items():
             per_task = F * P0 + (G - 1) * F * P
             if C > 0:                  # near-stop gather adds an [F, P0, K] slab
                 per_task += F * P0 * int(d.near_stop_np.shape[1])
@@ -533,19 +614,32 @@ class BatchExecutor:
                 # the extra pow2 compile variants are absorbed by warm-up
                 T_pad = _next_pow2(len(part), floor=4)
                 t = self._tensorize_bucket(part, G, F, C, M, T_pad)
-                tj = {k: jnp.asarray(v) for k, v in t.items()}
-                a64, found = _batch_step(
+                # the score columns are only read by the ranked program —
+                # keep them off the per-call transfer path for unranked
+                # buckets (device_put per table entry is the step's fixed
+                # cost at smoke scale)
+                tj = {k: jnp.asarray(v) for k, v in t.items()
+                      if ranked or k not in ("score_bias", "score_from_dist")}
+                out = _batch_step(
                     d.arena_doc, d.arena_pos, d.arena_dist, d.near_stop, tj,
                     P0=P0, P=P, impl=self.impl, interpret=self.interpret,
-                    presorted=sortfree)
-                self._scatter_row_keys(part, np.asarray(a64),
-                                       np.asarray(found))
+                    presorted=sortfree, ranked=ranked)
+                if ranked:
+                    a64, found, scores = out
+                    self._scatter_row_keys(part, np.asarray(a64),
+                                           np.asarray(found),
+                                           np.asarray(scores))
+                else:
+                    a64, found = out
+                    self._scatter_row_keys(part, np.asarray(a64),
+                                           np.asarray(found))
 
     # -- merge (mirrors Executor.execute) -----------------------------------
 
     def _merge_plan(self, plan: QueryPlan, task_map: dict,
-                    max_results: int | None) -> SearchResult:
-        all_keys, doc_only_keys = [], []
+                    request: SearchRequest | None) -> SearchResult:
+        ranked = request is not None and request.rank
+        all_keys, all_scores, doc_only_keys = [], [], []
         postings = 0
         used_fallback = False
         types = []
@@ -556,27 +650,38 @@ class BatchExecutor:
             postings += sp.postings_read
             main = task_map.get((sp_i, False))
             keys = main.collect_keys() if main is not None else np.empty(0, np.int64)
+            scores = (main.collect_scores() if ranked and main is not None
+                      else np.empty(0, np.float32))
             if len(keys) == 0 and sp.fallback_groups:
                 used_fallback = True
                 postings += sum(g.postings_read for g in sp.fallback_groups)
                 fb = task_map.get((sp_i, True))
                 dkeys = fb.collect_keys() if fb is not None else np.empty(0, np.int64)
                 doc_only_keys.append(dkeys)
-            else:
-                all_keys.append(keys)
-        return merge_subplan_keys(all_keys, doc_only_keys, postings,
-                                  used_fallback, tuple(types), max_results)
+                keys, scores = keys[:0], scores[:0]
+            all_keys.append(keys)
+            all_scores.append(scores)
+        return merge_subplan_results(all_keys, doc_only_keys, postings,
+                                     used_fallback, tuple(types), request,
+                                     all_scores=all_scores)
 
     # -- public API ---------------------------------------------------------
 
     def execute_batch(self, plans: list[QueryPlan],
-                      max_results: int | None = None) -> list[SearchResult]:
+                      max_results: int | None = None,
+                      requests: list[SearchRequest] | None = None
+                      ) -> list[SearchResult]:
+        """Requests (when given) align 1:1 with plans and carry ranking /
+        top_k; plans stay the executor's input so escape routing and table
+        building see resolved fetches only."""
+        if requests is None:
+            requests = [SearchRequest((), top_k=max_results)] * len(plans)
         tasks: list[_Task] = []
         flex_plans: dict[int, QueryPlan] = {}
         plan_tasks: dict[int, list] = {}
         for i, plan in enumerate(plans):
             start = len(tasks)
-            if self._build_tasks(i, plan, tasks):
+            if self._build_tasks(i, plan, tasks, ranked=requests[i].rank):
                 plan_tasks[i] = tasks[start:]
             else:
                 flex_plans[i] = plan
@@ -593,10 +698,10 @@ class BatchExecutor:
         out: list[SearchResult | None] = [None] * len(plans)
         for i, plan in enumerate(plans):
             if i in flex_plans:
-                out[i] = self.flex.execute(plan, max_results=max_results)
+                out[i] = self.flex.execute(plan, request=requests[i])
             else:
                 task_map = {(t.subplan_i, t.fallback): t for t in plan_tasks[i]}
-                out[i] = self._merge_plan(plan, task_map, max_results)
+                out[i] = self._merge_plan(plan, task_map, requests[i])
         return out
 
 

@@ -61,6 +61,14 @@ class IndexParams:
                                # 4*max_distance (2 forms x 2D positions) is
                                # lossless -- smaller trades recall for size
     chunk: int = 1 << 20       # build-time chunking to bound peak memory
+    triple_pair_min_count: int = 0
+                               # multi-key size dial (ROADMAP): keep
+                               # (s1, s2, v) triples only for (s1, s2) stop
+                               # pairs with at least this many triple
+                               # postings — the planner answers gated pairs
+                               # with two two-component lookups instead
+                               # (identical semantics, more postings read).
+                               # 0 = keep every triple (no gating).
 
     def __post_init__(self):
         assert 2 <= self.min_len <= self.max_len <= MAX_STOP_PHRASE_LEN
@@ -344,8 +352,34 @@ def build_multi_key_index(tf: TokenForms, lexicon: Lexicon,
             off += 1
     triples = _csr_from_parts(keys_t, {"doc": doc_t, "pos": pos_t,
                                        "dist": dist_t, "dpair": dpair_t})
+    triples, admitted = _gate_triples(triples, n_stop,
+                                      params.triple_pair_min_count)
     return MultiKeyIndex(pairs=pairs, triples=triples, n_base=n_base,
-                         n_stop=n_stop, neighbor_distance=D)
+                         n_stop=n_stop, neighbor_distance=D,
+                         triple_stop_pairs=admitted)
+
+
+def _gate_triples(triples: CSR, n_stop: int, min_count: int):
+    """Size dial: drop triples of uncommon (s1, s2) stop pairs (fewer than
+    `min_count` postings across all pivots).  Returns (filtered CSR, sorted
+    admitted pair codes) — or (triples, None) when gating is off."""
+    if min_count <= 0:
+        return triples, None
+    key_pair = triples.keys % (n_stop * n_stop)       # s2 * n_stop + s1
+    s1 = key_pair % n_stop
+    s2 = key_pair // n_stop
+    pair_code = s1 * n_stop + s2
+    counts = np.diff(triples.offsets)
+    pair_total = np.zeros(n_stop * n_stop, np.int64)
+    np.add.at(pair_total, pair_code, counts)
+    admitted = np.nonzero(pair_total >= min_count)[0].astype(np.int64)
+    keep_key = pair_total[pair_code] >= min_count
+    if keep_key.all():
+        return triples, admitted
+    keep_post = np.repeat(keep_key, counts)
+    flat_keys = np.repeat(triples.keys, counts)[keep_post]
+    cols = {k: v[keep_post] for k, v in triples.columns.items()}
+    return CSR.from_unsorted(flat_keys, cols, presorted=True), admitted
 
 
 def _csr_from_parts(key_parts: list, col_parts: dict[str, list]) -> CSR:

@@ -1,4 +1,4 @@
-"""Engine facades.
+"""Engine facades behind the typed request/response API (core/api.py).
 
 `AdditionalIndexEngine` — the paper's system: planner (Type 1-4 dispatch over
 the stop-phrase / expanded / 3-stream basic indexes) + JAX executor.
@@ -7,10 +7,15 @@ the stop-phrase / expanded / 3-stream basic indexes) + JAX executor.
 2.0.6): a single inverted index over every basic form, stop words included;
 every query reads the *full* posting list of every query word.
 
+Both consume `SearchRequest`s (`search` / `search_batch`) and return
+`SearchResponse`s — proximity-ranked DocHits when `rank=True`; the old
+positional signatures are DeprecationWarning shims.
+
 `brute_force_search` — O(corpus) oracle used by tests and the experiment
 harness to verify that indexed phrases are found exactly (paper: "Since
 phrases are selected from an already-indexed document, they should be
-precisely found").
+precisely found"); `brute_force_ranked` — its scoring twin (literal
+nested-loop proximity relevance per arXiv:2108.00410).
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.analyzer import Analyzer
+from repro.core.api import SearchRequest, SearchResponse, as_request
 from repro.core.batch_executor import BatchExecutor
 from repro.core.builder import IndexSet, expand_token_forms
 from repro.core.corpus import Corpus
@@ -28,13 +34,16 @@ from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE, Planner,
                                 QueryPlan, ResolvedFetch, SubPlan)
 
 
-def _plan_batch(plan_fn, queries, modes, window):
+def _coerce_requests(queries, modes, window, max_results, what) -> list[SearchRequest]:
+    """Legacy (queries, modes=...) batch signature -> SearchRequests."""
     if isinstance(modes, str):
         modes = [modes] * len(queries)
     if len(modes) != len(queries):
         raise ValueError("modes must be a str or match len(queries)")
-    return [plan_fn(list(q), mode=m, window=window)
-            for q, m in zip(queries, modes)]
+    from repro.core.api import warn_legacy
+    warn_legacy(what)
+    return [SearchRequest(tuple(int(s) for s in q), mode=m, window=window,
+                          top_k=max_results) for q, m in zip(queries, modes)]
 
 
 class _BatchSearchMixin:
@@ -57,22 +66,44 @@ class _BatchSearchMixin:
                 docs_per_shard=self._docs_per_shard)
         return self._batch_executor
 
-    def search_batch(self, queries, modes: str | list = MODE_PHRASE,
+    def search(self, request, mode: str = MODE_PHRASE,
+               window: int | None = None,
+               max_results: int | None = None) -> SearchResponse:
+        """One query through the flexible per-query executor.  The only
+        supported argument is a SearchRequest; the positional form
+        (surface_ids, mode=..., window=..., max_results=...) is a deprecated
+        shim."""
+        if not isinstance(request, SearchRequest):
+            request = as_request(request, mode, window, max_results,
+                                 what=f"{type(self).__name__}.search")
+        plan = self.plan_request(request)
+        return self.executor.execute(plan, request=request)
+
+    def search_batch(self, requests, modes: str | list = MODE_PHRASE,
                      window: int | None = None,
-                     max_results: int | None = None) -> list[SearchResult]:
-        """Batched search: queries = sequence of surface-id sequences;
-        modes = one mode for all or a per-query list.  Same results as
-        per-query `search`, one jit'd call per shape bucket."""
-        plans = _plan_batch(self.plan, queries, modes, window)
-        return self.batch_executor.execute_batch(plans, max_results=max_results)
+                     max_results: int | None = None) -> list[SearchResponse]:
+        """Batched search: a sequence of SearchRequests through the
+        plan-compiled batched executor — same results as per-query `search`,
+        one jit'd call per shape bucket, ranked and unranked requests mixing
+        freely.  The positional (queries, modes=...) form is a deprecated
+        shim."""
+        requests = list(requests)
+        if not all(isinstance(r, SearchRequest) for r in requests):
+            requests = _coerce_requests(
+                requests, modes, window, max_results,
+                what=f"{type(self).__name__}.search_batch")
+        plans = [self.plan_request(r) for r in requests]
+        return self.batch_executor.execute_batch(plans, requests=requests)
 
 
 class AdditionalIndexEngine(_BatchSearchMixin):
     """The paper's engine: additional indexes + Type 1-4 query processing.
 
-    `search` runs one query through the flexible executor; `search_batch`
-    runs a whole batch through the plan-compiled batched executor (one jit'd
-    call per shape bucket; identical results — see batch_executor.py).
+    `search(SearchRequest)` runs one query through the flexible executor;
+    `search_batch([SearchRequest, ...])` runs a whole batch through the
+    plan-compiled batched executor (one jit'd call per shape bucket;
+    identical results — see batch_executor.py).  Both return
+    `SearchResponse`s; `rank=True` requests carry proximity-ranked DocHits.
     """
 
     def __init__(self, index: IndexSet, batch_impl: str = "ref",
@@ -83,13 +114,16 @@ class AdditionalIndexEngine(_BatchSearchMixin):
         self.executor = Executor(index)
         self._init_batch(batch_impl, interpret, docs_per_shard)
 
-    def search(self, surface_ids, mode: str = MODE_PHRASE,
-               window: int | None = None, max_results: int | None = None) -> SearchResult:
-        plan = self.planner.plan(list(surface_ids), mode=mode, window=window)
-        return self.executor.execute(plan, max_results=max_results)
+    def plan_request(self, request: SearchRequest) -> QueryPlan:
+        return self.planner.plan(list(request.surface_ids),
+                                 mode=request.mode, window=request.window,
+                                 ranked=request.rank)
 
-    def plan(self, surface_ids, mode: str = MODE_PHRASE, window: int | None = None):
-        return self.planner.plan(list(surface_ids), mode=mode, window=window)
+    def plan(self, surface_ids, mode: str = MODE_PHRASE,
+             window: int | None = None, ranked: bool = False):
+        """Host-side plan introspection (not a search entry point)."""
+        return self.planner.plan(list(surface_ids), mode=mode, window=window,
+                                 ranked=ranked)
 
 
 class OrdinaryEngine(_BatchSearchMixin):
@@ -109,9 +143,15 @@ class OrdinaryEngine(_BatchSearchMixin):
             if e > s:
                 fetches.append(ResolvedFetch(stream="ordinary", start=s,
                                              length=e - s, offset=slot))
-        return FetchGroup(slot=slot, fetches=fetches, band=band)
+        return FetchGroup(slot=slot, fetches=fetches, band=band,
+                          score_slot=slot)
 
-    def plan(self, surface_ids, mode: str = MODE_PHRASE, window: int | None = None) -> QueryPlan:
+    def plan_request(self, request: SearchRequest) -> QueryPlan:
+        return self.plan(list(request.surface_ids), mode=request.mode,
+                         window=request.window)
+
+    def plan(self, surface_ids, mode: str = MODE_PHRASE,
+             window: int | None = None, ranked: bool = False) -> QueryPlan:
         if window is None:
             window = self.index.params.near_window
         ana = self.index.analyzer
@@ -129,12 +169,8 @@ class OrdinaryEngine(_BatchSearchMixin):
             for i, forms in enumerate(form_lists):
                 groups.append(self._slot_group(i, forms,
                                                band=0 if i == pivot else window))
-        return QueryPlan(subplans=[SubPlan(qtype=0, mode=mode, groups=groups)])
-
-    def search(self, surface_ids, mode: str = MODE_PHRASE,
-               window: int | None = None, max_results: int | None = None) -> SearchResult:
-        plan = self.plan(surface_ids, mode=mode, window=window)
-        return self.executor.execute(plan, max_results=max_results)
+        return QueryPlan(subplans=[SubPlan(qtype=0, mode=mode, groups=groups,
+                                           n_slots=len(form_lists))])
 
 
 def near_query_contains_stop(lexicon, analyzer, surface_ids,
@@ -184,6 +220,45 @@ def _tier_splits(form_lists, lexicon):
     return list(itertools.product(*per_slot))
 
 
+def _stop_multiset_anchor_set(tiered, tf_prim, tf_sec, doc_of, pos_of,
+                              lexicon, params):
+    """Any-order contiguous matches of an all-stop subquery (Type 1) — the
+    anchor set shared by the plain and the ranked oracle."""
+    import itertools
+    from repro.core.lexicon import TIER_STOP
+    from repro.core.planner import split_query_parts
+    T = len(tf_prim)
+    n = len(tiered)
+    parts = split_query_parts(n, params.min_len, params.max_len)
+    part_hits = []
+    for (pstart, L) in parts:
+        slot_forms = [tiered[pstart + j][1] for j in range(L)]
+        qsets = {tuple(sorted(c)) for c in itertools.product(*slot_forms)}
+        hits = set()
+        for t in range(T - L + 1):
+            if doc_of[t] != doc_of[t + L - 1]:
+                continue
+            cands = []
+            okwin = True
+            for u in range(t, t + L):
+                forms = [f for f in (tf_prim[u], tf_sec[u])
+                         if f >= 0 and lexicon.base_tier[f] == TIER_STOP]
+                if not forms:
+                    okwin = False
+                    break
+                cands.append(forms)
+            if not okwin:
+                continue
+            wsets = {tuple(sorted(c)) for c in itertools.product(*cands)}
+            if wsets & qsets:
+                hits.add((int(doc_of[t]), int(pos_of[t]) - pstart))
+        part_hits.append(hits)
+    out = part_hits[0]
+    for h in part_hits[1:]:
+        out &= h
+    return out
+
+
 def brute_force_search(corpus: Corpus, index: IndexSet, surface_ids,
                        mode: str = MODE_PHRASE, window: int | None = None):
     """O(corpus) oracle with the *paper's* match semantics.
@@ -229,36 +304,8 @@ def brute_force_search(corpus: Corpus, index: IndexSet, surface_ids,
 
     def stop_multiset_anchors(tiered):
         """Any-order contiguous matches of an all-stop subquery."""
-        n = len(tiered)
-        parts = split_query_parts(n, params.min_len, params.max_len)
-        # per-part: achievable query multisets (over per-slot form choices)
-        part_hits = []
-        for (pstart, L) in parts:
-            slot_forms = [tiered[pstart + j][1] for j in range(L)]
-            qsets = {tuple(sorted(c)) for c in itertools.product(*slot_forms)}
-            hits = set()
-            for t in range(T - L + 1):
-                if doc_of[t] != doc_of[t + L - 1]:
-                    continue
-                cands = []
-                okwin = True
-                for u in range(t, t + L):
-                    forms = [f for f in (tf_prim[u], tf_sec[u])
-                             if f >= 0 and lexicon.base_tier[f] == TIER_STOP]
-                    if not forms:
-                        okwin = False
-                        break
-                    cands.append(forms)
-                if not okwin:
-                    continue
-                wsets = {tuple(sorted(c)) for c in itertools.product(*cands)}
-                if wsets & qsets:
-                    hits.add((int(doc_of[t]), int(pos_of[t]) - pstart))
-            part_hits.append(hits)
-        out = part_hits[0]
-        for h in part_hits[1:]:
-            out &= h
-        return out
+        return _stop_multiset_anchor_set(tiered, tf_prim, tf_sec, doc_of,
+                                         pos_of, lexicon, params)
 
     positional = set()
     doc_level_all = set()
@@ -303,3 +350,110 @@ def brute_force_search(corpus: Corpus, index: IndexSet, surface_ids,
         if docs:
             doc_level_all |= docs
     return positional, doc_level_all
+
+
+def brute_force_ranked(corpus: Corpus, index: IndexSet, surface_ids,
+                       mode: str = MODE_PHRASE, window: int | None = None,
+                       ranking=None):
+    """Ranked twin of `brute_force_search`: the proximity relevance model of
+    api.py computed by literal nested loops over the corpus — the reference
+    the engines' device scoring pass is checked against end to end.
+
+    Per tier-split subquery, every match anchor scores
+
+        sum over query slots i of w(d_i),     w(d) = 1 / (1 + d)
+
+    with d_i = 0 for the pivot and for every slot of a precise-phrase /
+    all-stop match (exact offsets), else the distance from the anchor to the
+    nearest same-document token matching slot i within the window.  Anchors
+    duplicated across subqueries keep their MAX score; a document's
+    relevance is the sum over its anchors times `ranking.proximity_scale`.
+
+    Returns (anchor_scores, doc_scores, doc_level): dicts keyed (doc, pos)
+    and doc (float64 — the engines accumulate float32, so compare with
+    tolerance), plus the doc-only fallback truth set (relevance
+    `ranking.doc_only_score`, only reachable when no subquery has a
+    positional match).
+    """
+    from repro.core.api import RankingParams
+    from repro.core.lexicon import TIER_STOP
+    from repro.core.planner import pick_pivot
+
+    ranking = ranking or RankingParams()
+    lexicon, analyzer, params = index.lexicon, index.analyzer, index.params
+    if window is None:
+        window = params.near_window
+    occ_counts = index.base_occ_counts()
+    tf_prim = analyzer.primary[corpus.tokens]
+    tf_sec = analyzer.secondary[corpus.tokens]
+    doc_of = corpus.doc_ids_per_token()
+    pos_of = corpus.positions_per_token()
+    T = corpus.n_tokens
+
+    def token_matches(slot_forms):
+        m = np.isin(tf_prim, list(slot_forms))
+        m |= np.isin(tf_sec, list(slot_forms)) & (tf_sec >= 0)
+        return m
+
+    anchor_scores: dict = {}
+    doc_level_all: set = set()
+
+    def put(anchor, score):
+        prev = anchor_scores.get(anchor)
+        if prev is None or score > prev:
+            anchor_scores[anchor] = score
+
+    for tiered in _tier_splits([analyzer.forms_of(s) for s in surface_ids],
+                               lexicon):
+        tiers = [t for t, _ in tiered]
+        n = len(tiered)
+        if all(t == TIER_STOP for t in tiers):
+            if n >= params.min_len:
+                for anchor in _stop_multiset_anchor_set(
+                        tiered, tf_prim, tf_sec, doc_of, pos_of, lexicon,
+                        params):
+                    put(anchor, float(n))       # exact offsets: n * w(0)
+            continue                            # stop-only: no doc fallback
+        matches = [token_matches(forms) for _, forms in tiered]
+        if mode == MODE_PHRASE:
+            ok = matches[0][: T - n + 1].copy()
+            for i in range(1, n):
+                ok &= matches[i][i: T - n + 1 + i]
+            if n > 1:
+                ok &= doc_of[: T - n + 1] == doc_of[n - 1:]
+            for t in np.nonzero(ok)[0]:
+                put((int(doc_of[t]), int(pos_of[t])), float(n))
+        else:
+            pivot = pick_pivot(tiered, occ_counts)
+            for t in np.nonzero(matches[pivot])[0]:
+                score = 1.0                     # the pivot slot: w(0)
+                good = True
+                for i, m in enumerate(matches):
+                    if i == pivot:
+                        continue
+                    lo, hi = max(0, t - window), min(T, t + window + 1)
+                    near = np.nonzero(m[lo:hi]
+                                      & (doc_of[lo:hi] == doc_of[t]))[0]
+                    if len(near) == 0:
+                        good = False
+                        break
+                    delta = int(np.abs(near + lo - t).min())
+                    score += 1.0 / (1.0 + delta)
+                if good:
+                    put((int(doc_of[t]), int(pos_of[t])), score)
+        # doc-level (stream-1 fallback) truth: non-stop words only
+        docs = None
+        for (tr, forms), m in zip(tiered, matches):
+            if tr == TIER_STOP:
+                continue
+            d = set(np.unique(doc_of[m]).tolist())
+            docs = d if docs is None else (docs & d)
+        if docs:
+            doc_level_all |= docs
+
+    scale = float(ranking.proximity_scale)
+    anchor_scores = {k: v * scale for k, v in anchor_scores.items()}
+    doc_scores: dict = {}
+    for (d, _p), s in anchor_scores.items():
+        doc_scores[d] = doc_scores.get(d, 0.0) + s
+    return anchor_scores, doc_scores, doc_level_all

@@ -9,6 +9,14 @@ the correctness oracle and escape hatch for the batched executor
 (core/batch_executor.py), whose tables both the engine's `search_batch`
 and the distributed serve tier (serve/search_serve.py) execute; the Pallas
 `banded_intersect` kernel implements the same membership test for TPU.
+
+Ranked requests (api.py) run `_run_groups_ranked`: the same banded
+intersection, plus a per-group minimum of (key distance + stored |dist|
+delta) probed against composite-sorted keys — accumulated into per-anchor
+float32 proximity scores in the SAME canonical order as the batched bucket
+step, so flex-routed plans rank bit-identically.  `merge_subplan_results`
+is the one shared merge tail: anchor dedup (max score), per-doc segment
+sums, (score desc, doc asc) ordering with jax top_k selection.
 """
 from __future__ import annotations
 
@@ -19,12 +27,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import (RankingParams, SearchRequest, SearchResponse,
+                            SearchResult)
 from repro.core.builder import IndexSet
+from repro.core.fetch_tables import SCORE_DELTA_BITS
 from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE, QueryPlan,
                                 ResolvedFetch, SubPlan)
 from repro.core.postings import NS_SHIFT, PHRASE_BIAS, POS_BITS
 
 SENTINEL = np.int64(2**62)      # pads; sorts after every real key
+_DELTA_MASK = (1 << SCORE_DELTA_BITS) - 1
 
 
 def _next_pow2(n: int, floor: int = 256) -> int:
@@ -32,6 +44,70 @@ def _next_pow2(n: int, floor: int = 256) -> int:
     while p < n:
         p <<= 1
     return p
+
+
+def order_groups_seed_first(groups):
+    """Seed-first execution order shared by the batched tensorizer and the
+    flexible ranked path (identical order => identical float32 score
+    accumulation => bit-identical ranked output).  None when no valid seed
+    exists (no band-0 group and no near-stop-checked pivot)."""
+    ns = [g for g in groups if any(f.stop_checks for f in g.fetches)]
+    if ns:
+        seed = ns[0]
+    else:
+        band0 = [g for g in groups if g.band == 0]
+        if not band0:
+            return None
+        seed = min(band0, key=lambda g: sum(f.length for f in g.fetches))
+    return [seed] + [g for g in groups if g is not seed]
+
+
+def proximity_w(delta):
+    """w(d) = 1 / (1 + d), float32 — the proximity decay of the relevance
+    model (api.py; arXiv:2108.00410's decreasing distance weight)."""
+    return 1.0 / (1.0 + delta.astype(jnp.float32))
+
+
+def scored_probe(comp_sorted, probe, band):
+    """Banded min-delta membership against a composite-sorted key list.
+
+    comp_sorted : [..., Pb] int64 ascending (key << SCORE_DELTA_BITS | delta,
+                  pads = any value above every real composite); probe:
+                  [..., Pa] int64 (key << SCORE_DELTA_BITS, invalid entries
+                  padded like comp — the caller masks them out).  Returns
+                  int32 delta_total [..., Pa]: min over b with |key(b) -
+                  key(a)| <= band of (key distance + b's stored delta), or
+                  I32_SENTINEL when no such b — `< I32_SENTINEL` IS the
+                  banded-membership bit.  Two probes suffice: within an
+                  equal-key run the first entry carries the minimal stored
+                  delta (composite order), and stored deltas are zero in
+                  every band > 0 group by plan construction (dist-carrying
+                  fetches are always band-0)."""
+    from repro.kernels.ops import I32_SENTINEL
+    Pb = comp_sorted.shape[-1]
+    comp2 = comp_sorted.reshape(-1, Pb)
+    probe2 = probe.reshape(comp2.shape[0], -1)
+    if comp2.shape[0] == 1:
+        idx = jnp.searchsorted(comp2[0], probe2[0], side="left")[None]
+    else:
+        idx = jax.vmap(
+            lambda c, p: jnp.searchsorted(c, p, side="left"))(comp2, probe2)
+    hi = jnp.clip(idx, 0, Pb - 1)
+    lo = jnp.clip(idx - 1, 0, Pb - 1)
+    e_hi = jnp.take_along_axis(comp2, hi, axis=-1).reshape(probe.shape)
+    e_lo = jnp.take_along_axis(comp2, lo, axis=-1).reshape(probe.shape)
+    idx = idx.reshape(probe.shape)
+    a_key = probe >> SCORE_DELTA_BITS
+    kd_hi = (e_hi >> SCORE_DELTA_BITS) - a_key
+    kd_lo = a_key - (e_lo >> SCORE_DELTA_BITS)
+    ok_hi = (idx < Pb) & (kd_hi <= band)
+    ok_lo = (idx > 0) & (kd_lo <= band)
+    big = jnp.int32(I32_SENTINEL)
+    d_hi = (e_hi & _DELTA_MASK).astype(jnp.int32)
+    d_lo = (e_lo & _DELTA_MASK).astype(jnp.int32)
+    cand_hi = jnp.where(ok_hi, kd_hi.astype(jnp.int32) + d_hi, big)
+    cand_lo = jnp.where(ok_lo, kd_lo.astype(jnp.int32) + d_lo, big)
+    return jnp.minimum(cand_hi, cand_lo)
 
 
 @partial(jax.jit, static_argnums=(3,))
@@ -57,45 +133,105 @@ def _near_stop_ok(slots, packed_targets, target_valid):
     return per_check.all(axis=1)
 
 
-@dataclasses.dataclass
-class SearchResult:
-    doc: np.ndarray                 # matched documents
-    pos: np.ndarray                 # anchor positions (phrase start / pivot)
-    postings_read: int
-    used_fallback: bool
-    doc_only: bool                  # True when results came from stream-1 fallback
-    subplan_types: tuple = ()
+def _rank_docs(doc_ids: np.ndarray, doc_scores: np.ndarray,
+               top_k: int | None):
+    """Order docs by (score desc, doc asc); top_k selection runs through
+    `jax.lax.top_k` (ties break toward the lower index = lower doc, exactly
+    the lexsort rule, so truncated and full orderings agree)."""
+    if top_k is not None and top_k < len(doc_ids):
+        _, idx = jax.lax.top_k(jnp.asarray(doc_scores), top_k)
+        idx = np.asarray(idx)
+    else:
+        idx = np.lexsort((doc_ids, -doc_scores.astype(np.float64)))
+    return doc_ids[idx], doc_scores[idx]
 
 
-def merge_subplan_keys(all_keys: list, doc_only_keys: list, postings: int,
-                       used_fallback: bool, types: tuple,
-                       max_results: int | None) -> SearchResult:
-    """Union per-subplan key sets into a SearchResult.
+def merge_subplan_results(all_keys: list, doc_only_keys: list, postings: int,
+                          used_fallback: bool, types: tuple,
+                          request: SearchRequest | None,
+                          all_scores: list | None = None) -> SearchResponse:
+    """Union per-subplan key sets into a SearchResponse.
 
     Shared by the flexible and batched executors — their result parity
     depends on this tail being literally the same code.  Positional keys win
     over doc-only fallback keys; keys are unpacked doc/pos via the global
-    63-bit codec."""
-    keys = (np.unique(np.concatenate(all_keys)) if all_keys
-            else np.empty(0, np.int64))
-    if len(keys):
-        doc = (keys >> POS_BITS).astype(np.int32)
-        pos = ((keys & ((1 << POS_BITS) - 1)) - PHRASE_BIAS).astype(np.int32)
-        doc_only = False
-    elif doc_only_keys:
+    63-bit codec.
+
+    Ranked (`request.rank` with `all_scores` aligned to `all_keys`):
+    duplicate anchors across subplans dedupe by MAX score, per-anchor
+    subplan provenance ORs over duplicates, document relevance is the
+    float32 sum of its anchors' scores, and documents order by (score desc,
+    doc asc) with `top_k` selection via jax top_k.  Every step is a
+    vectorized pass over key-sorted arrays, so identical inputs (which the
+    executors guarantee) give bit-identical ranked output."""
+    ranked = request is not None and request.rank
+    top_k = request.top_k if request is not None else None
+    rank_p = request.ranking if request is not None else RankingParams()
+    resp = SearchResponse(
+        doc=np.empty(0, np.int32), pos=np.empty(0, np.int32),
+        postings_read=postings, used_fallback=used_fallback, doc_only=False,
+        subplan_types=tuple(types), ranked=ranked, request=request)
+    have_pos = any(len(k) for k in all_keys)
+    if have_pos and not ranked:
+        keys = np.unique(np.concatenate(all_keys))
+        resp.doc = (keys >> POS_BITS).astype(np.int32)
+        resp.pos = ((keys & ((1 << POS_BITS) - 1)) - PHRASE_BIAS).astype(np.int32)
+        if top_k is not None:           # legacy max_results truncation
+            resp.doc, resp.pos = resp.doc[:top_k], resp.pos[:top_k]
+        return resp
+    if have_pos:
+        scale = np.float32(rank_p.proximity_scale)
+        keys = np.concatenate(all_keys)
+        scores = np.concatenate(
+            [np.asarray(s, np.float32) for s in all_scores]) * scale
+        # provenance bitmask: exact for the first 64 subplans, omitted (not
+        # misattributed) beyond — tier splits are a per-slot product, so >64
+        # needs 7+ words with multi-tier forms; scores are unaffected
+        masks = np.concatenate(
+            [np.full(len(k), np.uint64(1) << i if i < 64 else np.uint64(0),
+                     np.uint64)
+             for i, k in enumerate(all_keys)])
+        order = np.lexsort((-scores.astype(np.float64), keys))
+        k_s, s_s, m_s = keys[order], scores[order], masks[order]
+        first = np.ones(len(k_s), bool)
+        first[1:] = k_s[1:] != k_s[:-1]
+        starts = np.nonzero(first)[0]
+        uniq_keys = k_s[starts]
+        uniq_scores = s_s[starts]                   # max score per anchor
+        uniq_masks = np.bitwise_or.reduceat(m_s, starts)
+        resp.doc = (uniq_keys >> POS_BITS).astype(np.int32)
+        resp.pos = ((uniq_keys & ((1 << POS_BITS) - 1))
+                    - PHRASE_BIAS).astype(np.int32)
+        resp.anchor_scores = uniq_scores
+        resp.anchor_subplans = uniq_masks
+        dfirst = np.ones(len(resp.doc), bool)
+        dfirst[1:] = resp.doc[1:] != resp.doc[:-1]
+        dstarts = np.nonzero(dfirst)[0]
+        doc_ids = resp.doc[dstarts].copy()
+        doc_scores = np.add.reduceat(uniq_scores, dstarts).astype(np.float32)
+        resp.doc_ids, resp.doc_scores = _rank_docs(doc_ids, doc_scores, top_k)
+        return resp
+    if doc_only_keys:
         docs = np.unique(np.concatenate(doc_only_keys))
-        doc = docs.astype(np.int32)
-        pos = np.full(len(doc), -1, dtype=np.int32)
-        doc_only = True
-    else:
-        doc = np.empty(0, np.int32)
-        pos = np.empty(0, np.int32)
-        doc_only = False
-    if max_results is not None:
-        doc, pos = doc[:max_results], pos[:max_results]
-    return SearchResult(doc=doc, pos=pos, postings_read=postings,
-                        used_fallback=used_fallback, doc_only=doc_only,
-                        subplan_types=tuple(types))
+        resp.doc = docs.astype(np.int32)
+        resp.pos = np.full(len(resp.doc), -1, dtype=np.int32)
+        resp.doc_only = True
+        if ranked:
+            resp.anchor_scores = np.full(len(resp.doc),
+                                         rank_p.doc_only_score, np.float32)
+            resp.doc_ids = resp.doc.copy()
+            resp.doc_scores = resp.anchor_scores.copy()
+            if top_k is not None:
+                resp.doc_ids = resp.doc_ids[:top_k]
+                resp.doc_scores = resp.doc_scores[:top_k]
+        elif top_k is not None:
+            resp.doc, resp.pos = resp.doc[:top_k], resp.pos[:top_k]
+        return resp
+    if ranked:
+        resp.anchor_scores = np.empty(0, np.float32)
+        resp.doc_ids = np.empty(0, np.int32)
+        resp.doc_scores = np.empty(0, np.float32)
+    return resp
 
 
 class DeviceIndex:
@@ -193,9 +329,33 @@ class Executor:
             keys = jnp.where(ok, keys, SENTINEL)
         return keys
 
-    def _group_keys(self, g: FetchGroup, mode: str):
-        """Sorted, sentinel-padded key array for one fetch group."""
+    def _fetch_delta(self, f: ResolvedFetch):
+        """Per-posting slot delta for ranked scoring: the |dist| payload when
+        the planner marked the fetch `score_delta_from_dist` (near-mode
+        expanded / multi-key lookups, keyed at the anchor), else 0 (precise
+        keys — the key distance carries any remaining spread)."""
+        if not f.score_delta_from_dist:
+            return jnp.zeros((f.length,), jnp.int32)
+        d = self.dev
+        s, e = f.start, f.start + f.length
+        dist = d.exp_dist[s:e] if f.stream == "expanded" else d.multi_dist[s:e]
+        return jnp.abs(dist.astype(jnp.int32))
+
+    def _group_keys(self, g: FetchGroup, mode: str, scored: bool = False):
+        """Sorted, sentinel-padded key array for one fetch group.  `scored`
+        returns (composite-sorted keys<<SCORE_DELTA_BITS|delta, raw keys,
+        raw deltas) for the ranked path instead."""
         parts = [self._fetch_keys(f, mode) for f in g.fetches]
+        if scored:
+            deltas = [self._fetch_delta(f) for f in g.fetches]
+            keys = jnp.concatenate([p.astype(jnp.int64) for p in parts]) \
+                if parts else jnp.empty((0,), jnp.int64)
+            delta = jnp.concatenate(deltas) if deltas \
+                else jnp.empty((0,), jnp.int32)
+            comp = jnp.where(keys < SENTINEL,
+                             (keys << SCORE_DELTA_BITS) | delta.astype(jnp.int64),
+                             SENTINEL)
+            return _sort_keys(comp), keys, delta
         total = sum(int(p.shape[0]) for p in parts)
         width = _next_pow2(max(total, 1))
         buf = jnp.full((width,), SENTINEL, dtype=jnp.int64)
@@ -226,8 +386,43 @@ class Executor:
         res = np.asarray(a)[np.asarray(a_valid)]
         return res[res < SENTINEL]
 
-    def execute(self, plan: QueryPlan, max_results: int | None = None) -> SearchResult:
-        all_keys = []
+    def _run_groups_ranked(self, sp: SubPlan):
+        """Ranked twin of _run_groups: surviving anchors AND their proximity
+        scores, accumulated in the SAME canonical float32 order as the
+        batched bucket step (bias, seed self-delta, then each constraint
+        group seed-first) — identical group sets give bit-identical scores.
+        """
+        from repro.kernels.ops import I32_SENTINEL
+        groups = sp.groups
+        empty = (np.empty(0, np.int64), np.empty(0, np.float32))
+        if not groups or any(not g.fetches for g in groups):
+            return empty
+        ordered = order_groups_seed_first(groups)
+        if ordered is None:
+            return empty
+        seed = ordered[0]
+        a_parts = [self._fetch_keys(f, sp.mode) for f in seed.fetches]
+        a = jnp.concatenate([p.astype(jnp.int64) for p in a_parts])
+        d_self = jnp.concatenate([self._fetch_delta(f) for f in seed.fetches])
+        a_valid = a < SENTINEL
+        bias = jnp.float32(sp.n_slots - len(groups))
+        score = bias + proximity_w(d_self)
+        probe = jnp.where(a_valid, a << SCORE_DELTA_BITS, SENTINEL)
+        for g in ordered[1:]:
+            comp, _, _ = self._group_keys(g, sp.mode, scored=True)
+            delta_g = scored_probe(comp[None], probe[None], int(g.band))[0]
+            hit = delta_g < I32_SENTINEL
+            a_valid &= hit
+            score = score + jnp.where(hit, proximity_w(delta_g), 0.0)
+        sel = np.asarray(a_valid)
+        return np.asarray(a)[sel], np.asarray(score, np.float32)[sel]
+
+    def execute(self, plan: QueryPlan, max_results: int | None = None,
+                request: SearchRequest | None = None) -> SearchResponse:
+        if request is None:
+            request = SearchRequest((), top_k=max_results)
+        ranked = request.rank
+        all_keys, all_scores = [], []
         doc_only_keys = []
         postings = 0
         used_fallback = False
@@ -237,14 +432,21 @@ class Executor:
                 continue
             types.append(sp.qtype)
             postings += sp.postings_read
-            keys = self._run_groups(sp.groups, sp.mode)
+            if ranked:
+                keys, scores = self._run_groups_ranked(sp)
+            else:
+                keys = self._run_groups(sp.groups, sp.mode)
+                scores = None
             if len(keys) == 0 and sp.fallback_groups:
                 # paper: "if no result is obtained, we disregard the distance"
                 used_fallback = True
                 postings += sum(g.postings_read for g in sp.fallback_groups)
                 dkeys = self._run_groups(sp.fallback_groups, MODE_PHRASE)
                 doc_only_keys.append(dkeys)
-            else:
-                all_keys.append(keys)
-        return merge_subplan_keys(all_keys, doc_only_keys, postings,
-                                  used_fallback, tuple(types), max_results)
+                keys = keys[:0]
+            all_keys.append(keys)
+            all_scores.append(scores if scores is not None
+                              else np.empty(0, np.float32))
+        return merge_subplan_results(all_keys, doc_only_keys, postings,
+                                     used_fallback, tuple(types), request,
+                                     all_scores=all_scores)

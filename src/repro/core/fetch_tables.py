@@ -17,10 +17,14 @@ v) triples anchor at the pivot with `max_abs` alone — no schema additions)
 
     start/length/offset/req_dist/max_abs : int32 [T, G, F]
     pivot_from_dist                      : bool  [T, G, F]
+    score_from_dist                      : bool  [T, G, F] (ranked: slot delta
+                                                            = |dist| payload)
     band                                 : int32 [T, G]
     active                               : bool  [T, G]
     doc_task                             : bool  [T]       (doc-level fallback)
     shard_base                           : int32 [T]       (row's first doc)
+    score_bias                           : f32   [T]       (ranked: per-task
+                                                            n_slots - n_groups)
     ns_packed                            : int16 [T, C, M]
     ns_valid                             : bool  [T, C, M]
     owner                                : int32 [T]       (serve only: dp shard)
@@ -54,6 +58,12 @@ NO_MAX_ABS = np.int32(2**20)   # |dist| cap wildcard (always satisfied)
 # doc_local must fit (30 - TABLE_POS_BITS) bits so packed keys stay < 2**30
 DOCS_PER_SHARD = 1 << (30 - TABLE_POS_BITS)
 
+# ranked scoring: constraint keys sort as (key << SCORE_DELTA_BITS | delta)
+# int64 composites, so the FIRST entry of an equal-key run carries the run's
+# minimum slot delta (|dist| <= near_window <= 15 fits 4 bits); one
+# searchsorted then answers both "member within band?" and "at what delta?"
+SCORE_DELTA_BITS = 4
+
 
 def batch_table_specs(T: int, G: int, F: int, C: int, M: int,
                       owner: bool = False) -> dict:
@@ -67,10 +77,12 @@ def batch_table_specs(T: int, G: int, F: int, C: int, M: int,
         "req_dist": jax.ShapeDtypeStruct((T, G, F), i32),
         "max_abs": jax.ShapeDtypeStruct((T, G, F), i32),
         "pivot_from_dist": jax.ShapeDtypeStruct((T, G, F), jnp.bool_),
+        "score_from_dist": jax.ShapeDtypeStruct((T, G, F), jnp.bool_),
         "band": jax.ShapeDtypeStruct((T, G), i32),
         "active": jax.ShapeDtypeStruct((T, G), jnp.bool_),
         "doc_task": jax.ShapeDtypeStruct((T,), jnp.bool_),
         "shard_base": jax.ShapeDtypeStruct((T,), i32),
+        "score_bias": jax.ShapeDtypeStruct((T,), jnp.float32),
         "ns_packed": jax.ShapeDtypeStruct((T, C, M), jnp.int16),
         "ns_valid": jax.ShapeDtypeStruct((T, C, M), jnp.bool_),
     }
@@ -88,10 +100,12 @@ def alloc_batch_tables(T: int, G: int, F: int, C: int, M: int) -> dict:
         "req_dist": np.full((T, G, F), NO_DIST, np.int32),
         "max_abs": np.full((T, G, F), NO_MAX_ABS, np.int32),
         "pivot_from_dist": np.zeros((T, G, F), bool),
+        "score_from_dist": np.zeros((T, G, F), bool),
         "band": np.zeros((T, G), np.int32),
         "active": np.zeros((T, G), bool),
         "doc_task": np.zeros((T,), bool),
         "shard_base": np.zeros((T,), np.int32),
+        "score_bias": np.zeros((T,), np.float32),
         "ns_packed": np.full((T, C, M), -1, np.int16),
         "ns_valid": np.zeros((T, C, M), bool),
     }

@@ -49,6 +49,12 @@ class MultiKeyIndex:
     n_base: int
     n_stop: int
     neighbor_distance: int   # = IndexParams.near_window at build time
+    # size dial (IndexParams.triple_pair_min_count): when triples are gated
+    # to the common (s1, s2) stop pairs, this holds the ADMITTED pairs as a
+    # sorted array of packed s1 * n_stop + s2 codes (s1 < s2).  None = every
+    # pair admitted (no gating).  The planner falls back to two two-component
+    # lookups for non-admitted pairs — semantics identical, postings differ.
+    triple_stop_pairs: np.ndarray | None = None
 
     @property
     def n_pair_postings(self) -> int:
@@ -81,6 +87,17 @@ class MultiKeyIndex:
     def find_pair(self, stop_id: int, v: int) -> tuple[int, int]:
         """(start, end) slice of the (s, v) postings in the multi stream."""
         return self.pairs.find(int(pack_multi_pair_key(stop_id, v, self.n_base)))
+
+    def has_triple_pair(self, s1: int, s2: int) -> bool:
+        """True when (s1, s2) triples were admitted at build time (always
+        true without gating) — the planner's triple-vs-two-pairs dispatch."""
+        if self.triple_stop_pairs is None:
+            return True
+        a, b = (s1, s2) if s1 < s2 else (s2, s1)
+        code = a * self.n_stop + b
+        i = int(np.searchsorted(self.triple_stop_pairs, code))
+        return i < len(self.triple_stop_pairs) and \
+            int(self.triple_stop_pairs[i]) == code
 
     def find_triple(self, s1: int, s2: int, v: int) -> tuple[int, int]:
         """(start, end) slice of the (s1, s2, v) postings in the multi

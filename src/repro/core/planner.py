@@ -54,6 +54,12 @@ class ResolvedFetch:
     pivot_from_dist: bool = False  # expanded, near mode: pivot pos = pos + dist
     stop_checks: tuple = ()        # ((delta, stop_local), ...) via stream 3
     read_near_stop: bool = False   # stream 3 is read alongside (counts twice)
+    # ranking metadata (arXiv:2108.00410): this fetch's postings are keyed at
+    # the anchor and their |dist| payload IS the slot word's distance from it
+    # (near-mode expanded / multi-key fetches) — the score contribution reads
+    # w(|dist|).  False => the slot's distance is the banded key distance
+    # (full-list fetches) or 0 (precise-phrase keys).
+    score_delta_from_dist: bool = False
 
     @property
     def postings_read(self) -> int:
@@ -65,6 +71,8 @@ class FetchGroup:
     slot: int
     fetches: list[ResolvedFetch]
     band: int = 0                  # intersection band width vs. the anchor
+    score_slot: Optional[int] = None   # the query slot this group scores
+                                       # (None: covers several slots / a part)
 
     @property
     def postings_read(self) -> int:
@@ -79,6 +87,11 @@ class SubPlan:
     fallback_groups: list[FetchGroup] = dataclasses.field(default_factory=list)
     supported: bool = True
     note: str = ""
+    n_slots: int = 0               # query slots of this tier combination —
+                                   # the ranked executors' per-anchor score is
+                                   # biased by (n_slots - len(groups)) so
+                                   # every slot contributes exactly once even
+                                   # when groups merge or imply slots
 
     @property
     def postings_read(self) -> int:
@@ -144,7 +157,12 @@ class Planner:
     # -- public API ---------------------------------------------------------
 
     def plan(self, surface_ids: list[int], mode: str = MODE_PHRASE,
-             window: Optional[int] = None) -> QueryPlan:
+             window: Optional[int] = None, ranked: bool = False) -> QueryPlan:
+        """`ranked=True` plans for per-slot proximity scoring: multi-key stop
+        slots stay one pair group per slot (no triple merging, no identical-
+        form-set dedup) so every slot carries its own distance payload —
+        match semantics are identical, only the group decomposition differs.
+        """
         if window is None:
             # near-mode default: the near window (2*(MaxLength-1)) — every
             # slot of the paper's 2.2 every-other-word procedure is within
@@ -153,7 +171,9 @@ class Planner:
         form_lists = [self.index.analyzer.forms_of(s) for s in surface_ids]
         subplans = []
         for tiered in self._split_by_tier(form_lists):
-            subplans.append(self._plan_subquery(tiered, mode, window))
+            sp = self._plan_subquery(tiered, mode, window, ranked)
+            sp.n_slots = len(tiered)
+            subplans.append(sp)
         return QueryPlan(subplans=subplans)
 
     # -- query splitting (paper: PROCESSING QUERIES) -------------------------
@@ -171,13 +191,13 @@ class Planner:
 
     # -- classification + dispatch ------------------------------------------
 
-    def _plan_subquery(self, tiered, mode, window) -> SubPlan:
+    def _plan_subquery(self, tiered, mode, window, ranked=False) -> SubPlan:
         tiers = [t for t, _ in tiered]
         if all(t == TIER_STOP for t in tiers):
             return self._plan_type1(tiered)
         if any(t == TIER_STOP for t in tiers):
             if mode == MODE_NEAR and self.windowed_near_stop:
-                return self._plan_type5(tiered, window)
+                return self._plan_type5(tiered, window, ranked)
             return self._plan_type4(tiered, mode, window)
         if all(t == TIER_FREQUENT for t in tiers):
             return self._plan_type2(tiered, mode, window)
@@ -200,7 +220,8 @@ class Planner:
             if e > s:
                 fetches.append(ResolvedFetch(stream=stream, start=s, length=e - s,
                                              offset=slot))
-        return FetchGroup(slot=slot, fetches=fetches, band=band)
+        return FetchGroup(slot=slot, fetches=fetches, band=band,
+                          score_slot=slot)
 
     def _pivot_group(self, slot, forms, stop_checks) -> FetchGroup:
         """Pivot occurrences verified against near-stop stream 3 (Type 4)."""
@@ -247,9 +268,10 @@ class Planner:
                     fetches.append(ResolvedFetch(
                         stream="expanded", start=s, length=e - s,
                         offset=anchor_offset, max_abs_dist=window,
-                        pivot_from_dist=not mirrored))
+                        pivot_from_dist=not mirrored,
+                        score_delta_from_dist=True))
                 break   # canonical orientation found
-        return FetchGroup(slot=slot, fetches=fetches, band=0)
+        return FetchGroup(slot=slot, fetches=fetches, band=0, score_slot=slot)
 
     def _fallback_groups(self, tiered) -> list[FetchGroup]:
         """Distance-disregarding doc search: stream 1 only (paper step 3)."""
@@ -386,8 +408,9 @@ class Planner:
             if e > st:
                 fetches.append(ResolvedFetch(
                     stream="multi", start=st, length=e - st, offset=slot,
-                    max_abs_dist=window, pivot_from_dist=True))
-        return FetchGroup(slot=slot, fetches=fetches, band=0)
+                    max_abs_dist=window, pivot_from_dist=True,
+                    score_delta_from_dist=True))
+        return FetchGroup(slot=slot, fetches=fetches, band=0, score_slot=slot)
 
     def _triple_group(self, slot, s1, s2, pivot_forms, window) -> Optional[FetchGroup]:
         """(s1, s2, pivot) three-component lookup covering TWO stop slots in
@@ -403,7 +426,8 @@ class Planner:
             if e > st:
                 fetches.append(ResolvedFetch(
                     stream="multi", start=st, length=e - st, offset=slot,
-                    max_abs_dist=window, pivot_from_dist=False))
+                    max_abs_dist=window, pivot_from_dist=False,
+                    score_delta_from_dist=True))
         if not fetches:
             return None
         return FetchGroup(slot=slot, fetches=fetches, band=0)
@@ -419,16 +443,28 @@ class Planner:
             if e > s:
                 fetches.append(ResolvedFetch(stream="ordinary", start=s,
                                              length=e - s, offset=slot))
-        return FetchGroup(slot=slot, fetches=fetches, band=window)
+        return FetchGroup(slot=slot, fetches=fetches, band=window,
+                          score_slot=slot)
 
-    def _multi_key_groups(self, stop_slots, pivot_forms, window) -> list[FetchGroup]:
+    def _multi_key_groups(self, stop_slots, pivot_forms, window,
+                          ranked=False) -> list[FetchGroup]:
         """One constraint group per distinct stop-slot form set: identical
         form sets impose identical window constraints (one occurrence may
         satisfy several slots), single-form slots with distinct forms pair
-        into three-component lookups, the rest use two-component lookups."""
+        into three-component lookups, the rest use two-component lookups.
+
+        `ranked` keeps one PAIR group per stop slot (no triple merging, no
+        dedup): each slot then carries its own |dist| payload, which is what
+        the per-slot proximity score reads.  Triples gated off at build time
+        (IndexParams.triple_pair_min_count — uncommon (s1, s2) pairs) fall
+        back to the same two pair lookups; semantics are identical either
+        way, only postings_read differs."""
         mk = self.index.multi_key
         if window > mk.neighbor_distance:
             return [self._ordinary_band_group(i, forms, window)
+                    for i, forms in stop_slots]
+        if ranked:
+            return [self._pair_group(i, forms, pivot_forms, window)
                     for i, forms in stop_slots]
         uniq, seen = [], set()
         for i, forms in stop_slots:
@@ -439,8 +475,12 @@ class Planner:
             uniq.append((i, forms))
         groups = []
         singles = [(i, forms[0]) for i, forms in uniq if len(forms) == 1]
+        pair_back = []        # gated (uncommon) triples -> two pair lookups
         for k in range(0, len(singles) - 1, 2):
-            (i1, s1), (_i2, s2) = singles[k], singles[k + 1]
+            (i1, s1), (i2, s2) = singles[k], singles[k + 1]
+            if not mk.has_triple_pair(int(s1), int(s2)):
+                pair_back.extend([(i1, s1), (i2, s2)])
+                continue
             g = self._triple_group(i1, s1, s2, pivot_forms, window)
             if g is None:
                 # the stops never co-occur near any pivot form, so the
@@ -449,14 +489,15 @@ class Planner:
                 g = FetchGroup(slot=i1, fetches=[], band=0)
             groups.append(g)
         if len(singles) % 2:
-            i, s = singles[-1]
+            pair_back.append(singles[-1])
+        for i, s in pair_back:
             groups.append(self._pair_group(i, (s,), pivot_forms, window))
         for i, forms in uniq:
             if len(forms) > 1:
                 groups.append(self._pair_group(i, forms, pivot_forms, window))
         return groups
 
-    def _plan_type5(self, tiered, window) -> SubPlan:
+    def _plan_type5(self, tiered, window, ranked=False) -> SubPlan:
         """Windowed near-mode subquery containing stop forms: split around
         the stop words (arXiv:1812.07640) — the pivot's own occurrences
         seed, non-stop slots constrain as in Type 3 near, and every stop
@@ -477,6 +518,7 @@ class Planner:
             groups.append(g)
         stop_slots = [(i, forms) for i, (t, forms) in enumerate(tiered)
                       if t == TIER_STOP]
-        groups.extend(self._multi_key_groups(stop_slots, pivot_forms, window))
+        groups.extend(self._multi_key_groups(stop_slots, pivot_forms, window,
+                                             ranked=ranked))
         return SubPlan(qtype=QTYPE_MULTI, mode=MODE_NEAR, groups=groups,
                        fallback_groups=self._fallback_groups(tiered))

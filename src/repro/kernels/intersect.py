@@ -89,6 +89,63 @@ def banded_intersect_rows_pallas(a2d: jax.Array, b2d: jax.Array,
     return fn(lo_tiles, n_tiles, bands, a2d, b2d)
 
 
+def _kernel_rows_min_delta(lo_ref, nt_ref, band_ref, a_ref, bk_ref, bd_ref,
+                           o_ref):
+    """Scoring twin of `_kernel_rows` (proximity relevance, api.py): for each
+    a element, the MINIMUM over in-band b of (|a - b_key| + b_delta) — key
+    distance plus the posting's stored slot delta — accumulated as an int32
+    min across the visited b tiles.  I32_SENTINEL = no in-band b (the
+    membership bit and the score read the same output)."""
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, I32_SENTINEL)
+
+    @pl.when(k < nt_ref[i])
+    def _compute():
+        band = band_ref[i]
+        a = a_ref[...]                       # (RA, 128) int32
+        bk = bk_ref[...]                     # (RB, 128) int32
+        bd = bd_ref[...]                     # (RB, 128) int32
+        kd = jnp.abs(a[:, :, None, None] - bk[None, None, :, :])
+        cand = jnp.where(kd <= band, kd + bd[None, None, :, :], I32_SENTINEL)
+        o_ref[...] = jnp.minimum(o_ref[...], cand.min(axis=(2, 3)))
+
+
+def banded_min_delta_rows_pallas(a2d: jax.Array, bk2d: jax.Array,
+                                 bd2d: jax.Array, lo_tiles: jax.Array,
+                                 n_tiles: jax.Array, bands: jax.Array, *,
+                                 block_a: int, block_b: int, max_tiles: int,
+                                 interpret: bool = True) -> jax.Array:
+    """Raw pallas_call for the batched min-delta rows (layout identical to
+    banded_intersect_rows_pallas, plus the aligned b_delta planes)."""
+    ra, rb = block_a // LANES, block_b // LANES
+    n_a_blocks = a2d.shape[0] // ra
+    n_b_blocks = bk2d.shape[0] // rb
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_a_blocks, max_tiles),
+        in_specs=[
+            pl.BlockSpec((ra, LANES), lambda i, k, lo, nt, bd: (i, 0)),
+            pl.BlockSpec((rb, LANES),
+                         lambda i, k, lo, nt, bd: (jnp.minimum(lo[i] + k, n_b_blocks - 1), 0)),
+            pl.BlockSpec((rb, LANES),
+                         lambda i, k, lo, nt, bd: (jnp.minimum(lo[i] + k, n_b_blocks - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((ra, LANES), lambda i, k, lo, nt, bd: (i, 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel_rows_min_delta,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(a2d.shape, jnp.int32),
+        interpret=interpret,
+    )
+    return fn(lo_tiles, n_tiles, bands, a2d, bk2d, bd2d)
+
+
 def banded_intersect_pallas(a2d: jax.Array, b2d: jax.Array, lo_tiles: jax.Array,
                             n_tiles: jax.Array, *, band: int, block_a: int,
                             block_b: int, max_tiles: int,

@@ -17,8 +17,13 @@ from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.flash_prefill import flash_prefill_pallas
 from repro.kernels.intersect import (I32_SENTINEL, banded_intersect_pallas,
-                                     banded_intersect_rows_pallas)
+                                     banded_intersect_rows_pallas,
+                                     banded_min_delta_rows_pallas)
 from repro.kernels.segment_bag import segment_bag_pallas
+
+_SDB = 4      # delta bits of the (key << 4 | delta) scoring composite
+              # (== core.fetch_tables.SCORE_DELTA_BITS; kept literal here so
+              # the kernel layer stays import-free of core)
 
 
 def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
@@ -152,6 +157,94 @@ def banded_intersect_rows(a: jax.Array, b_sorted: jax.Array, bands: jax.Array,
         interpret=interpret)
     found = out2d.reshape(N, pa) > 0
     return found & (a != I32_SENTINEL)
+
+
+def banded_min_delta_rows(a: jax.Array, b_key_sorted: jax.Array,
+                          b_delta: jax.Array, bands: jax.Array, *,
+                          implementation: str = "pallas",
+                          interpret: bool = True, block_a: int = 1024,
+                          block_b: int = 1024) -> jax.Array:
+    """Batched banded min-delta (the proximity-scoring twin of
+    `banded_intersect_rows`): out[n, i] = min over j with
+    |a[n, i] - b_key[n, j]| <= bands[n] of (|a[n, i] - b_key[n, j]| +
+    b_delta[n, j]), or I32_SENTINEL when no such j — so `< I32_SENTINEL` is
+    exactly the banded-membership bit and the value feeds w(d) = 1/(1+d).
+
+    b rows must be sorted by (key, delta) — the composite order the batch
+    executor sorts into — and, per plan construction, rows with bands[n] > 0
+    carry all-zero deltas (dist-carrying fetches are always band-0): the
+    two-probe ref path is exact exactly on that domain, while the Pallas
+    dense-tile path computes the general min.  deltas in [0, 15]
+    (SCORE_DELTA_BITS); I32_SENTINEL entries of `a` never match.
+    """
+    assert a.dtype == jnp.int32 and b_key_sorted.dtype == jnp.int32
+    N, pa = a.shape
+    pb = b_key_sorted.shape[1]
+    if implementation == "ref":
+        pad = jnp.int64(1) << 40
+        comp = jnp.where(b_key_sorted == I32_SENTINEL, pad,
+                         (b_key_sorted.astype(jnp.int64) << _SDB)
+                         | b_delta.astype(jnp.int64))
+        probe = jnp.where(a == I32_SENTINEL, pad, a.astype(jnp.int64) << _SDB)
+
+        def row(cv, pv, band):
+            idx = jnp.searchsorted(cv, pv, side="left")
+            hi = jnp.clip(idx, 0, pb - 1)
+            lo = jnp.clip(idx - 1, 0, pb - 1)
+            e_hi, e_lo = cv[hi], cv[lo]
+            a_key = pv >> _SDB
+            kd_hi = (e_hi >> _SDB) - a_key
+            kd_lo = a_key - (e_lo >> _SDB)
+            ok_hi = (idx < pb) & (kd_hi <= band)
+            ok_lo = (idx > 0) & (kd_lo <= band)
+            big = jnp.int32(I32_SENTINEL)
+            mask = jnp.int64((1 << _SDB) - 1)
+            c_hi = jnp.where(ok_hi, kd_hi.astype(jnp.int32)
+                             + (e_hi & mask).astype(jnp.int32), big)
+            c_lo = jnp.where(ok_lo, kd_lo.astype(jnp.int32)
+                             + (e_lo & mask).astype(jnp.int32), big)
+            return jnp.minimum(c_hi, c_lo)
+
+        out = jax.vmap(row)(comp, probe, bands.astype(jnp.int64))
+        return jnp.where(a == I32_SENTINEL, I32_SENTINEL, out)
+
+    if N == 0 or pa == 0 or pb == 0:
+        return jnp.full((N, pa), I32_SENTINEL, jnp.int32)
+
+    def pick_block(p, req):
+        for blk in range(max(min(req, p) // 128 * 128, 128), 127, -128):
+            if p % blk == 0:
+                return blk
+        raise ValueError(f"row width {p} not a multiple of 128")
+
+    block_a = pick_block(pa, block_a)
+    block_b = pick_block(pb, block_b)
+    nab_pp = pa // block_a
+    nbb_pp = pb // block_b
+
+    a_t = a.reshape(N, nab_pp, block_a)
+    amin = a_t.min(axis=2).astype(jnp.int64)
+    amax = a_t.max(axis=2).astype(jnp.int64)
+    b_block_min = b_key_sorted.reshape(N, nbb_pp, block_b)[:, :, 0].astype(jnp.int64)
+    band64 = bands.astype(jnp.int64)[:, None]
+    lo = jax.vmap(lambda bm, q: jnp.searchsorted(bm, q, side="left"))(
+        b_block_min, amin - band64)
+    lo = jnp.clip(lo - 1, 0, nbb_pp - 1)
+    hi = jax.vmap(lambda bm, q: jnp.searchsorted(bm, q, side="right"))(
+        b_block_min, amax + band64)
+    n_tiles = jnp.maximum(hi - lo, 0).astype(jnp.int32)
+    row_base = (jnp.arange(N, dtype=jnp.int64) * nbb_pp)[:, None]
+    lo_abs = (lo + row_base).astype(jnp.int32)
+    band_per_block = jnp.broadcast_to(bands.astype(jnp.int32)[:, None],
+                                      (N, nab_pp))
+    out2d = banded_min_delta_rows_pallas(
+        a.reshape(-1, 128), b_key_sorted.reshape(-1, 128),
+        b_delta.astype(jnp.int32).reshape(-1, 128),
+        lo_abs.reshape(-1), n_tiles.reshape(-1), band_per_block.reshape(-1),
+        block_a=block_a, block_b=block_b, max_tiles=nbb_pp,
+        interpret=interpret)
+    out = out2d.reshape(N, pa)
+    return jnp.where(a == I32_SENTINEL, I32_SENTINEL, out)
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,7 @@ Two modes:
   lm     — greedy decode from a smoke LM with the KV cache serve_step.
 
     PYTHONPATH=src python -m repro.launch.serve --mode search --queries 32
+    PYTHONPATH=src python -m repro.launch.serve --mode search --ranked --top-k 5
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch llama3-8b
 """
 from __future__ import annotations
@@ -21,10 +22,10 @@ import numpy as np
 from repro.configs.registry import get_arch
 
 
-def serve_search(n_queries: int):
-    from repro.core import (CorpusConfig, LexiconConfig, build_all,
-                            generate_corpus, make_lexicon_and_analyzer)
-    from repro.core.planner import MODE_PHRASE
+def serve_search(n_queries: int, ranked: bool = False, top_k: int = 10):
+    from repro.core import (CorpusConfig, LexiconConfig, MODE_NEAR,
+                            SearchRequest, build_all, generate_corpus,
+                            make_lexicon_and_analyzer)
     from repro.launch.mesh import make_host_mesh
     from repro.serve.search_serve import SearchServe, SearchServeConfig
     lex_cfg = LexiconConfig(n_surface=20_000, n_base=15_000, n_stop=400,
@@ -39,21 +40,33 @@ def serve_search(n_queries: int):
     serve = SearchServe(index, cfg, mesh)
 
     rng = np.random.default_rng(0)
-    queries = []
-    while len(queries) < n_queries:
+    requests = []
+    while len(requests) < n_queries:
         d = int(rng.integers(corpus.n_docs))
         toks = corpus.doc(d)
         if len(toks) < 10:
             continue
         st = int(rng.integers(len(toks) - 6))
-        queries.append(toks[st:st + 3].tolist())
-    results = serve.search_batch(queries, modes=MODE_PHRASE)   # warm
+        if ranked:
+            requests.append(SearchRequest(toks[st:st + 6:2].tolist(),
+                                          mode=MODE_NEAR, rank=True,
+                                          top_k=top_k))
+        else:
+            requests.append(SearchRequest(toks[st:st + 3].tolist()))
+    results = serve.search_batch(requests)   # warm
     t0 = time.perf_counter()
-    results = serve.search_batch(queries, modes=MODE_PHRASE)
+    results = serve.search_batch(requests)
     dt = time.perf_counter() - t0
-    print(f"[serve/search] {n_queries} queries in {dt*1e3:.1f} ms "
+    label = "ranked top-%d" % top_k if ranked else "phrase"
+    print(f"[serve/search] {n_queries} {label} queries in {dt*1e3:.1f} ms "
           f"({dt/n_queries*1e6:.0f} us/query, CPU, {serve.n_dp} doc shard(s)); "
           f"hit counts: {[len(r.doc) for r in results[:8]]}...")
+    if ranked:
+        r = next((r for r in results if r.doc_ids is not None
+                  and len(r.doc_ids)), None)
+        if r is not None:
+            print(f"[serve/search] sample ranking: "
+                  f"{[(h.doc, round(h.score, 3)) for h in r.hits[:5]]}")
 
 
 def serve_lm(arch: str, n_tokens: int):
@@ -82,9 +95,12 @@ def main():
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--ranked", action="store_true",
+                    help="near-mode queries with proximity ranking")
+    ap.add_argument("--top-k", type=int, default=10)
     args = ap.parse_args()
     if args.mode == "search":
-        serve_search(args.queries)
+        serve_search(args.queries, ranked=args.ranked, top_k=args.top_k)
     else:
         serve_lm(args.arch, args.tokens)
 

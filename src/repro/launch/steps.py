@@ -441,7 +441,8 @@ def _search_cell(arch_id, shape_name, shape, mesh, smoke=False) -> Cell:
         n_basic=shape.get("n_basic", base.n_basic),
         n_expanded=shape.get("n_expanded", base.n_expanded),
         n_stop=shape.get("n_stop", base.n_stop),
-        n_multi=shape.get("n_multi", base.n_multi))
+        n_multi=shape.get("n_multi", base.n_multi),
+        ranked=shape.get("ranked", base.ranked))
     dp_n = _dp_size(mesh)
     arenas = ss.arena_specs(cfg, dp_n)
     queries = ss.query_table_specs(cfg)
@@ -451,7 +452,7 @@ def _search_cell(arch_id, shape_name, shape, mesh, smoke=False) -> Cell:
     step = ss.make_search_serve_step(cfg, mesh)
     meta = {"queries": cfg.queries, "groups": cfg.groups,
             "postings_pad": cfg.postings_pad, "arena_per_shard": cfg.n_arena,
-            "n_shards": dp_n}
+            "n_shards": dp_n, "ranked": cfg.ranked}
     return Cell(arch_id, shape_name, "search_serve", step,
                 (arenas, queries), (a_shard, q_shard), None, meta=meta)
 

@@ -35,9 +35,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.api import SearchRequest, SearchResponse, as_request
 from repro.core.batch_executor import BatchExecutor, bucket_step_math
 from repro.core.builder import IndexSet
-from repro.core.executor import SENTINEL, SearchResult
+from repro.core.engine import _coerce_requests
+from repro.core.executor import SENTINEL
 from repro.core.fetch_tables import batch_table_specs
 from repro.core.planner import MODE_PHRASE, Planner
 
@@ -69,6 +71,9 @@ class SearchServeConfig:
     n_multi: int = 12_000_000      # multi-component key postings (pairs+triples)
     impl: str = "ref"              # intersect implementation (ref | pallas)
     interpret: bool = True         # pallas interpreter (True on CPU hosts)
+    ranked: bool = False           # dry-run cells: lower the proximity-scored
+                                   # step variant (serving always compiles
+                                   # both lazily as ranked requests arrive)
 
     @property
     def n_arena(self) -> int:
@@ -116,8 +121,14 @@ def query_table_specs(cfg: SearchServeConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def make_search_serve_step(cfg: SearchServeConfig, mesh):
-    """Returns step(arenas, tables) -> (keys [T, F*P0] int64, found bool).
+def make_search_serve_step(cfg: SearchServeConfig, mesh,
+                           ranked: bool | None = None):
+    """Returns step(arenas, tables) -> (keys [T, F*P0] int64, found bool)
+    — plus proximity scores [T, F*P0] float32 when `ranked` (default:
+    cfg.ranked), computed by the SAME bucket math the engine jit's and
+    merged across shards right after the int64 pmin (scores ride a pmax:
+    every row is owned by exactly one dp shard, so both collectives are
+    pure "take the owner's result").
 
     arenas: dict of stacked per-shard arrays (leading dim = n_dp shards),
     sharded P(dp); tables: dict per query_table_specs, replicated — each
@@ -125,6 +136,8 @@ def make_search_serve_step(cfg: SearchServeConfig, mesh):
     replicated: `keys` holds the seed's global 63-bit keys where `found`,
     SENTINEL elsewhere — exactly what the batch executor's merge consumes.
     """
+    if ranked is None:
+        ranked = cfg.ranked
     dp = _dp_axes(mesh)
     P0, Pc = cfg.p_seed, cfg.postings_pad
 
@@ -135,22 +148,32 @@ def make_search_serve_step(cfg: SearchServeConfig, mesh):
         own = t["owner"] == me
         tt = {k: v for k, v in t.items() if k != "owner"}
         tt["active"] = t["active"] & own[:, None]
-        a64, found = bucket_step_math(
+        out = bucket_step_math(
             arena_doc[0], arena_pos[0], arena_dist[0], basic_ns[0], tt,
-            P0=P0, P=Pc, impl=cfg.impl, interpret=cfg.interpret)
-        # every row is owned by exactly one dp shard: min-combining the
-        # SENTINEL-masked keys is a pure "take the owner's result"
+            P0=P0, P=Pc, impl=cfg.impl, interpret=cfg.interpret,
+            ranked=ranked)
+        if ranked:
+            a64, found, scores = out
+        else:
+            a64, found = out
         a64 = jnp.where(found & own[:, None], a64, SENTINEL)
         a64 = jax.lax.pmin(a64, dp)
-        return a64, a64 < SENTINEL
+        if not ranked:
+            return a64, a64 < SENTINEL
+        scores = jnp.where(found & own[:, None], scores, -1.0)
+        scores = jax.lax.pmax(scores, dp)
+        hit = a64 < SENTINEL
+        return a64, hit, jnp.where(hit, scores, 0.0)
 
     spec_shard = P(dp)
     spec_rep = P()
     q_specs = {k: spec_rep for k in query_table_specs(cfg)}
+    out_specs = (spec_rep, spec_rep, spec_rep) if ranked \
+        else (spec_rep, spec_rep)
     fn = shard_map(local, mesh=mesh,
                    in_specs=(spec_shard, spec_shard, spec_shard, spec_shard,
                              q_specs),
-                   out_specs=(spec_rep, spec_rep), check_vma=False)
+                   out_specs=out_specs, check_vma=False)
 
     def step(arenas: dict, tables: dict):
         return fn(arenas["arena_doc"], arenas["arena_pos"],
@@ -188,7 +211,14 @@ class _ServeBatchExecutor(BatchExecutor):
         self.shards_per_dp = max(1, -(-d.n_shards // self.n_dp))
         self.docs_per_dp = dps * self.shards_per_dp
         self._build_dp_arenas(index)
-        self._step = jax.jit(make_search_serve_step(cfg, mesh))
+        self._steps = {False: jax.jit(make_search_serve_step(cfg, mesh,
+                                                            ranked=False))}
+
+    def _step_for(self, ranked: bool):
+        if ranked not in self._steps:
+            self._steps[ranked] = jax.jit(
+                make_search_serve_step(self.cfg, self.mesh, ranked=ranked))
+        return self._steps[ranked]
 
     def _build_dp_arenas(self, index: IndexSet):
         """Bucket the global arena to its owning dp shard host-side: shard d
@@ -245,8 +275,19 @@ class _ServeBatchExecutor(BatchExecutor):
         return True
 
     def _run_rows(self, rows: list):
+        # ranked and unranked rows run through separate fixed-shape step
+        # variants (the scoring pass is a different program); each keeps the
+        # chunking and start-remapping of the base executor
+        for ranked in (False, True):
+            self._run_rows_variant([r for r in rows if r.task.ranked == ranked],
+                                   ranked)
+
+    def _run_rows_variant(self, rows: list, ranked: bool):
+        if not rows:
+            return
         cfg = self.cfg
         R, G, F = cfg.task_rows, cfg.groups, cfg.fetch_slots
+        step = self._step_for(ranked)
         for lo in range(0, len(rows), R):
             part = rows[lo:lo + R]
             t = self._tensorize_bucket(part, G, F, cfg.check_slots,
@@ -263,13 +304,22 @@ class _ServeBatchExecutor(BatchExecutor):
             t["owner"] = owner
             tj = {k: jnp.asarray(v) for k, v in t.items()}
             with self.mesh:
-                a64, found = self._step(self.arenas, tj)
-            self._scatter_row_keys(part, np.asarray(a64), np.asarray(found))
+                out = step(self.arenas, tj)
+            if ranked:
+                a64, found, scores = out
+                self._scatter_row_keys(part, np.asarray(a64),
+                                       np.asarray(found), np.asarray(scores))
+            else:
+                a64, found = out
+                self._scatter_row_keys(part, np.asarray(a64),
+                                       np.asarray(found))
 
 
 class SearchServe:
-    """End-to-end distributed serving facade: plan → serve tables → shard_map
-    step → merged SearchResults, bit-identical to `engine.search_batch`.
+    """End-to-end distributed serving facade: SearchRequests → plan → serve
+    tables → shard_map step → merged SearchResponses, bit-identical to
+    `engine.search_batch` — ranked top-k included (the scoring pass is the
+    same bucket math, merged right after the cross-shard pmin).
 
     Plans that exceed the fixed table shapes run through the flexible
     executor host-side (the same escape hatch the engine uses)."""
@@ -287,19 +337,38 @@ class SearchServe:
     def n_dp(self) -> int:
         return self.executor.n_dp
 
+    def plan_request(self, request: SearchRequest):
+        return self.planner.plan(list(request.surface_ids),
+                                 mode=request.mode, window=request.window,
+                                 ranked=request.rank)
+
     def plan(self, surface_ids, mode: str = MODE_PHRASE,
-             window: int | None = None):
-        return self.planner.plan(list(surface_ids), mode=mode, window=window)
+             window: int | None = None, ranked: bool = False):
+        """Host-side plan introspection (not a search entry point)."""
+        return self.planner.plan(list(surface_ids), mode=mode, window=window,
+                                 ranked=ranked)
 
-    def execute_batch(self, plans, max_results: int | None = None
-                      ) -> list[SearchResult]:
-        return self.executor.execute_batch(plans, max_results=max_results)
+    def execute_batch(self, plans, requests=None,
+                      max_results: int | None = None) -> list[SearchResponse]:
+        return self.executor.execute_batch(plans, requests=requests,
+                                           max_results=max_results)
 
-    def search_batch(self, queries, modes: str | list = MODE_PHRASE,
+    def search(self, request, mode: str = MODE_PHRASE,
+               window: int | None = None,
+               max_results: int | None = None) -> SearchResponse:
+        if not isinstance(request, SearchRequest):
+            request = as_request(request, mode, window, max_results,
+                                 what="SearchServe.search")
+        return self.search_batch([request])[0]
+
+    def search_batch(self, requests, modes: str | list = MODE_PHRASE,
                      window: int | None = None,
-                     max_results: int | None = None) -> list[SearchResult]:
-        if isinstance(modes, str):
-            modes = [modes] * len(queries)
-        plans = [self.plan(q, mode=m, window=window)
-                 for q, m in zip(queries, modes)]
-        return self.execute_batch(plans, max_results=max_results)
+                     max_results: int | None = None) -> list[SearchResponse]:
+        """A batch of SearchRequests through the distributed step.  The
+        positional (queries, modes=...) form is a deprecated shim."""
+        requests = list(requests)
+        if not all(isinstance(r, SearchRequest) for r in requests):
+            requests = _coerce_requests(requests, modes, window, max_results,
+                                        what="SearchServe.search_batch")
+        plans = [self.plan_request(r) for r in requests]
+        return self.execute_batch(plans, requests=requests)

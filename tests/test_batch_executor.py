@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import AdditionalIndexEngine, BatchExecutor, brute_force_search
+from repro.core import (AdditionalIndexEngine, BatchExecutor,
+                        SearchRequest, brute_force_search)
 from repro.core.planner import MODE_NEAR, MODE_PHRASE
 from repro.kernels import ops
 
@@ -64,19 +65,21 @@ def _same_result(r1, r2) -> bool:
 def test_search_batch_matches_per_query(small_world):
     eng = small_world["engine"]
     queries, modes = _mixed_batch(small_world)
-    batch = eng.search_batch(queries, modes=modes)
+    batch = eng.search_batch([SearchRequest(q, mode=m)
+                              for q, m in zip(queries, modes)])
     assert len(batch) == len(queries)
     for q, m, got in zip(queries, modes, batch):
-        want = eng.search(q, mode=m)
+        want = eng.search(SearchRequest(q, mode=m))
         assert _same_result(want, got), (q, m)
 
 
 def test_search_batch_matches_per_query_ordinary(small_world):
     base = small_world["ordinary"]
     queries, modes = _mixed_batch(small_world, n=24, seed=3)
-    batch = base.search_batch(queries, modes=modes)
+    batch = base.search_batch([SearchRequest(q, mode=m)
+                               for q, m in zip(queries, modes)])
     for q, m, got in zip(queries, modes, batch):
-        want = base.search(q, mode=m)
+        want = base.search(SearchRequest(q, mode=m))
         assert _same_result(want, got), (q, m)
 
 
@@ -86,7 +89,8 @@ def test_search_batch_matches_brute_force(small_world):
     eng = small_world["engine"]
     corpus, index = small_world["corpus"], small_world["index"]
     queries, modes = _mixed_batch(small_world, n=20, seed=5)
-    batch = eng.search_batch(queries, modes=modes)
+    batch = eng.search_batch([SearchRequest(q, mode=m)
+                              for q, m in zip(queries, modes)])
     for q, m, r in zip(queries, modes, batch):
         positional, doc_level = brute_force_search(corpus, index, q, mode=m)
         if r.doc_only:
@@ -110,10 +114,10 @@ def test_search_batch_fallback_queries_in_batch(small_world):
             continue
         queries.append([int(t1[3]), int(t2[5]), int(t1[7])])
     assert queries
-    batch = eng.search_batch(queries, modes=MODE_PHRASE)
+    batch = eng.search_batch([SearchRequest(q) for q in queries])
     n_fallback = 0
     for q, r in zip(queries, batch):
-        want = eng.search(q, mode=MODE_PHRASE)
+        want = eng.search(SearchRequest(q, mode=MODE_PHRASE))
         assert _same_result(want, r)
         n_fallback += int(r.used_fallback)
     assert n_fallback > 0    # the batch did exercise the fallback path
@@ -123,8 +127,9 @@ def test_search_batch_pallas_matches_ref(small_world):
     eng_p = AdditionalIndexEngine(small_world["index"], batch_impl="pallas")
     eng_r = small_world["engine"]
     queries, modes = _mixed_batch(small_world, n=16, seed=7)
-    bp = eng_p.search_batch(queries, modes=modes)
-    br = eng_r.search_batch(queries, modes=modes)
+    reqs = [SearchRequest(q, mode=m) for q, m in zip(queries, modes)]
+    bp = eng_p.search_batch(reqs)
+    br = eng_r.search_batch(reqs)
     for a, b in zip(bp, br):
         assert np.array_equal(a.doc, b.doc) and np.array_equal(a.pos, b.pos)
 
@@ -132,9 +137,10 @@ def test_search_batch_pallas_matches_ref(small_world):
 def test_search_batch_max_results(small_world):
     eng = small_world["engine"]
     queries, modes = _mixed_batch(small_world, n=6, seed=13)
-    batch = eng.search_batch(queries, modes=modes, max_results=2)
+    batch = eng.search_batch([SearchRequest(q, mode=m, top_k=2)
+                              for q, m in zip(queries, modes)])
     for q, m, r in zip(queries, modes, batch):
-        want = eng.search(q, mode=m, max_results=2)
+        want = eng.search(SearchRequest(q, mode=m, top_k=2))
         assert np.array_equal(want.doc, r.doc)
         assert len(r.doc) <= 2
 
@@ -158,7 +164,7 @@ def test_batch_executor_flex_escape_hatch(small_world):
     finally:
         bx.P_CAP, bx.F_SPLIT_CAP = old_cap, old_split
     for q, m, r in zip(queries, modes, got):
-        want = eng.search(q, mode=m)
+        want = eng.search(SearchRequest(q, mode=m))
         assert _same_result(want, r)
 
 
@@ -203,7 +209,7 @@ def test_boundary_many_and_groups_routes_flex(small_world):
     assert queries, "no >G_CAP-group windows found"
     assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
     for q, r in zip(queries, be.execute_batch(plans)):
-        assert _same_result(eng.search(q, mode=MODE_PHRASE), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_PHRASE)), r), q
         _assert_oracle(small_world, q, MODE_PHRASE, r)
 
 
@@ -228,7 +234,7 @@ def test_boundary_many_fetches_per_group_routes_flex(small_world):
     finally:
         bx.F_CAP = old
     for q, m, r in zip(queries, modes, got):
-        assert _same_result(eng.search(q, mode=m), r), (q, m)
+        assert _same_result(eng.search(SearchRequest(q, mode=m)), r), (q, m)
         _assert_oracle(small_world, q, m, r)
 
 
@@ -255,7 +261,7 @@ def test_boundary_long_fetches_stay_batched(small_world):
     finally:
         bx.P_CAP = old
     for q, m, r in zip(queries, modes, got):
-        assert _same_result(eng.search(q, mode=m), r), (q, m)
+        assert _same_result(eng.search(SearchRequest(q, mode=m)), r), (q, m)
         _assert_oracle(small_world, q, m, r)
 
 
@@ -282,7 +288,7 @@ def test_boundary_position_overflow_routes_flex():
     plans = [eng.plan(q, mode=MODE_PHRASE) for q in queries]
     assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
     for q, r in zip(queries, be.execute_batch(plans)):
-        assert _same_result(eng.search(q, mode=MODE_PHRASE), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_PHRASE)), r), q
         _assert_oracle({"corpus": corpus, "index": index}, q, MODE_PHRASE, r)
 
 
@@ -294,8 +300,9 @@ def test_search_batch_segmented_shards_match(small_world, dps):
     assert eng.batch_executor.dev.n_shards > 1
     ref = small_world["engine"]
     queries, modes = _mixed_batch(small_world, n=24, seed=19)
-    for q, m, got in zip(queries, modes, eng.search_batch(queries, modes=modes)):
-        assert _same_result(ref.search(q, mode=m), got), (q, m, dps)
+    for q, m, got in zip(queries, modes, eng.search_batch(
+            [SearchRequest(q, mode=m) for q, m in zip(queries, modes)])):
+        assert _same_result(ref.search(SearchRequest(q, mode=m)), got), (q, m, dps)
 
 
 # ---------------------------------------------------------------------------
@@ -326,6 +333,43 @@ def test_banded_intersect_rows_matches_ref(N, Pa, Pb, seed):
     assert bool((got == want).all())
     # sentinel entries never match
     assert not np.asarray(got)[:, -7:].any()
+
+
+@pytest.mark.parametrize("N,Pa,Pb,seed", [(4, 256, 256, 0), (9, 512, 1024, 1),
+                                          (1, 128, 128, 3)])
+def test_banded_min_delta_rows_matches_ref(N, Pa, Pb, seed):
+    """Pallas vs ref for the proximity-scoring kernel, on the valid domain:
+    band-0 rows carry mixed stored deltas (dist-fetch groups), band>0 rows
+    all-zero deltas (full-list groups) — rows sorted by (key, delta)."""
+    from repro.core.fetch_tables import TABLE_BIAS, TABLE_POS_BITS
+    rng = np.random.default_rng(seed)
+    doc_a = rng.integers(0, 50, (N, Pa))
+    doc_b = rng.integers(0, 50, (N, Pb))
+    pos_a = rng.integers(0, 400, (N, Pa))
+    pos_b = rng.integers(0, 400, (N, Pb))
+    a = ((doc_a << TABLE_POS_BITS) | (pos_a + TABLE_BIAS)).astype(np.int32)
+    bk = ((doc_b << TABLE_POS_BITS) | (pos_b + TABLE_BIAS)).astype(np.int32)
+    bands = rng.integers(0, 6, N).astype(np.int32)
+    bd = np.where(bands[:, None] == 0,
+                  rng.integers(0, 16, (N, Pb)), 0).astype(np.int32)
+    order = np.lexsort((bd, bk), axis=-1)
+    bk = np.take_along_axis(bk, order, axis=-1)
+    bd = np.take_along_axis(bd, order, axis=-1)
+    a[:, -5:] = np.iinfo(np.int32).max           # sentinel pads
+    bk[-1, :] = np.iinfo(np.int32).max           # one dead group
+    got = ops.banded_min_delta_rows(jnp.asarray(a), jnp.asarray(bk),
+                                    jnp.asarray(bd), jnp.asarray(bands))
+    want = ops.banded_min_delta_rows(jnp.asarray(a), jnp.asarray(bk),
+                                     jnp.asarray(bd), jnp.asarray(bands),
+                                     implementation="ref")
+    assert bool((got == want).all())
+    # the membership bit agrees with the boolean kernel
+    member = ops.banded_intersect_rows(jnp.asarray(a), jnp.asarray(bk),
+                                       jnp.asarray(bands),
+                                       implementation="ref")
+    assert bool(((np.asarray(got) < np.iinfo(np.int32).max)
+                 == np.asarray(member)).all())
+    assert (np.asarray(got)[:, -5:] == np.iinfo(np.int32).max).all()
 
 
 def test_banded_intersect_rows_band_isolation():

@@ -1,0 +1,461 @@
+"""Ranked search (SearchRequest.rank=True): proximity relevance per
+arXiv:2108.00410, locked to the brute-force reference on BOTH execution
+paths.
+
+  * engine `search_batch` ranked == flexible per-query ranked, bit for bit
+    (scores included), on the seeded 200-query stop-heavy suite;
+  * `SearchServe` ranked == engine ranked, bit for bit, same workload;
+  * anchor and document scores match `brute_force_ranked` (float64 literal
+    nested loops) to tolerance, and the ranked ORDER is the score order;
+  * score monotonicity on a hand-built corpus: tighter word sets and
+    repeated matches rank strictly higher;
+  * escape-hatch (flex-path) queries rank identically to the batched path;
+  * triple-gated indexes (IndexParams.triple_pair_min_count) return
+    identical results with triples answered by two pair lookups;
+  * the typed API itself: deprecation shims warn, responses carry hits /
+    provenance, top_k truncates by score.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (AdditionalIndexEngine, BatchExecutor, DocHit,
+                        IndexParams, OrdinaryEngine, RankingParams,
+                        SearchRequest, brute_force_ranked, build_all,
+                        near_query_stop_confined)
+from repro.core.builder import build_multi_key_index, expand_token_forms
+from repro.core.corpus import Corpus
+from repro.core.planner import MODE_NEAR, MODE_PHRASE, QTYPE_MULTI
+
+
+def _ranked_same(r1, r2) -> bool:
+    """Bit-identity of two ranked responses (the engine/serve contract)."""
+    same = (np.array_equal(r1.doc, r2.doc) and np.array_equal(r1.pos, r2.pos)
+            and r1.postings_read == r2.postings_read
+            and r1.doc_only == r2.doc_only
+            and r1.subplan_types == r2.subplan_types
+            and np.array_equal(r1.doc_ids, r2.doc_ids)
+            and np.array_equal(r1.doc_scores, r2.doc_scores))
+    if r1.anchor_scores is not None or r2.anchor_scores is not None:
+        same = same and np.array_equal(r1.anchor_scores, r2.anchor_scores)
+    return same
+
+
+def _assert_oracle_ranked(corpus, index, req, r, rtol=1e-4):
+    """Engine scores (float32 device accumulation) vs the float64 literal
+    oracle, anchors and docs; and the response order IS the score order."""
+    a_sc, d_sc, d_lvl = brute_force_ranked(corpus, index, req.surface_ids,
+                                           mode=req.mode, window=req.window,
+                                           ranking=req.ranking)
+    if r.doc_only:
+        assert set(r.doc.tolist()) == d_lvl, req
+        return
+    got = dict(zip(zip(r.doc.tolist(), r.pos.tolist()),
+                   r.anchor_scores.tolist()))
+    assert set(got) == set(a_sc), (req, sorted(set(got) ^ set(a_sc))[:5])
+    for k, v in got.items():
+        assert abs(v - a_sc[k]) <= rtol * max(1.0, abs(a_sc[k])), (req, k)
+    assert len(r.doc_ids) == len(set(r.doc_ids.tolist()))
+    if req.top_k is None:
+        assert set(r.doc_ids.tolist()) == set(d_sc), req
+    for d, s in zip(r.doc_ids.tolist(), r.doc_scores.tolist()):
+        assert abs(s - d_sc[d]) <= rtol * max(1.0, abs(d_sc[d])), (req, d)
+    # order: score desc, doc asc on ties
+    for i in range(len(r.doc_ids) - 1):
+        s0, s1 = float(r.doc_scores[i]), float(r.doc_scores[i + 1])
+        assert s0 > s1 or (s0 == s1 and r.doc_ids[i] < r.doc_ids[i + 1]), req
+
+
+# ---------------------------------------------------------------------------
+# oracle parity: the seeded 200-query suite, engine AND serve
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ranked_requests(stop_near_queries):
+    return [SearchRequest(q, mode=MODE_NEAR, rank=True)
+            for q, _src in stop_near_queries]
+
+
+@pytest.fixture(scope="module")
+def ranked_batch(small_world, ranked_requests):
+    return small_world["engine"].search_batch(ranked_requests)
+
+
+def test_ranked_batch_matches_flex(small_world, ranked_requests, ranked_batch):
+    """Batched ranked == per-query ranked, scores bit-identical (same
+    canonical float32 accumulation order)."""
+    eng = small_world["engine"]
+    for req, r in zip(ranked_requests[:60], ranked_batch):
+        assert _ranked_same(eng.search(req), r), req
+
+
+def test_ranked_matches_oracle(small_world, ranked_requests, ranked_batch):
+    """200 stop-heavy near queries: anchor scores, doc scores, and rank
+    order against the literal nested-loop reference."""
+    corpus, index = small_world["corpus"], small_world["index"]
+    n_multi = 0
+    for req, r in zip(ranked_requests, ranked_batch):
+        _assert_oracle_ranked(corpus, index, req, r)
+        plan = small_world["engine"].plan_request(req)
+        n_multi += int(any(sp.qtype == QTYPE_MULTI for sp in plan.subplans))
+    assert n_multi >= 150, n_multi
+
+
+def test_ranked_serve_matches_engine(small_world, ranked_requests,
+                                     ranked_batch):
+    """SearchServe ranked == engine ranked, bit for bit (the acceptance
+    contract), plus a direct oracle slice so serve parity can't hide behind
+    an engine bug."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.search_serve import SearchServe, SearchServeConfig
+    cfg = SearchServeConfig(queries=16, postings_pad=4096, seed_pad=1024,
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1,
+                            n_multi=1)
+    serve = SearchServe(small_world["index"], cfg,
+                        make_host_mesh(data=1, model=1))
+    got = serve.search_batch(ranked_requests)
+    for req, w, g in zip(ranked_requests, ranked_batch, got):
+        assert _ranked_same(w, g), req
+    for req, g in list(zip(ranked_requests, got))[:25]:
+        _assert_oracle_ranked(small_world["corpus"], small_world["index"],
+                              req, g)
+
+
+def test_ranked_mixed_with_unranked_batch(small_world, stop_near_queries):
+    """Ranked and unranked requests mix in ONE batch; each behaves exactly
+    as in a uniform batch."""
+    eng = small_world["engine"]
+    sample = stop_near_queries[:20]
+    reqs = [SearchRequest(q, mode=MODE_NEAR, rank=bool(i % 2))
+            for i, (q, _src) in enumerate(sample)]
+    mixed = eng.search_batch(reqs)
+    for req, r in zip(reqs, mixed):
+        assert r.ranked == req.rank
+        if req.rank:
+            assert _ranked_same(eng.search(req), r), req
+        else:
+            want = eng.search(req)
+            assert np.array_equal(want.doc, r.doc), req
+            assert np.array_equal(want.pos, r.pos), req
+            assert r.anchor_scores is None and r.doc_ids is None
+
+
+def test_ranked_paper_modes(small_world, paper_queries):
+    """Phrase + near paper-procedure queries (Types 1-4 incl. tier splits):
+    ranked responses match the oracle on both modes."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    reqs = [SearchRequest(q, mode=m, rank=True) for q, m, _s in
+            paper_queries[:40]]
+    for req, r in zip(reqs, eng.search_batch(reqs)):
+        assert _ranked_same(eng.search(req), r), req
+        _assert_oracle_ranked(corpus, index, req, r)
+
+
+def test_ranked_ordinary_engine(small_world, paper_queries):
+    """The Sphinx-style baseline ranks through the same executor: batched ==
+    flexible bit for bit, order follows scores, and phrase-mode scores have
+    the closed form n_slots * n_anchors (every slot at exact offset).  (The
+    baseline picks its pivot over ALL slots including stops, so the
+    additional-index oracle's anchor sets don't apply to its near mode.)"""
+    base = small_world["ordinary"]
+    reqs = [SearchRequest(q, mode=m, rank=True) for q, m, _s in
+            paper_queries[:16]]
+    n_phrase = 0
+    for req, r in zip(reqs, base.search_batch(reqs)):
+        assert _ranked_same(base.search(req), r), req
+        if r.doc_only or not len(r.doc):
+            continue
+        for i in range(len(r.doc_ids) - 1):
+            s0, s1 = float(r.doc_scores[i]), float(r.doc_scores[i + 1])
+            assert s0 > s1 or (s0 == s1
+                               and r.doc_ids[i] < r.doc_ids[i + 1]), req
+        if req.mode == MODE_PHRASE:
+            n = len(req.surface_ids)
+            for d, s in zip(r.doc_ids.tolist(), r.doc_scores.tolist()):
+                n_anchors = int((r.doc == d).sum())
+                assert abs(s - n * n_anchors) < 1e-4, (req, d, s)
+            n_phrase += 1
+    assert n_phrase >= 4
+
+
+# ---------------------------------------------------------------------------
+# score monotonicity: closer phrase => higher score
+# ---------------------------------------------------------------------------
+
+
+def _single_form_ordinary_surfaces(world, n):
+    """Surfaces whose only basic form is ordinary-tier (and distinct)."""
+    from repro.core import TIER_ORDINARY
+    lex, ana = world["lex"], world["ana"]
+    out, used = [], set()
+    for s in range(len(ana.primary)):
+        forms = ana.forms_of(s)
+        if len(forms) != 1 or forms[0] in used:
+            continue
+        if int(lex.base_tier[forms[0]]) != TIER_ORDINARY:
+            continue
+        used.add(forms[0])
+        out.append(s)
+        if len(out) == n:
+            return out
+    pytest.skip("not enough single-form ordinary surfaces")
+
+
+def test_score_monotonicity_distance(small_world):
+    """Hand-built docs with the same two words at growing gaps: w(d) is
+    strictly decreasing, so the ranked order is exactly the gap order —
+    and a doc holding TWO tight matches outranks every single-match doc."""
+    a, b, filler = _single_form_ordinary_surfaces(small_world, 3)
+    gaps = [1, 2, 4, 6]
+    docs = [[a] + [filler] * g + [b] + [filler] * 3 for g in gaps]
+    # doc 4: two adjacent (gap-1) occurrences of the pair
+    docs.append([a, filler, b] + [filler] * 2 + [a, filler, b])
+    tokens = np.concatenate([np.array(d, np.int32) for d in docs])
+    offsets = np.zeros(len(docs) + 1, np.int64)
+    np.cumsum([len(d) for d in docs], out=offsets[1:])
+    corpus = Corpus(doc_offsets=offsets, tokens=tokens)
+    index = build_all(corpus, small_world["lex"], small_world["ana"])
+    eng = AdditionalIndexEngine(index)
+
+    req = SearchRequest([a, b], mode=MODE_NEAR, rank=True)
+    r = eng.search(req)
+    assert not r.doc_only
+    _assert_oracle_ranked(corpus, index, req, r)
+    # two tight matches beat one; then by gap ascending
+    assert r.doc_ids.tolist()[0] == 4, r.doc_ids
+    assert r.doc_ids.tolist()[1:] == [0, 1, 2, 3], r.doc_ids
+    scores = r.doc_scores.tolist()
+    assert all(s0 > s1 for s0, s1 in zip(scores, scores[1:])), scores
+    # the closed form: g fillers => |pos_b - pos_a| = g + 1, so doc score
+    # = 1 (pivot) + w(g + 1) = 1 + 1/(2+g) per anchor
+    for d, g in enumerate(gaps):
+        want = 1.0 + 1.0 / (2.0 + g)
+        got = float(r.doc_scores[r.doc_ids.tolist().index(d)])
+        assert abs(got - want) < 1e-5, (d, got, want)
+
+
+def test_score_monotonicity_proximity_scale(small_world):
+    """RankingParams.proximity_scale multiplies every positional score;
+    order is invariant."""
+    eng = small_world["engine"]
+    corpus = small_world["corpus"]
+    for d in range(corpus.n_docs):
+        toks = corpus.doc(d)
+        if len(toks) < 8:
+            continue
+        base = SearchRequest(toks[0:8:2].tolist(), mode=MODE_NEAR, rank=True)
+        r1 = eng.search(base)
+        if r1.doc_only or not len(r1.doc):
+            continue
+        scaled = dataclasses.replace(
+            base, ranking=RankingParams(proximity_scale=2.5))
+        r2 = eng.search(scaled)
+        assert np.array_equal(r1.doc_ids, r2.doc_ids)
+        assert np.allclose(r2.doc_scores, 2.5 * r1.doc_scores, rtol=1e-6)
+        return
+    pytest.fail("no positional near query found in the corpus")
+
+
+# ---------------------------------------------------------------------------
+# boundary: flex-path (escape-hatch) queries rank identically
+# ---------------------------------------------------------------------------
+
+
+def test_flex_escape_ranks_identically(small_world, stop_near_queries):
+    """Caps shrunk so every plan routes to the flexible executor: ranked
+    output (scores included) must be IDENTICAL to the batched path."""
+    import repro.core.batch_executor as bx
+    eng = small_world["engine"]
+    sample = stop_near_queries[:16]
+    reqs = [SearchRequest(q, mode=MODE_NEAR, rank=True) for q, _ in sample]
+    plans = [eng.plan_request(r) for r in reqs]
+    want = eng.search_batch(reqs)
+    be = BatchExecutor(small_world["index"], flex=eng.executor)
+    old_cap, old_split = bx.P_CAP, bx.F_SPLIT_CAP
+    bx.P_CAP, bx.F_SPLIT_CAP = 8, 2
+    try:
+        routed = [not be._build_tasks(i, p, [], ranked=True)
+                  for i, p in enumerate(plans)]
+        assert any(routed), "nothing routed to flex"
+        got = be.execute_batch(plans, requests=reqs)
+    finally:
+        bx.P_CAP, bx.F_SPLIT_CAP = old_cap, old_split
+    for req, w, g in zip(reqs, want, got):
+        assert _ranked_same(w, g), req
+
+
+def test_position_overflow_ranks_identically():
+    """17-bit position overflow: the whole index is flex-only; ranked
+    results still match the oracle."""
+    from repro.core import (CorpusConfig, LexiconConfig, generate_corpus,
+                            make_lexicon_and_analyzer,
+                            near_query_contains_stop)
+    lc = LexiconConfig(n_surface=2000, n_base=1500, n_stop=50,
+                       n_frequent=200, seed=5)
+    lex, ana = make_lexicon_and_analyzer(lc)
+    corpus = generate_corpus(lc, CorpusConfig(n_docs=2, mean_doc_len=150_000,
+                                              seed=5))
+    index = build_all(corpus, lex, ana)
+    eng = AdditionalIndexEngine(index)
+    assert eng.batch_executor._pos_budget <= 0
+    toks = corpus.doc(0)
+    rng = np.random.default_rng(9)
+    reqs = []
+    while len(reqs) < 3:
+        st = int(rng.integers(0, len(toks) - 8))
+        q = toks[st:st + 8:2].tolist()
+        if near_query_contains_stop(lex, ana, q):
+            reqs.append(SearchRequest(q, mode=MODE_NEAR, rank=True))
+    for req, r in zip(reqs, eng.search_batch(reqs)):
+        assert _ranked_same(eng.search(req), r), req
+        _assert_oracle_ranked(corpus, index, req, r)
+
+
+# ---------------------------------------------------------------------------
+# triple gating (multi-key size dial): two pair lookups, same answers
+# ---------------------------------------------------------------------------
+
+
+def test_triple_gating_parity(small_world, stop_near_queries):
+    """An index whose triples are gated to common (s1, s2) pairs answers
+    every query identically (the planner falls back to two pair lookups);
+    postings_read may differ — that's the dial's price."""
+    index = small_world["index"]
+    tf = expand_token_forms(small_world["corpus"], index.lexicon,
+                            index.analyzer)
+    params = dataclasses.replace(index.params, triple_pair_min_count=20)
+    gated_mk = build_multi_key_index(tf, index.lexicon, params)
+    assert gated_mk.triple_stop_pairs is not None
+    assert gated_mk.n_triple_postings < index.multi_key.n_triple_postings
+    assert gated_mk.n_pair_postings == index.multi_key.n_pair_postings
+    gated_index = dataclasses.replace(index, multi_key=gated_mk,
+                                      params=params)
+    eng = small_world["engine"]
+    eng_gated = AdditionalIndexEngine(gated_index)
+    sample = stop_near_queries[:40]
+    reqs = [SearchRequest(q, mode=MODE_NEAR) for q, _ in sample]
+    for req, w, g in zip(reqs, eng.search_batch(reqs),
+                         eng_gated.search_batch(reqs)):
+        assert np.array_equal(w.doc, g.doc), req
+        assert np.array_equal(w.pos, g.pos), req
+        assert w.doc_only == g.doc_only, req
+    # gated pairs really do take the two-pair fallback somewhere
+    n_pairs_only = 0
+    for req in reqs:
+        plan = eng_gated.plan_request(req)
+        for sp in plan.subplans:
+            if sp.qtype != QTYPE_MULTI:
+                continue
+            n_pairs_only += sum(
+                1 for g in sp.groups for f in g.fetches
+                if f.stream == "multi" and f.pivot_from_dist)
+    assert n_pairs_only > 0
+    # ranked requests agree bit-for-bit too (ranked plans never use triples)
+    rreqs = [dataclasses.replace(r, rank=True) for r in reqs[:12]]
+    for req, w, g in zip(rreqs, eng.search_batch(rreqs),
+                         eng_gated.search_batch(rreqs)):
+        assert _ranked_same(w, g), req
+
+
+def test_triple_gate_all_common_is_identity(small_world):
+    """min_count=1 keeps every triple: the gate must be a no-op."""
+    index = small_world["index"]
+    tf = expand_token_forms(small_world["corpus"], index.lexicon,
+                            index.analyzer)
+    params = dataclasses.replace(index.params, triple_pair_min_count=1)
+    mk = build_multi_key_index(tf, index.lexicon, params)
+    assert mk.n_triple_postings == index.multi_key.n_triple_postings
+    assert mk.has_triple_pair(0, 1) or mk.triple_stop_pairs is not None
+
+
+# ---------------------------------------------------------------------------
+# the typed API itself
+# ---------------------------------------------------------------------------
+
+
+def test_score_delta_bits_constants_agree():
+    """The kernel layer keeps its own literal of the composite delta width
+    (it must not import core); pin the two constants together so widening
+    SCORE_DELTA_BITS can't silently desync the ref/pallas unpacking."""
+    from repro.core.fetch_tables import SCORE_DELTA_BITS
+    from repro.kernels.ops import _SDB
+    assert _SDB == SCORE_DELTA_BITS
+
+
+def test_legacy_signatures_warn(small_world):
+    eng = small_world["engine"]
+    q = small_world["corpus"].doc(0)[:3].tolist()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        r_old = eng.search(q, mode=MODE_PHRASE)
+        eng.search_batch([q], modes=MODE_PHRASE)
+    assert sum(issubclass(x.category, DeprecationWarning) for x in rec) >= 2
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        r_new = eng.search(SearchRequest(q, mode=MODE_PHRASE))
+    assert np.array_equal(r_old.doc, r_new.doc)
+
+
+def test_response_hits_and_provenance(small_world, stop_near_queries):
+    """Ranked DocHits: score desc, positions per doc, and subplan indices
+    that actually contributed the doc."""
+    eng = small_world["engine"]
+    for q, _src in stop_near_queries:
+        req = SearchRequest(q, mode=MODE_NEAR, rank=True)
+        r = eng.search(req)
+        if r.doc_only or not len(r.doc):
+            continue
+        hits = r.hits
+        assert [h.doc for h in hits] == r.doc_ids.tolist()
+        for h in hits:
+            assert isinstance(h, DocHit)
+            assert np.array_equal(np.sort(r.pos[r.doc == h.doc]), h.positions)
+            assert h.subplans, h                      # some subplan made it
+            assert all(0 <= i < len(r.subplan_types) for i in h.subplans)
+        break
+    else:
+        pytest.skip("no positional ranked result in the suite")
+
+
+def test_top_k_truncates_by_score(small_world, paper_queries):
+    eng = small_world["engine"]
+    for q, m, _src in paper_queries:
+        full = eng.search(SearchRequest(q, mode=m, rank=True))
+        if full.doc_only or len(full.doc_ids) < 3:
+            continue
+        k = 2
+        cut = eng.search(SearchRequest(q, mode=m, rank=True, top_k=k))
+        assert len(cut.doc_ids) == k
+        assert np.array_equal(cut.doc_ids, full.doc_ids[:k])
+        assert np.array_equal(cut.doc_scores, full.doc_scores[:k])
+        # unranked top_k keeps the legacy max_results truncation
+        un = eng.search(SearchRequest(q, mode=m, top_k=k))
+        assert len(un.doc) <= k
+        return
+    pytest.skip("no query with 3+ ranked docs")
+
+
+def test_doc_only_fallback_ranked(small_world):
+    """Cross-document scrambles: ranked responses fall back to doc-only
+    hits at RankingParams.doc_only_score."""
+    corpus = small_world["corpus"]
+    eng = small_world["engine"]
+    rng = np.random.default_rng(23)
+    for _ in range(12):
+        d1, d2 = rng.integers(corpus.n_docs, size=2)
+        t1, t2 = corpus.doc(int(d1)), corpus.doc(int(d2))
+        if len(t1) < 8 or len(t2) < 8:
+            continue
+        req = SearchRequest([int(t1[3]), int(t2[5]), int(t1[7])], rank=True)
+        r = eng.search(req)
+        if not r.used_fallback or not r.doc_only:
+            continue
+        assert np.array_equal(r.doc_ids, r.doc)
+        assert (r.doc_scores == np.float32(req.ranking.doc_only_score)).all()
+        assert _ranked_same(eng.search_batch([req])[0], r)
+        return
+    pytest.skip("no fallback query found")

@@ -6,6 +6,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core import SearchRequest
 from repro.core.planner import MODE_NEAR, MODE_PHRASE
 from repro.launch.mesh import make_host_mesh
 from repro.serve.search_serve import (SearchServe, SearchServeConfig,
@@ -54,14 +55,13 @@ def test_serve_matches_engine_on_paper_queries(small_world, serve_setup,
     def stop_confined(q, m):
         return near_query_stop_confined(lex, ana, q, m)
 
-    queries = [q for q, _m, _s in paper_queries]
-    modes = [m for _q, m, _s in paper_queries]
-    got = serve_setup.search_batch(queries, modes=modes)
-    want_batch = eng.search_batch(queries, modes=modes)
+    reqs = [SearchRequest(q, mode=m) for q, m, _s in paper_queries]
+    got = serve_setup.search_batch(reqs)
+    want_batch = eng.search_batch(reqs)
     missed = 0
     for (q, m, src), w, g in zip(paper_queries, want_batch, got):
         _assert_same(w, g, (q, m))
-        _assert_same(eng.search(q, mode=m), g, (q, m))
+        _assert_same(eng.search(SearchRequest(q, mode=m)), g, (q, m))
         if not stop_confined(q, m):
             missed += int(src not in set(g.doc.tolist()))
     assert missed == 0
@@ -87,10 +87,9 @@ def test_serve_covers_multi_subplan_and_multi_form(small_world, serve_setup,
             picked.append((q, m))
     assert multi_sub >= 3, "workload has no tier-split queries"
     assert multi_form >= 3, "workload has no multi-form groups"
-    queries = [q for q, _ in picked]
-    modes = [m for _, m in picked]
-    for (q, m), w, g in zip(picked, eng.search_batch(queries, modes=modes),
-                            serve_setup.search_batch(queries, modes=modes)):
+    reqs = [SearchRequest(q, mode=m) for q, m in picked]
+    for (q, m), w, g in zip(picked, eng.search_batch(reqs),
+                            serve_setup.search_batch(reqs)):
         _assert_same(w, g, (q, m))
 
 
@@ -108,10 +107,10 @@ def test_serve_fallback_queries(small_world, serve_setup):
             continue
         queries.append([int(t1[3]), int(t2[5]), int(t1[7])])
     assert queries
-    got = serve_setup.search_batch(queries, modes=MODE_PHRASE)
+    got = serve_setup.search_batch([SearchRequest(q) for q in queries])
     n_fallback = 0
     for q, g in zip(queries, got):
-        _assert_same(eng.search(q, mode=MODE_PHRASE), g, q)
+        _assert_same(eng.search(SearchRequest(q, mode=MODE_PHRASE)), g, q)
         n_fallback += int(g.used_fallback)
     assert n_fallback > 0
 
@@ -125,10 +124,9 @@ def test_serve_multi_shard_parity(small_world, paper_queries):
                         docs_per_shard=16)
     assert serve.executor.dev.n_shards >= 8
     sample = paper_queries[:24]
-    queries = [q for q, _m, _s in sample]
-    modes = [m for _q, m, _s in sample]
-    for (q, m, _), w, g in zip(sample, eng.search_batch(queries, modes=modes),
-                               serve.search_batch(queries, modes=modes)):
+    reqs = [SearchRequest(q, mode=m) for q, m, _s in sample]
+    for (q, m, _), w, g in zip(sample, eng.search_batch(reqs),
+                               serve.search_batch(reqs)):
         _assert_same(w, g, (q, m))
 
 
@@ -172,3 +170,11 @@ def test_serve_smoke_dryrun_shapes():
     assert keys.shape == (R, cfg.fetch_slots * cfg.p_seed)
     assert found.shape == (R, cfg.fetch_slots * cfg.p_seed)
     assert keys.dtype == jax.numpy.int64 and found.dtype == jax.numpy.bool_
+    # the ranked variant (serve_ranked dry-run shape) lowers with a third
+    # float32 score output on the same row layout
+    import dataclasses
+    rstep = make_search_serve_step(dataclasses.replace(cfg, ranked=True), mesh)
+    with mesh:
+        rkeys, rfound, rscores = jax.jit(rstep)(arenas, t)
+    assert rscores.shape == rkeys.shape == keys.shape
+    assert rscores.dtype == jax.numpy.float32

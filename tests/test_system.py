@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import brute_force_search
+from repro.core import SearchRequest, brute_force_search
 from repro.core.planner import MODE_NEAR, MODE_PHRASE
 
 
@@ -20,7 +20,7 @@ def test_engine_matches_oracle(small_world, paper_queries):
     n_checked = 0
     for q, mode, _src in paper_queries[:60]:
         truth_pos, truth_doc = brute_force_search(corpus, idx, q, mode=mode)
-        r = eng.search(q, mode=mode)
+        r = eng.search(SearchRequest(q, mode=mode))
         got_pos, got_doc = _result_sets(r)
         if got_pos is None:
             # fallback fired: distance-aware truth must be empty, and the
@@ -42,7 +42,7 @@ def test_source_document_always_found(small_world, paper_queries):
     eng = small_world["engine"]
     idx, corpus = small_world["index"], small_world["corpus"]
     for q, mode, src in paper_queries:
-        r = eng.search(q, mode=mode)
+        r = eng.search(SearchRequest(q, mode=mode))
         docs = set(r.doc.tolist())
         if mode == "phrase":
             assert src in docs, (q, src)
@@ -62,8 +62,8 @@ def test_postings_read_improvement(small_world, paper_queries):
     eng, base = small_world["engine"], small_world["ordinary"]
     ratios = []
     for q, mode, _ in paper_queries:
-        pr_add = eng.search(q, mode=mode).postings_read
-        pr_ord = base.search(q, mode=mode).postings_read
+        pr_add = eng.search(SearchRequest(q, mode=mode)).postings_read
+        pr_ord = base.search(SearchRequest(q, mode=mode)).postings_read
         assert pr_add >= 0 and pr_ord > 0
         ratios.append(pr_ord / max(pr_add, 1))
     ratios = np.array(ratios)
@@ -79,7 +79,7 @@ def test_ordinary_engine_phrase_exact(small_world, paper_queries):
     for q, mode, _ in paper_queries[:20]:
         if mode != "phrase":
             continue
-        r = base.search(q, mode="phrase")
+        r = base.search(SearchRequest(q, mode="phrase"))
         got, _ = _result_sets(r)
         # strict-order scan
         T = corpus.n_tokens
@@ -127,5 +127,5 @@ def test_long_stop_phrase_split(small_world):
         pytest.skip("no 7-stop run in test corpus")
     doc_of = corpus.doc_ids_per_token()
     q = corpus.tokens[start:start + 7].tolist()
-    r = eng.search(q, mode="phrase")
+    r = eng.search(SearchRequest(q, mode="phrase"))
     assert int(doc_of[start]) in set(r.doc.tolist())

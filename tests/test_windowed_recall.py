@@ -23,7 +23,8 @@ import numpy as np
 import pytest
 
 from repro.core import (AdditionalIndexEngine, BatchExecutor,
-                        brute_force_search, near_query_stop_confined)
+                        SearchRequest, brute_force_search,
+                        near_query_stop_confined)
 from repro.core.planner import MODE_NEAR, MODE_PHRASE, QTYPE_MULTI
 
 HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
@@ -58,8 +59,8 @@ def test_engine_batch_matches_windowed_oracle(small_world, stop_near_queries):
     brute-force answer (no Type-4 confinement), bit for bit."""
     eng = small_world["engine"]
     corpus, index = small_world["corpus"], small_world["index"]
-    queries = [q for q, _src in stop_near_queries]
-    results = eng.search_batch(queries, modes=MODE_NEAR)
+    results = eng.search_batch([SearchRequest(q, mode=MODE_NEAR)
+                                for q, _src in stop_near_queries])
     n_multi = 0
     for (q, _src), r in zip(stop_near_queries, results):
         _assert_oracle(corpus, index, q, MODE_NEAR, r)
@@ -73,9 +74,10 @@ def test_engine_batch_matches_per_query_on_stop_near(small_world,
     """Batched and flexible executors agree on the new plan type."""
     eng = small_world["engine"]
     sample = stop_near_queries[:60]
-    results = eng.search_batch([q for q, _ in sample], modes=MODE_NEAR)
+    results = eng.search_batch([SearchRequest(q, mode=MODE_NEAR)
+                                for q, _ in sample])
     for (q, _), r in zip(sample, results):
-        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_NEAR)), r), q
 
 
 def test_windowed_recall_promise(small_world, stop_near_queries):
@@ -90,7 +92,7 @@ def test_windowed_recall_promise(small_world, stop_near_queries):
     for q, src in stop_near_queries:
         if near_query_stop_confined(lex, ana, q, MODE_NEAR):
             continue          # all-stop-only: sequential semantics, exempt
-        r = eng.search(q, mode=MODE_NEAR)
+        r = eng.search(SearchRequest(q, mode=MODE_NEAR))
         if src not in set(r.doc.tolist()):
             truth_pos, truth_doc = brute_force_search(corpus, index, q,
                                                       mode=MODE_NEAR)
@@ -124,9 +126,10 @@ def test_serve_matches_windowed_oracle(small_world, windowed_serve,
     included."""
     eng = small_world["engine"]
     corpus, index = small_world["corpus"], small_world["index"]
-    queries = [q for q, _src in stop_near_queries]
-    got = windowed_serve.search_batch(queries, modes=MODE_NEAR)
-    want = eng.search_batch(queries, modes=MODE_NEAR)
+    reqs = [SearchRequest(q, mode=MODE_NEAR)
+            for q, _src in stop_near_queries]
+    got = windowed_serve.search_batch(reqs)
+    want = eng.search_batch(reqs)
     for (q, _src), w, g in zip(stop_near_queries, want, got):
         assert _same_result(w, g), q
     # direct oracle check on a slice, so serve parity can't hide behind a
@@ -165,7 +168,7 @@ def test_boundary_multi_split_overflow_routes_flex(small_world,
     finally:
         bx.P_CAP, bx.F_SPLIT_CAP = old_cap, old_split
     for (q, _), r in zip(sample, got):
-        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_NEAR)), r), q
         _assert_oracle(corpus, index, q, MODE_NEAR, r)
     # moderate shrink: splits fit, the multi plans STAY batched
     bx.P_CAP = 8
@@ -179,7 +182,7 @@ def test_boundary_multi_split_overflow_routes_flex(small_world,
     finally:
         bx.P_CAP = old_cap
     for (q, _), r in zip(sample, got2):
-        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_NEAR)), r), q
 
 
 def test_boundary_position_overflow_with_multi_routes_flex():
@@ -211,7 +214,7 @@ def test_boundary_position_overflow_with_multi_routes_flex():
     assert any(sp.qtype == QTYPE_MULTI for p in plans for sp in p.subplans)
     assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
     for q, r in zip(queries, be.execute_batch(plans)):
-        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_NEAR)), r), q
         _assert_oracle(corpus, index, q, MODE_NEAR, r)
 
 
@@ -249,7 +252,7 @@ def test_boundary_many_groups_with_multi_routes_flex(small_world):
     assert queries, "no >G_CAP stop-mixed near windows found"
     assert all(not be._build_tasks(i, p, []) for i, p in enumerate(plans))
     for q, r in zip(queries, be.execute_batch(plans)):
-        assert _same_result(eng.search(q, mode=MODE_NEAR), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_NEAR)), r), q
         _assert_oracle(small_world["corpus"], index, q, MODE_NEAR, r)
 
 
@@ -286,20 +289,21 @@ def test_wide_window_beyond_reach_matches_oracle(small_world,
     # fell back: basic fetches present (reach exceeded), no expanded ones
     streams = {f.stream for g in sp.groups for f in g.fetches}
     assert streams == {"basic"}
-    r = eng.search(t2_query, mode=MODE_NEAR, window=W)
+    r = eng.search(SearchRequest(t2_query, mode=MODE_NEAR, window=W))
     _assert_oracle(corpus, index, t2_query, MODE_NEAR, r, window=W)
     assert not r.doc_only and len(r.doc) > 0      # non-vacuous
 
     # stop-containing near queries: stop slots become banded ordinary reads
     sample = stop_near_queries[:10]
-    got = eng.search_batch([q for q, _ in sample], modes=MODE_NEAR, window=W)
+    got = eng.search_batch([SearchRequest(q, mode=MODE_NEAR, window=W)
+                            for q, _ in sample])
     n_ord = 0
     for (q, _src), r in zip(sample, got):
         plan = eng.plan(q, mode=MODE_NEAR, window=W)
         n_ord += any(f.stream == "ordinary"
                      for sp in plan.subplans if sp.supported
                      for g in sp.groups for f in g.fetches)
-        assert _same_result(eng.search(q, mode=MODE_NEAR, window=W), r), q
+        assert _same_result(eng.search(SearchRequest(q, mode=MODE_NEAR, window=W)), r), q
         _assert_oracle(corpus, index, q, MODE_NEAR, r, window=W)
     assert n_ord >= 5     # the escape path is actually exercised
 
@@ -337,5 +341,5 @@ if HAS_HYPOTHESIS:
             return
         start = data.draw(st.integers(0, len(toks) - span - 1))
         q = toks[start:start + span:stride].tolist()
-        r = eng.search(q, mode=MODE_NEAR)
+        r = eng.search(SearchRequest(q, mode=MODE_NEAR))
         _assert_oracle(corpus, index, q, MODE_NEAR, r)
