@@ -133,11 +133,16 @@ def run_serve(w, queries, batch_size: int = 64,
     reqs = _requests(queries)
     for lo in range(0, len(reqs), batch_size):      # warm
         serve.search_batch(reqs[lo:lo + batch_size])
-    t0 = time.perf_counter()
-    results = []
-    for lo in range(0, len(reqs), batch_size):
-        results.extend(serve.search_batch(reqs[lo:lo + batch_size]))
-    elapsed = time.perf_counter() - t0
+    # best-of-3, the same protocol as the batched/ranked passes — a
+    # single-shot serve_qps swings with host noise far more than the path
+    # under test, which made the serve trajectory incomparable across PRs
+    elapsed = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        results = []
+        for lo in range(0, len(reqs), batch_size):
+            results.extend(serve.search_batch(reqs[lo:lo + batch_size]))
+        elapsed = min(elapsed, time.perf_counter() - t0)
     missed, confined, seq_only = _recall_buckets(w, queries, results)
     mismatched = 0
     if per_query_results is not None:
@@ -311,6 +316,18 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
     out["multi_key_over_corpus"] = rep["multi_key_index_bytes"] / corpus_bytes
     out["multi_key_over_ordinary"] = (rep["multi_key_index_bytes"]
                                       / rep["ordinary_index_bytes"])
+    # packed block store (core/postings.py): the bytes the device arena now
+    # holds for the multi-key / expanded streams, vs the raw CSR they
+    # replace — the ISSUE-5 acceptance ratio (>= 3x), gated in CI
+    out["multi_key_packed_bytes"] = rep["multi_key_packed_bytes"]
+    out["expanded_packed_bytes"] = rep["expanded_packed_bytes"]
+    out["multi_key_index_over_packed"] = (
+        rep["multi_key_index_bytes"] / max(rep["multi_key_packed_bytes"], 1))
+    out["expanded_index_over_packed"] = (
+        rep["expanded_index_bytes"] / max(rep["expanded_packed_bytes"], 1))
+    out["multi_key_packed_over_corpus"] = \
+        rep["multi_key_packed_bytes"] / corpus_bytes
+    out["device_arena_bytes"] = eng.batch_executor.dev.device_nbytes()
     # anchor: the source paper's additional-index budget (259 GB / 45 GB
     # corpus) — the multi-key set must stay within the same constant-factor
     # regime the paper already accepts for its additional indexes
@@ -362,6 +379,13 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
 
     if write_json:
         out["ci_smoke"] = ci_smoke_baseline()
+        try:            # preserve bench_index_size's block (separate writer)
+            with open(BENCH_JSON) as fh:
+                prev_index_size = json.load(fh).get("index_size")
+        except (OSError, ValueError):
+            prev_index_size = None
+        if prev_index_size is not None:
+            out = dict(out, index_size=prev_index_size)
         with open(BENCH_JSON, "w") as fh:
             json.dump({k: v for k, v in out.items()}, fh, indent=2, sort_keys=True)
     return out
@@ -417,7 +441,13 @@ def _ci_baseline_main():
         "ranked_qps_batched": rk["ranked_qps_batched"],
         # the per-query path is the runner-speed yardstick the CI gate
         # normalizes against
-        "add_qps_per_query": ci["add_qps_per_query"]}))
+        "add_qps_per_query": ci["add_qps_per_query"],
+        # deterministic (build-time) index bytes for the CI index-bytes
+        # regression gate — a packed-store regression shows up here exactly,
+        # no timing noise involved
+        "multi_key_packed_bytes": ci["multi_key_packed_bytes"],
+        "expanded_packed_bytes": ci["expanded_packed_bytes"],
+        "device_arena_bytes": ci["device_arena_bytes"]}))
 
 
 def main():

@@ -18,12 +18,24 @@ from repro.core import (AdditionalIndexEngine, CorpusConfig, IndexParams,
 
 
 @functools.lru_cache(maxsize=2)
-def bench_world(n_docs: int = 1200, mean_doc_len: float = 800.0, seed: int = 0):
+def bench_world(n_docs: int = 1200, mean_doc_len: float = 800.0, seed: int = 0,
+                stop_mass: float | None = None):
+    """`stop_mass` re-weights the Zipf draw to a target stop-token share
+    (corpus.CorpusConfig.stop_mass) — the synthetic default lands at ~64%,
+    real running text nearer 40%, and every additional-index-over-corpus
+    ratio scales with it (the index-size benchmark's realistic mode)."""
     lc = LexiconConfig(seed=seed)         # 50k surface / 40k base / 700 / 2100
     lex, ana = make_lexicon_and_analyzer(lc)
+    stop_mask = None
+    if stop_mass is not None:
+        import numpy as _np
+        sec = ana.secondary
+        stop_mask = _np.asarray(lex.is_stop(ana.primary)
+                                | ((sec >= 0) & lex.is_stop(_np.maximum(sec, 0))))
     corpus = generate_corpus(lc, CorpusConfig(n_docs=n_docs,
                                               mean_doc_len=mean_doc_len,
-                                              seed=seed))
+                                              seed=seed, stop_mass=stop_mass),
+                             stop_mask=stop_mask)
     index = build_all(corpus, lex, ana, IndexParams())
     return {"lex": lex, "ana": ana, "corpus": corpus, "index": index,
             "engine": AdditionalIndexEngine(index),

@@ -341,9 +341,14 @@ def recsys_model_flops(meta: dict, kind: str) -> float:
 
 
 def search_model_bytes(meta: dict) -> float:
-    """The search step is memory-bound: useful bytes = postings streamed."""
+    """The search step is memory-bound: useful bytes = postings streamed.
+
+    Since the packed-postings refactor a gathered posting streams ~40 bits
+    of bit-packed doc/pos/dist lanes plus its 1/128 share of the per-block
+    anchor/width metadata (≈ 5.2 B) instead of the raw 9-byte int32/int8
+    columns."""
     Q, G, Pp = meta["queries"], meta["groups"], meta["postings_pad"]
-    per_shard = Q * G * Pp * (4 + 4 + 1) + Q * meta.get("ns_k", 20) * Pp * 4
+    per_shard = Q * G * Pp * 5.2 + Q * meta.get("ns_k", 20) * Pp * 4
     return float(per_shard * meta["n_shards"])
 
 

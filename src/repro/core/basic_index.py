@@ -15,7 +15,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.postings import DenseCSR, unpack_near_stop_slot
+from repro.core.postings import DenseCSR, PackedPostings, unpack_near_stop_slot
 
 
 @dataclasses.dataclass
@@ -24,9 +24,17 @@ class BasicIndex:
     first_occ: DenseCSR        # key = basic-form id; columns: doc, pos, count
     near_stop: np.ndarray      # [n_postings, K] int32 slots, -1 = empty (stream 3)
     max_distance: int
+    # device representation: bit-packed (doc, pos) block stores
+    packed_occ: PackedPostings | None = None
+    packed_first: PackedPostings | None = None
 
     def nbytes(self) -> int:
         return self.occurrences.nbytes() + self.first_occ.nbytes() + self.near_stop.nbytes
+
+    def packed_nbytes(self) -> int:
+        if self.packed_occ is None:
+            return 0
+        return self.packed_occ.nbytes() + self.packed_first.nbytes()
 
     def occ_count(self, base_id: int) -> int:
         return self.occurrences.count(base_id)

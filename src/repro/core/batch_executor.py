@@ -28,12 +28,15 @@ under shard_map.
 
 2. **Execute** — one jit'd call per shape bucket: gather from a unified
    posting arena (basic | expanded | stop | first | ordinary | multi
-   concatenated, so a fetch is a single dynamic-slice) → global 63-bit key construction →
-   per-row int32 re-basing against the row's `shard_base`
-   (`(doc - base) << 17 | pos'` — TPU vector units have no int64 lanes) →
-   k-way banded intersection via `ops.banded_intersect_rows` (Pallas kernel
-   with per-row dynamic bands, or the `searchsorted` ref path).  Near-stop
-   (type 4) checks mask the seed's keys in the same call.
+   concatenated block-aligned, so a fetch is a single dynamic-slice of
+   posting ordinals) → vectorized unpack of the bit-packed block store
+   (core/postings.PackedPostings lanes + per-block anchor/width metadata,
+   ops.unpack_postings — ref math or the Pallas unpack kernel) → global
+   63-bit key construction → per-row int32 re-basing against the row's
+   `shard_base` (`(doc - base) << 17 | pos'` — TPU vector units have no
+   int64 lanes) → k-way banded intersection via `ops.banded_intersect_rows`
+   (Pallas kernel with per-row dynamic bands, or the `searchsorted` ref
+   path).  Near-stop (type 4) checks mask the seed's keys in the same call.
 
 3. **Merge** — host-side, mirroring `Executor.execute` exactly: row keys are
    unioned per task, task results per query; a subplan with no positional
@@ -67,9 +70,10 @@ from repro.core.fetch_tables import (DOCS_PER_SHARD, NO_DIST,
                                      SCORE_DELTA_BITS, TABLE_POS_BITS,
                                      alloc_batch_tables, pack_ns_checks)
 from repro.core.planner import MODE_PHRASE, QueryPlan
-from repro.core.postings import PHRASE_BIAS, POS_BITS
+from repro.core.postings import (BLOCK, PHRASE_BIAS, POS_BITS, concat_packed,
+                                 pad_block_multiple)
 from repro.kernels.ops import (I32_SENTINEL, banded_intersect_rows,
-                               banded_min_delta_rows)
+                               banded_min_delta_rows, unpack_postings)
 
 # table caps: a task exceeding these routes its whole plan to the flexible
 # executor (rare: >8 AND-groups or >8 unioned form fetches per slot).
@@ -83,8 +87,43 @@ P_FLOOR = 128
 GATHER_BUDGET = 1 << 23        # max T*G*F*P elements per jit'd gather
 
 
+def ensure_packed_streams(index: IndexSet) -> dict:
+    """The six per-stream packed stores, packing any the builder didn't
+    (hand-assembled IndexSets in tests).  "multi" is the pairs-then-triples
+    concatenation, matching MultiKeyIndex.arena_columns ordinals."""
+    from repro.core.builder import _pack_stream
+    b, mk = index.basic, index.multi_key
+    if index.ordinary_packed is None:
+        index.ordinary_packed = _pack_stream(index.ordinary)
+    if b.packed_occ is None:
+        b.packed_occ = _pack_stream(b.occurrences)
+        b.packed_first = _pack_stream(b.first_occ)
+    if index.expanded.packed is None:
+        index.expanded.packed = _pack_stream(index.expanded.pairs)
+    if index.stop_phrase.packed is None:
+        index.stop_phrase.packed = _pack_stream(index.stop_phrase.phrases)
+    if mk.packed_pairs is None:
+        mk.packed_pairs = _pack_stream(mk.pairs)
+        mk.packed_triples = _pack_stream(mk.triples)
+    return {
+        "basic": b.packed_occ,
+        "expanded": index.expanded.packed,
+        "stop": index.stop_phrase.packed,
+        "first": b.packed_first,
+        "ordinary": index.ordinary_packed,
+        "multi": concat_packed([mk.packed_pairs, mk.packed_triples]),
+    }
+
+
 class BatchDeviceIndex:
-    """All six posting streams concatenated into one device arena.
+    """All six posting streams concatenated into one device arena — since
+    the packed-store refactor, a bit-packed block arena: `lanes` (int32
+    packed deltas) plus the `blk_meta` [NB, 5] per-block metadata matrix
+    (base lane word, packed widths, per-field anchors), decoded on device
+    by ops.unpack_postings.  Each
+    stream is padded to a BLOCK multiple so stream bases stay block-aligned;
+    the raw `arena_*_np` columns are kept host-side only (shard segmentation
+    + serve bucketing + build stats) and never shipped.
 
     `docs_per_shard` sets the doc-shard granularity of the segmented gather
     (≤ fetch_tables.DOCS_PER_SHARD so packed int32 keys can't overflow);
@@ -92,6 +131,7 @@ class BatchDeviceIndex:
     """
 
     def __init__(self, index: IndexSet, docs_per_shard: int | None = None):
+        packed = ensure_packed_streams(index)
         b = index.basic.occurrences
         e = index.expanded.pairs
         s = index.stop_phrase.phrases
@@ -99,7 +139,7 @@ class BatchDeviceIndex:
         m = index.multi_key.arena_columns()
         o = index.ordinary
 
-        docs, poss, dists = [], [], []
+        docs, poss, dists, reals = [], [], [], []
         self.bases = {}
         off = 0
         for name, doc, pos, dist in (
@@ -110,19 +150,33 @@ class BatchDeviceIndex:
                 ("ordinary", o.columns["doc"], o.columns["pos"], None),
                 ("multi", m["doc"], m["pos"], m["dist"])):
             self.bases[name] = off
-            off += len(doc)
-            docs.append(np.asarray(doc, np.int32))
-            poss.append(np.asarray(pos, np.int32))
-            dists.append(np.asarray(dist, np.int8) if dist is not None
-                         else np.zeros(len(doc), np.int8))
+            n_pad = packed[name].n_padded
+            assert n_pad >= len(doc)
+            off += n_pad
+            docs.append(pad_block_multiple(np.asarray(doc, np.int32), n_pad))
+            poss.append(pad_block_multiple(np.asarray(pos, np.int32), n_pad))
+            dists.append(pad_block_multiple(
+                np.asarray(dist, np.int8) if dist is not None
+                else np.zeros(len(doc), np.int8), n_pad))
+            real = np.zeros(n_pad, bool)
+            real[:len(doc)] = True
+            reals.append(real)
         self.arena_doc_np = np.concatenate(docs)
         self.arena_pos_np = np.concatenate(poss)
         self.arena_dist_np = np.concatenate(dists)
+        # pads (stream tails; incl. the multi stream's internal pair pad)
+        # must never enter a serve dp-shard selection
+        self.arena_real_np = np.concatenate(reals)
+        self.arena_real_np[self.bases["multi"]:
+                           self.bases["multi"]
+                           + index.multi_key.pair_pad][
+            index.multi_key.pairs.n_postings:] = False
+        self.packed = concat_packed([packed[n] for n in self.bases])
         self.near_stop_np = np.asarray(index.basic.near_stop, np.int16)
         # device copies are lazy: the serve tier builds per-dp-shard arenas
         # from the numpy columns and must not also hold a full global copy
         # on device
-        self._dev_arrays = None
+        self._dev_arena = None
         self.max_distance = int(index.basic.max_distance)
         self.n_docs = int(max((int(d.max()) + 1 for d in docs if len(d)),
                               default=0))
@@ -142,29 +196,23 @@ class BatchDeviceIndex:
         self.docs_per_shard = max(1, min(docs_per_shard, DOCS_PER_SHARD))
         self.n_shards = max(1, -(-self.n_docs // self.docs_per_shard))
 
-    def _dev(self, i: int):
-        if self._dev_arrays is None:
-            self._dev_arrays = (jnp.asarray(self.arena_doc_np),
-                                jnp.asarray(self.arena_pos_np),
-                                jnp.asarray(self.arena_dist_np),
-                                jnp.asarray(self.near_stop_np))
-        return self._dev_arrays[i]
-
     @property
-    def arena_doc(self):
-        return self._dev(0)
+    def device_arena(self) -> dict:
+        """The packed block arena + stream-3 slots as device arrays — the
+        only index bytes the jit'd step ever touches."""
+        if self._dev_arena is None:
+            p = self.packed
+            self._dev_arena = {
+                "lanes": jnp.asarray(p.lanes),
+                "blk_meta": jnp.asarray(p.meta_matrix()),
+                "near_stop": jnp.asarray(self.near_stop_np),
+            }
+        return self._dev_arena
 
-    @property
-    def arena_pos(self):
-        return self._dev(1)
-
-    @property
-    def arena_dist(self):
-        return self._dev(2)
-
-    @property
-    def near_stop(self):
-        return self._dev(3)
+    def device_nbytes(self) -> int:
+        """Bytes the device arena holds (packed lanes + block metadata +
+        stream-3 slots)."""
+        return self.packed.nbytes() + self.near_stop_np.nbytes
 
 
 @dataclasses.dataclass
@@ -208,23 +256,27 @@ class _Row:
     scores: np.ndarray | None = None   # ranked rows only, aligned with keys
 
 
-def bucket_step_math(arena_doc, arena_pos, arena_dist, near_stop, t, *,
+def bucket_step_math(arena, t, *,
                      P0: int, P: int, impl: str, interpret: bool,
                      presorted: bool = False, ranked: bool = False):
-    """One shape bucket of segmented rows: gather → keys → per-row int32
-    rebase against `shard_base` → banded rows intersection.  The seed
-    (group 0) gets its own pad P0 — the planner seeds with the RAREST list,
-    so the membership probe side stays narrow while constraint groups pad to
-    P.  Rows are shard-clipped host-side, so there is no per-shard device
-    loop and no in-shard masking.  Returns (seed global keys [T, F*P0]
-    int64, found [T, F*P0] bool) — plus proximity scores [T, F*P0] float32
-    when `ranked` (see api.py: bias + w(seed delta) + sum over constraint
-    groups of w(banded min key-distance + stored |dist| delta), computed in
-    this one fused pass from the postings already gathered).  Pure trace
-    function — the engine jit-wraps it (`_batch_step`) and the serve tier
-    calls it inside shard_map."""
+    """One shape bucket of segmented rows: gather packed lanes → vectorized
+    unpack (ops.unpack_postings over the bit-packed block arena) → keys →
+    per-row int32 rebase against `shard_base` → banded rows intersection.
+    The seed (group 0) gets its own pad P0 — the planner seeds with the
+    RAREST list, so the membership probe side stays narrow while constraint
+    groups pad to P.  Rows are shard-clipped host-side, so there is no
+    per-shard device loop and no in-shard masking.  `arena` is the packed
+    device dict (BatchDeviceIndex.device_arena: lanes + per-block metadata +
+    the raw stream-3 `near_stop` slots).  Returns (seed global keys
+    [T, F*P0] int64, found [T, F*P0] bool) — plus proximity scores
+    [T, F*P0] float32 when `ranked` (see api.py: bias + w(seed delta) + sum
+    over constraint groups of w(banded min key-distance + stored |dist|
+    delta), computed in this one fused pass from the postings already
+    gathered).  Pure trace function — the engine jit-wraps it
+    (`_batch_step`) and the serve tier calls it inside shard_map."""
     T, G, F = t["start"].shape
-    A = arena_doc.shape[0]
+    near_stop = arena["near_stop"]
+    A = arena["blk_meta"].shape[0] * BLOCK
     dt1 = t["doc_task"]
     base = t["shard_base"].astype(jnp.int64)
 
@@ -237,9 +289,8 @@ def bucket_step_math(arena_doc, arena_pos, arena_dist, near_stop, t, *,
         iota = jnp.arange(Pw, dtype=jnp.int32)
         idx = jnp.clip(start[..., None] + iota, 0, A - 1)
         valid = iota < length[..., None]
-        doc = arena_doc[idx]
-        pos = arena_pos[idx]
-        dist = arena_dist[idx].astype(jnp.int32)
+        doc, pos, dist = unpack_postings(arena, idx, implementation=impl,
+                                         interpret=interpret)
         valid &= (req[..., None] == NO_DIST) | (dist == req[..., None])
         valid &= jnp.abs(dist) <= maxab[..., None]
         valid &= t["active"][:, sl, None, None]
@@ -621,7 +672,7 @@ class BatchExecutor:
                 tj = {k: jnp.asarray(v) for k, v in t.items()
                       if ranked or k not in ("score_bias", "score_from_dist")}
                 out = _batch_step(
-                    d.arena_doc, d.arena_pos, d.arena_dist, d.near_stop, tj,
+                    d.device_arena, tj,
                     P0=P0, P=P, impl=self.impl, interpret=self.interpret,
                     presorted=sortfree, ranked=ranked)
                 if ranked:

@@ -32,6 +32,7 @@ from repro.core.postings import (
     CSR,
     DenseCSR,
     MAX_STOP_PHRASE_LEN,
+    PackedPostings,
     pack_dist_pair,
     pack_multi_pair_key,
     pack_multi_triple_key,
@@ -69,10 +70,27 @@ class IndexParams:
                                # with two two-component lookups instead
                                # (identical semantics, more postings read).
                                # 0 = keep every triple (no gating).
+    neighbor_distance: int = 0
+                               # multi-key size dial, decoupled from
+                               # near_window: NeighborDistance of the (s, v)
+                               # pair / (s1, s2, v) triple index.  0 (the
+                               # default) follows near_window, preserving
+                               # the structural recall guarantee; a smaller
+                               # value shrinks the multi-key index roughly
+                               # linearly, and near windows wider than it
+                               # fall back to banded full ordinary-index
+                               # reads (the planner's existing
+                               # window > NeighborDistance guard) — correct
+                               # at any window, at full-list cost.
+
+    @property
+    def multi_key_neighbor_distance(self) -> int:
+        return self.neighbor_distance or self.near_window
 
     def __post_init__(self):
         assert 2 <= self.min_len <= self.max_len <= MAX_STOP_PHRASE_LEN
         assert 1 <= self.near_window <= 15
+        assert 0 <= self.neighbor_distance <= 15   # dpair nibble payloads
         if self.near_slots < 4 * self.max_distance:
             import warnings
             warnings.warn("near_slots < 4*max_distance: stream-3 verification "
@@ -180,7 +198,9 @@ def build_basic_index(tf: TokenForms, lexicon: Lexicon, params: IndexParams) -> 
         near[lo : lo + params.chunk] = np.take_along_axis(cand, take, axis=1)
 
     return BasicIndex(occurrences=occurrences, first_occ=first_occ,
-                      near_stop=near, max_distance=D)
+                      near_stop=near, max_distance=D,
+                      packed_occ=_pack_stream(occurrences),
+                      packed_first=_pack_stream(first_occ))
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +270,8 @@ def build_expanded_index(tf: TokenForms, lexicon: Lexicon, params: IndexParams) 
 
     pairs = _csr_from_parts(keys_parts, {"doc": doc_parts, "pos": pos_parts,
                                          "dist": dist_parts})
-    return ExpandedIndex(pairs=pairs, n_base=n_base)
+    return ExpandedIndex(pairs=pairs, n_base=n_base,
+                         packed=_pack_stream(pairs))
 
 
 # ---------------------------------------------------------------------------
@@ -269,12 +290,13 @@ def build_multi_key_index(tf: TokenForms, lexicon: Lexicon,
     the (occurrence, stop form)-sorted record list.  Delta 0 (one token
     carrying both a stop and a non-stop form) is included — near-mode
     windows contain the pivot position itself.  NeighborDistance =
-    `params.near_window`, the default near-mode window.
+    `params.multi_key_neighbor_distance` (= near_window unless the
+    `neighbor_distance` size dial shrinks it).
     """
     T = len(tf.doc_of)
     n_base = lexicon.config.n_base
     n_stop = lexicon.config.n_stop
-    D = params.near_window
+    D = params.multi_key_neighbor_distance
     g_idx = np.arange(T, dtype=np.int64)
 
     # -- pairs: (s, v), emitted from each stop occurrence -------------------
@@ -356,7 +378,9 @@ def build_multi_key_index(tf: TokenForms, lexicon: Lexicon,
                                       params.triple_pair_min_count)
     return MultiKeyIndex(pairs=pairs, triples=triples, n_base=n_base,
                          n_stop=n_stop, neighbor_distance=D,
-                         triple_stop_pairs=admitted)
+                         triple_stop_pairs=admitted,
+                         packed_pairs=_pack_stream(pairs),
+                         packed_triples=_pack_stream(triples))
 
 
 def _gate_triples(triples: CSR, n_stop: int, min_count: int):
@@ -380,6 +404,23 @@ def _gate_triples(triples: CSR, n_stop: int, min_count: int):
     flat_keys = np.repeat(triples.keys, counts)[keep_post]
     cols = {k: v[keep_post] for k, v in triples.columns.items()}
     return CSR.from_unsorted(flat_keys, cols, presorted=True), admitted
+
+
+def _pack_stream(store) -> PackedPostings:
+    """Bit-packed device twin of a posting store's (doc, pos, dist) columns.
+
+    Every device stream packs the SAME field triple (zeros standing in for
+    absent dist — a constant block is width class 0, i.e. free), so the
+    executors' unified arena is one `concat_packed` away.  The triples'
+    `dpair` payload stays host-side only (introspection / construction
+    tests) and is never shipped."""
+    cols = store.columns
+    n = len(cols["doc"])
+    dist = cols.get("dist")
+    return PackedPostings.from_columns(
+        {"doc": cols["doc"], "pos": cols["pos"],
+         "dist": dist if dist is not None else np.zeros(n, np.int8)},
+        fields=("doc", "pos", "dist"))
 
 
 def _csr_from_parts(key_parts: list, col_parts: dict[str, list]) -> CSR:
@@ -406,7 +447,7 @@ def reference_multi_key_postings(tf: TokenForms, lexicon: Lexicon,
     triples = list of (key, doc, pos, max_dist, (d1, d2)) tuples.
     """
     T = len(tf.doc_of)
-    D = params.near_window
+    D = params.multi_key_neighbor_distance
     n_base, n_stop = lexicon.config.n_base, lexicon.config.n_stop
     pairs, triples = [], []
     for g in range(T):
@@ -501,7 +542,9 @@ def build_stop_phrase_index(tf: TokenForms, params: IndexParams) -> StopPhraseIn
         phrases = CSR.from_unsorted(np.empty(0, np.int64),
                                     {"doc": np.empty(0, np.int32),
                                      "pos": np.empty(0, np.int32)})
-    return StopPhraseIndex(phrases=phrases, min_len=params.min_len, max_len=params.max_len)
+    return StopPhraseIndex(phrases=phrases, min_len=params.min_len,
+                           max_len=params.max_len,
+                           packed=_pack_stream(phrases))
 
 
 # ---------------------------------------------------------------------------
@@ -604,6 +647,9 @@ class IndexSet:
     multi_key: MultiKeyIndex
     ordinary: DenseCSR
     n_docs: int
+    # device representation of the ordinary stream (the other streams carry
+    # their packed twin on their own container)
+    ordinary_packed: PackedPostings | None = None
 
     def base_occ_counts(self) -> np.ndarray:
         """Total occurrences per basic form (ordinary-index view, incl. stop)."""
@@ -620,7 +666,7 @@ class IndexSet:
                    default=0)
 
     def size_report(self) -> dict[str, int]:
-        return {
+        rep = {
             "stop_phrase_index_bytes": self.stop_phrase.nbytes(),
             "expanded_index_bytes": self.expanded.nbytes(),
             "multi_key_index_bytes": self.multi_key.nbytes(),
@@ -633,6 +679,38 @@ class IndexSet:
             "basic_postings": self.basic.occurrences.n_postings,
             "ordinary_postings": self.ordinary.n_postings,
         }
+        rep.update(self.packed_size_report())
+        return rep
+
+    def packed_size_report(self) -> dict[str, int]:
+        """Device bytes of each bit-packed stream (vs the raw int32/int8
+        columns the pre-packed arena shipped, `*_col_bytes`)."""
+        mk = self.multi_key
+
+        def cols(store):
+            return sum(c.nbytes for n, c in store.columns.items()
+                       if n in ("doc", "pos", "dist"))
+
+        rep = {
+            "basic_packed_bytes": self.basic.packed_nbytes(),
+            "stop_phrase_packed_bytes": self.stop_phrase.packed_nbytes(),
+            "expanded_packed_bytes": self.expanded.packed_nbytes(),
+            "multi_key_pair_packed_bytes":
+                mk.packed_pairs.nbytes() if mk.packed_pairs else 0,
+            "multi_key_triple_packed_bytes":
+                mk.packed_triples.nbytes() if mk.packed_triples else 0,
+            "multi_key_packed_bytes": mk.packed_nbytes(),
+            "ordinary_packed_bytes":
+                self.ordinary_packed.nbytes() if self.ordinary_packed else 0,
+            "basic_col_bytes": (cols(self.basic.occurrences)
+                                + cols(self.basic.first_occ)),
+            "stop_phrase_col_bytes": cols(self.stop_phrase.phrases),
+            "expanded_col_bytes": cols(self.expanded.pairs),
+            "multi_key_pair_col_bytes": cols(mk.pairs),
+            "multi_key_triple_col_bytes": cols(mk.triples),
+            "ordinary_col_bytes": cols(self.ordinary),
+        }
+        return rep
 
 
 def auto_docs_per_shard(n_docs: int, max_list_len: int,
@@ -661,6 +739,7 @@ def auto_docs_per_shard(n_docs: int, max_list_len: int,
 def build_all(corpus: Corpus, lexicon: Lexicon, analyzer: Analyzer,
               params: IndexParams = IndexParams()) -> IndexSet:
     tf = expand_token_forms(corpus, lexicon, analyzer)
+    ordinary = build_ordinary_index(tf, lexicon)
     return IndexSet(
         lexicon=lexicon,
         analyzer=analyzer,
@@ -669,6 +748,7 @@ def build_all(corpus: Corpus, lexicon: Lexicon, analyzer: Analyzer,
         expanded=build_expanded_index(tf, lexicon, params),
         stop_phrase=build_stop_phrase_index(tf, params),
         multi_key=build_multi_key_index(tf, lexicon, params),
-        ordinary=build_ordinary_index(tf, lexicon),
+        ordinary=ordinary,
         n_docs=corpus.n_docs,
+        ordinary_packed=_pack_stream(ordinary),
     )

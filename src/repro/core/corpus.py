@@ -23,6 +23,19 @@ class CorpusConfig:
     sigma_doc_len: float = 0.6
     burstiness: float = 0.25   # prob. of re-sampling a recent token in-doc
     seed: int = 0
+    stop_mass: float | None = None
+                               # target share of tokens carrying a stop basic
+                               # form.  The raw Zipf draw over this synthetic
+                               # lexicon lands at ~64% stop tokens — far
+                               # above real running text (~40% in English
+                               # fiction; the paper's 700-lemma Russian list
+                               # is comparable) — which inflates every
+                               # additional-index-over-corpus ratio.  When
+                               # set (and `generate_corpus` is given the
+                               # stop-surface mask), stop-surface
+                               # probabilities are rescaled so the expected
+                               # stop share hits this target; None keeps the
+                               # raw Zipf draw.
 
 
 @dataclasses.dataclass
@@ -62,9 +75,29 @@ def zipf_probs(n: int, s: float) -> np.ndarray:
     return p / p.sum()
 
 
-def generate_corpus(lex_cfg: LexiconConfig, cfg: CorpusConfig) -> Corpus:
+def generate_corpus(lex_cfg: LexiconConfig, cfg: CorpusConfig,
+                    stop_mask: np.ndarray | None = None) -> Corpus:
+    """`stop_mask` ([n_surface] bool: surface has a stop basic form) enables
+    the `cfg.stop_mass` re-weighting — scale stop-surface probabilities by
+    the unique factor that moves the expected stop-token share from the raw
+    Zipf mass q to the target t (α = t(1-q) / (q(1-t))), then renormalize.
+    Rank order within each class is untouched, so the corpus stays Zipfian.
+    """
     rng = np.random.default_rng(cfg.seed + 0xC0)
     probs = zipf_probs(lex_cfg.n_surface, lex_cfg.zipf_s)
+    if cfg.stop_mass is not None:
+        if stop_mask is None:
+            raise ValueError(
+                "CorpusConfig.stop_mass is set but generate_corpus got no "
+                "stop_mask — the re-weighting would silently no-op (pass "
+                "the [n_surface] stop-surface mask; see benchmarks/common)")
+        t = float(cfg.stop_mass)
+        q = float(probs[stop_mask].sum())
+        if not (0.0 < t < 1.0 and 0.0 < q < 1.0):
+            raise ValueError(f"degenerate stop_mass target {t} / raw mass {q}")
+        alpha = t * (1.0 - q) / (q * (1.0 - t))
+        probs = np.where(stop_mask, probs * alpha, probs)
+        probs = probs / probs.sum()
 
     lengths = rng.lognormal(np.log(cfg.mean_doc_len), cfg.sigma_doc_len, cfg.n_docs)
     lengths = np.maximum(lengths.astype(np.int64), 8)

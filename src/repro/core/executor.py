@@ -1,8 +1,9 @@
 """Batched JAX execution of query plans.
 
 The planner resolves every fetch to (start, length) slices; the executor is
-pure array math on device: slice -> key construction -> (banded) k-way
-intersection -> anchor unpacking.  Intersections run through jit'd,
+pure array math on device: slice -> packed-block unpack (the bit-packed
+posting store of core/postings.py, via ops.unpack_postings) -> key
+construction -> (banded) k-way intersection -> anchor unpacking.  Intersections run through jit'd,
 shape-bucketed primitives (padded to powers of two) so the compile cache
 stays small while latencies remain measurable.  This per-query walker is
 the correctness oracle and escape hatch for the batched executor
@@ -234,31 +235,61 @@ def merge_subplan_results(all_keys: list, doc_only_keys: list, postings: int,
     return resp
 
 
+@partial(jax.jit, static_argnums=(2,))
+def _unpack_slice(arena, start, L: int):
+    """Decode L consecutive posting ordinals from `start` — ONE jit dispatch
+    per fetch on the flexible path (eager per-op unpack math costs ~10x in
+    dispatch overhead; L is pow2-bucketed so the compile cache stays small).
+    Ordinals past the arena tail read clamped garbage the caller slices off.
+    """
+    from repro.kernels.ops import unpack_postings
+    idx = start + jnp.arange(L, dtype=jnp.int32)
+    return unpack_postings(arena, idx)
+
+
 class DeviceIndex:
-    """Index columns as device (jnp) arrays."""
+    """Per-stream packed postings as device (jnp) arrays.
+
+    Since the packed-store refactor the flexible executor holds the SAME
+    bit-packed block representation as the batched arena (one packed store
+    per stream instead of one concatenation) and unpacks fetch slices on
+    device via ops.unpack_postings — no raw int32 posting columns ever ship.
+    """
+
+    STREAMS = ("basic", "first", "expanded", "stop", "ordinary", "multi")
 
     def __init__(self, index: IndexSet):
-        b = index.basic
-        self.basic_doc = jnp.asarray(b.occurrences.columns["doc"])
-        self.basic_pos = jnp.asarray(b.occurrences.columns["pos"])
-        self.near_stop = jnp.asarray(b.near_stop)
-        self.first_doc = jnp.asarray(b.first_occ.columns["doc"])
-        self.first_pos = jnp.asarray(b.first_occ.columns["pos"])
-        e = index.expanded.pairs
-        self.exp_doc = jnp.asarray(e.columns["doc"])
-        self.exp_pos = jnp.asarray(e.columns["pos"])
-        self.exp_dist = jnp.asarray(e.columns["dist"])
-        s = index.stop_phrase.phrases
-        self.stop_doc = jnp.asarray(s.columns["doc"])
-        self.stop_pos = jnp.asarray(s.columns["pos"])
-        m = index.multi_key.arena_columns()
-        self.multi_doc = jnp.asarray(m["doc"])
-        self.multi_pos = jnp.asarray(m["pos"])
-        self.multi_dist = jnp.asarray(m["dist"])
-        o = index.ordinary
-        self.ord_doc = jnp.asarray(o.columns["doc"])
-        self.ord_pos = jnp.asarray(o.columns["pos"])
-        self.max_distance = b.max_distance
+        from repro.core.batch_executor import ensure_packed_streams
+        packed = ensure_packed_streams(index)
+        self._arenas = {}
+        for name in self.STREAMS:
+            p = packed[name]
+            self._arenas[name] = {
+                "lanes": jnp.asarray(p.lanes),
+                "blk_meta": jnp.asarray(p.meta_matrix()),
+            }
+        self.near_stop = jnp.asarray(index.basic.near_stop)
+        self.max_distance = index.basic.max_distance
+        self._unpack_memo = {}
+
+    def unpack(self, stream: str, s: int, e: int):
+        """(doc, pos, dist) int32 device arrays for postings [s, e).
+
+        Recent decodes are memoized (small FIFO): the ranked path asks for
+        each scored fetch's slice twice — _fetch_keys for the whole group,
+        then _fetch_delta per fetch — and the arrays are immutable."""
+        key = (stream, s, e)
+        hit = self._unpack_memo.get(key)
+        if hit is not None:
+            return hit
+        n = e - s
+        doc, pos, dist = _unpack_slice(self._arenas[stream], s,
+                                       _next_pow2(max(n, 1), floor=128))
+        out = (doc[:n], pos[:n], dist[:n])
+        if len(self._unpack_memo) >= 16:       # bounds device-array liveness
+            self._unpack_memo.pop(next(iter(self._unpack_memo)))
+        self._unpack_memo[key] = out
+        return out
 
 
 class Executor:
@@ -278,10 +309,11 @@ class Executor:
     def _fetch_keys(self, f: ResolvedFetch, mode: str):
         d = self.dev
         s, e = f.start, f.start + f.length
+        doc, pos, dist = d.unpack(f.stream, s, e)
         if f.stream == "stop":
-            return self._phrase_keys(d.stop_doc[s:e], d.stop_pos[s:e], f.offset)
+            return self._phrase_keys(doc, pos, f.offset)
         if f.stream == "first":
-            return d.first_doc[s:e].astype(jnp.int64)
+            return doc.astype(jnp.int64)
         if f.stream in ("expanded", "multi"):
             # dist-carrying streams share one keying rule (the math the
             # batched gather mirrors in bucket_step_math).  Phrase mode
@@ -290,11 +322,6 @@ class Executor:
             # pivot_from_dist (expanded fetches, (s, v) pairs), pos itself
             # otherwise ((s1, s2, v) triples, whose dist is the max of the
             # two nearest stop distances); |dist| <= window masks the band.
-            if f.stream == "expanded":
-                doc, pos, dist = d.exp_doc[s:e], d.exp_pos[s:e], d.exp_dist[s:e]
-            else:
-                doc, pos, dist = (d.multi_doc[s:e], d.multi_pos[s:e],
-                                  d.multi_dist[s:e])
             if f.stream == "expanded" and mode == MODE_PHRASE:
                 keys = self._phrase_keys(doc, pos, f.offset)
                 mask = dist == f.required_dist
@@ -304,12 +331,10 @@ class Executor:
                 mask = jnp.abs(dist) <= f.max_abs_dist
             return jnp.where(mask, keys, SENTINEL)
         if f.stream == "ordinary":
-            doc, pos = d.ord_doc[s:e], d.ord_pos[s:e]
             if mode == MODE_PHRASE:
                 return self._phrase_keys(doc, pos, f.offset)
             return self._plain_keys(doc, pos)
         # basic occurrences (possibly with near-stop verification)
-        doc, pos = d.basic_doc[s:e], d.basic_pos[s:e]
         if mode == MODE_PHRASE:
             keys = self._phrase_keys(doc, pos, f.offset)
         else:
@@ -336,10 +361,8 @@ class Executor:
         keys — the key distance carries any remaining spread)."""
         if not f.score_delta_from_dist:
             return jnp.zeros((f.length,), jnp.int32)
-        d = self.dev
-        s, e = f.start, f.start + f.length
-        dist = d.exp_dist[s:e] if f.stream == "expanded" else d.multi_dist[s:e]
-        return jnp.abs(dist.astype(jnp.int32))
+        _, _, dist = self.dev.unpack(f.stream, f.start, f.start + f.length)
+        return jnp.abs(dist)
 
     def _group_keys(self, g: FetchGroup, mode: str, scored: bool = False):
         """Sorted, sentinel-padded key array for one fetch group.  `scored`

@@ -13,7 +13,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.postings import CSR
+from repro.core.postings import CSR, PackedPostings
 
 
 def pair_key(w: int, v: int, n_base: int) -> int:
@@ -24,9 +24,14 @@ def pair_key(w: int, v: int, n_base: int) -> int:
 class ExpandedIndex:
     pairs: CSR            # key = w * n_base + v; columns: doc, pos (of w), dist (int8)
     n_base: int
+    # device representation: bit-packed (doc, pos, dist) block store
+    packed: PackedPostings | None = None
 
     def nbytes(self) -> int:
         return self.pairs.nbytes()
+
+    def packed_nbytes(self) -> int:
+        return self.packed.nbytes() if self.packed is not None else 0
 
     def has_pair(self, w: int, v: int) -> bool:
         s, e = self.pairs.find(pair_key(w, v, self.n_base))

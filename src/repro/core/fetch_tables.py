@@ -29,6 +29,21 @@ v) triples anchor at the pivot with `max_abs` alone — no schema additions)
     ns_valid                             : bool  [T, C, M]
     owner                                : int32 [T]       (serve only: dp shard)
 
+Fetch `start`/`length` are POSTING ORDINALS into the unified device arena —
+which, since the packed-store refactor, is a bit-packed block store
+(core/postings.PackedPostings), not raw int32 columns.  Postings are grouped
+into blocks of 128; ordinal `i` lives in block `i >> 7` at offset `i & 127`.
+Per block and per field (doc, pos, dist) the arena holds an int32 *anchor*
+(the block minimum) and a *width class* w ∈ {0, 1, 2, 4, 8, 16, 32} bits
+(build-time, per block; every class divides the 32-bit lane so no value
+straddles lane words), with the 128 deltas bit-packed into `lanes`.  Streams
+are padded to block multiples so stream bases stay block-aligned.  The jit'd
+step's gather therefore needs no new table columns and no new jit variants:
+rows keep plain slices, and the per-block anchor/width metadata rides the
+arena (one `blk_meta` [NB, 5] row + one lane word per field gathered per
+posting by kernels/ops.unpack_postings — ref math or the Pallas unpack
+kernel).
+
 The intersect key domain is compact per-shard int32
 
     key = (doc - shard_base) << TABLE_POS_BITS | (pos - offset + TABLE_BIAS)

@@ -29,7 +29,11 @@ additional indexes whose keys have several word components:
 Both CSRs are (doc, pos)-sorted per key, so the batch executor's
 shard-segmented gather splits multi-key fetches at doc-shard boundaries
 with the same single ``searchsorted`` it uses for every other stream; the
-two tables are exposed as ONE concatenated arena stream ("multi").
+two tables are exposed as ONE concatenated arena stream ("multi").  Device-
+side the stream ships as bit-packed blocks (``packed_pairs`` /
+``packed_triples``, postings.PackedPostings): the pair segment is padded to
+a BLOCK multiple so the triple segment starts block-aligned, and
+``find_triple`` offsets its slices by that padded base.
 """
 from __future__ import annotations
 
@@ -37,8 +41,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.postings import (CSR, pack_multi_pair_key,
-                                 pack_multi_triple_key)
+from repro.core.postings import (BLOCK, CSR, PackedPostings,
+                                 pack_multi_pair_key, pack_multi_triple_key,
+                                 pad_block_multiple)
 
 
 @dataclasses.dataclass
@@ -55,6 +60,10 @@ class MultiKeyIndex:
     # pair admitted (no gating).  The planner falls back to two two-component
     # lookups for non-admitted pairs — semantics identical, postings differ.
     triple_stop_pairs: np.ndarray | None = None
+    # device representation: bit-packed block stores of the (doc, pos, dist)
+    # columns (postings.PackedPostings), built once at index-build time
+    packed_pairs: PackedPostings | None = None
+    packed_triples: PackedPostings | None = None
 
     @property
     def n_pair_postings(self) -> int:
@@ -71,18 +80,30 @@ class MultiKeyIndex:
     def nbytes(self) -> int:
         return self.pairs.nbytes() + self.triples.nbytes()
 
+    def packed_nbytes(self) -> int:
+        """Device bytes of the packed pair + triple stream."""
+        if self.packed_pairs is None:
+            return 0
+        return self.packed_pairs.nbytes() + self.packed_triples.nbytes()
+
+    @property
+    def pair_pad(self) -> int:
+        """BLOCK-aligned length of the pair segment in the "multi" stream
+        (triples start here, in both the raw and the packed arena)."""
+        return -(-max(self.pairs.n_postings, 1) // BLOCK) * BLOCK
+
     def arena_columns(self) -> dict[str, np.ndarray]:
         """doc/pos/dist concatenated pairs-then-triples — the single "multi"
-        stream of the executor arenas.  find_pair/find_triple return slices
-        into this concatenation."""
-        return {
-            "doc": np.concatenate([self.pairs.columns["doc"],
-                                   self.triples.columns["doc"]]),
-            "pos": np.concatenate([self.pairs.columns["pos"],
-                                   self.triples.columns["pos"]]),
-            "dist": np.concatenate([self.pairs.columns["dist"],
-                                    self.triples.columns["dist"]]),
-        }
+        stream of the executor arenas, with the pair segment edge-padded to
+        `pair_pad` so the raw columns line up ordinal-for-ordinal with the
+        packed block store.  find_pair/find_triple return slices into this
+        concatenation (pads are never inside a slice)."""
+        out = {}
+        for name in ("doc", "pos", "dist"):
+            out[name] = np.concatenate(
+                [pad_block_multiple(self.pairs.columns[name], self.pair_pad),
+                 self.triples.columns[name]])
+        return out
 
     def find_pair(self, stop_id: int, v: int) -> tuple[int, int]:
         """(start, end) slice of the (s, v) postings in the multi stream."""
@@ -104,5 +125,5 @@ class MultiKeyIndex:
         stream (canonicalizes the stop-component order)."""
         a, b = (s1, s2) if s1 < s2 else (s2, s1)
         s, e = self.triples.find(int(pack_multi_triple_key(a, b, v, self.n_stop)))
-        off = self.pairs.n_postings
+        off = self.pair_pad
         return s + off, e + off

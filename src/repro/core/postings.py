@@ -1,13 +1,25 @@
-"""Posting-list containers and packed-key codecs.
+"""Posting-list containers, packed-key codecs, and the packed block store.
 
 A *posting* is the paper's (ID, P) record: document id + in-document word
-position.  All indexes in this system are CSR structures-of-arrays:
+position.  Host-side, every index is a CSR structure-of-arrays:
 
     offsets : [K + 1] int64     -- slice bounds per key
     columns : dict[str, array]  -- parallel int columns (doc, pos, dist, ...)
 
-which shard cleanly over the `data` mesh axis and scan at HBM bandwidth on the
-TPU (see DESIGN.md §2 for why this replaces the paper's compressed streams).
+The paper's on-disk indexes are compressed posting streams (VByte-style
+codings; the follow-up arXiv:1812.07640 leans on compact encodings to make
+multi-component keys affordable).  The device-resident twin of that economy
+is `PackedPostings`: posting columns grouped into fixed-size blocks of
+``BLOCK`` = 128, each block storing a per-field *anchor* (the block minimum)
+plus bit-packed deltas in one of a small set of build-time *width classes*
+(``PACK_WIDTHS`` = 0/1/2/4/8/16/32 bits — every class divides the 32-bit
+lane, so a value never straddles lane words and decode is one gather + one
+shift + one mask).  Random access is preserved: posting ordinal ``i`` lives
+in block ``i >> 7`` at offset ``i & 127``, so executor fetch slices stay
+plain ``(start, length)`` ranges and the un-pack runs vectorized on device
+(kernels/ops.unpack_postings; Pallas kernel in kernels/unpack.py).  The CSR
+``columns`` stay the host-side build product and oracle surface; only the
+packed lanes ship to the device.
 
 Key codecs
 ----------
@@ -246,3 +258,203 @@ class DenseCSR:
         offsets = np.zeros(n_keys + 1, dtype=np.int64)
         np.cumsum(counts, out=offsets[1:])
         return DenseCSR(offsets=offsets, columns=columns)
+
+
+# --------------------------------------------------------------------------
+# packed block store (the device postings codec)
+# --------------------------------------------------------------------------
+
+BLOCK = 128                    # postings per packed block
+BLOCK_LOG2 = 7
+PACK_WIDTHS = (0, 1, 2, 4, 8, 16, 32)   # bits/value; all divide the 32b lane
+PACK_WIDTH_BITS = 6            # field width slot in blk_widths (holds 0..32)
+
+# mask per width, indexable by width value (0..32); int64 so numpy keeps the
+# 32-bit all-ones mask positive host-side (device mirrors use int32 -1)
+PACK_MASKS = np.zeros(33, np.int64)
+for _w in PACK_WIDTHS:
+    PACK_MASKS[_w] = (1 << _w) - 1
+
+
+def _pack_width_classes(span: np.ndarray) -> np.ndarray:
+    """Per-block value span (uint64) -> smallest admissible width class."""
+    width = np.full(span.shape, 32, np.int32)
+    for w in reversed(PACK_WIDTHS[:-1]):
+        width[span <= np.uint64(PACK_MASKS[w])] = w
+    return width
+
+
+def pad_block_multiple(col: np.ndarray, n_padded: int) -> np.ndarray:
+    """THE block-pad rule: edge-replicate `col` to `n_padded` entries.
+
+    Shared by PackedPostings.from_columns, the executors' raw arena columns,
+    and the multi stream's internal pair pad — raw and packed ordinals must
+    line up one-for-one, so there is exactly one copy of this rule."""
+    pad = n_padded - len(col)
+    if pad <= 0:
+        return col
+    edge = col[-1:] if len(col) else np.zeros(1, col.dtype)
+    return np.concatenate([col, np.repeat(edge, pad)])
+
+
+@dataclasses.dataclass
+class PackedPostings:
+    """Bit-packed block store over parallel int columns.
+
+    Postings are grouped into blocks of BLOCK = 128 (the tail block is
+    padded by edge-replication, so pads never widen a class).  Per block and
+    per field the store keeps the *anchor* (block minimum, int32) and a
+    width class w ∈ PACK_WIDTHS; the 128 deltas ``value - anchor`` are
+    bit-packed little-endian into ``128 * w / 32`` consecutive int32 lane
+    words.  A block's fields are laid out back to back starting at
+    ``blk_base[blk]``; widths ride ``blk_widths`` (PACK_WIDTH_BITS bits per
+    field).  Values are recovered exactly modulo 2**32 — i.e. bit-exactly
+    for every int32/int8 posting column — by
+
+        word  = base_f + ((off * w) >> 5)        off = ordinal & 127
+        shift = (off * w) & 31
+        value = anchor + ((lanes[word] >> shift) & mask(w))
+
+    which is one gather + shift + mask per field: random access, no block
+    scan, no branch — the same math numpy-decoded here and jnp/Pallas-
+    decoded on device (kernels/ops.unpack_postings).
+    """
+
+    n: int                        # real postings (pads excluded)
+    fields: tuple                 # field order, e.g. ("doc", "pos", "dist")
+    lanes: np.ndarray             # [W] int32 packed delta words
+    blk_base: np.ndarray          # [NB] int32 first lane word of each block
+    blk_widths: np.ndarray        # [NB] int32 packed per-field width classes
+    anchors: dict                 # field -> [NB] int32 block minimum
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blk_base)
+
+    @property
+    def n_padded(self) -> int:
+        """Postings including the tail pad — always a BLOCK multiple."""
+        return self.n_blocks * BLOCK
+
+    def nbytes(self) -> int:
+        return (self.lanes.nbytes + self.blk_base.nbytes
+                + self.blk_widths.nbytes
+                + sum(a.nbytes for a in self.anchors.values()))
+
+    def field_width(self, field: str) -> np.ndarray:
+        i = self.fields.index(field)
+        return (self.blk_widths >> (PACK_WIDTH_BITS * i)) \
+            & ((1 << PACK_WIDTH_BITS) - 1)
+
+    def meta_matrix(self) -> np.ndarray:
+        """[NB, 2 + n_fields] int32 per-block metadata in the device layout
+        ops.unpack_postings consumes — column 0 = blk_base, 1 = blk_widths,
+        2.. = per-field anchors (field order) — so the jit'd step pays ONE
+        metadata gather per posting instead of five."""
+        return np.stack([self.blk_base, self.blk_widths]
+                        + [self.anchors[f] for f in self.fields],
+                        axis=1).astype(np.int32)
+
+    def _field_base(self, field: str) -> np.ndarray:
+        """Per-block first lane word of `field` (fields laid out in order;
+        each occupies width * BLOCK / 32 = width << 2 words)."""
+        base = self.blk_base.astype(np.int64).copy()
+        for f in self.fields:
+            if f == field:
+                return base
+            base += self.field_width(f).astype(np.int64) << 2
+        raise KeyError(field)
+
+    def decode(self, field: str, start: int = 0,
+               end: int | None = None) -> np.ndarray:
+        """Exact int32 values of `field` for posting ordinals [start, end)
+        (pads beyond `n` decode to the edge-replicated tail value)."""
+        if end is None:
+            end = self.n
+        idx = np.arange(start, end, dtype=np.int64)
+        blk = idx >> BLOCK_LOG2
+        off = idx & (BLOCK - 1)
+        w = self.field_width(field)[blk].astype(np.int64)
+        bit = off * w
+        word = self._field_base(field)[blk] + (bit >> 5)
+        word = np.minimum(word, len(self.lanes) - 1)   # w == 0 at the end
+        sh = (bit & 31).astype(np.uint32)
+        raw = self.lanes[word].astype(np.uint32)
+        delta = (raw >> sh) & PACK_MASKS[w].astype(np.uint64).astype(np.uint32)
+        return (self.anchors[field][blk].astype(np.uint32)
+                + delta).astype(np.int32)
+
+    def decode_all(self) -> dict:
+        return {f: self.decode(f) for f in self.fields}
+
+    @staticmethod
+    def from_columns(columns: dict, fields: tuple | None = None
+                     ) -> "PackedPostings":
+        """Pack parallel posting columns (any int dtype ≤ 32 bits)."""
+        fields = tuple(fields if fields is not None else columns.keys())
+        n = len(columns[fields[0]]) if fields else 0
+        nb = max(1, -(-n // BLOCK))
+        views, widths, anchors = {}, {}, {}
+        for f in fields:
+            col = np.asarray(columns[f])
+            assert len(col) == n, (f, len(col), n)
+            col = pad_block_multiple(col, nb * BLOCK)
+            v = col.astype(np.int64).reshape(nb, BLOCK)
+            mn = v.min(axis=1)
+            span = (v.max(axis=1) - mn).astype(np.uint64)
+            views[f] = v
+            widths[f] = _pack_width_classes(span)
+            anchors[f] = mn.astype(np.int32)
+        words_per_block = sum(widths[f].astype(np.int64) << 2 for f in fields) \
+            if fields else np.zeros(nb, np.int64)
+        blk_base = np.zeros(nb, np.int64)
+        np.cumsum(words_per_block[:-1], out=blk_base[1:])
+        total = int(blk_base[-1] + words_per_block[-1]) if nb else 0
+        lanes = np.zeros(max(total, 1), np.uint32)
+        field_base = blk_base.copy()
+        for f in fields:
+            w_f = widths[f]
+            for w in PACK_WIDTHS[1:]:
+                sel = np.nonzero(w_f == w)[0]
+                if not len(sel):
+                    continue
+                delta = (views[f][sel]
+                         - anchors[f][sel].astype(np.int64)[:, None])
+                vpw = 32 // w
+                d3 = delta.astype(np.uint64).astype(np.uint32) \
+                    .reshape(len(sel), BLOCK // vpw, vpw)
+                shifts = (np.arange(vpw, dtype=np.uint32) * np.uint32(w))
+                packed = np.bitwise_or.reduce(d3 << shifts[None, None, :],
+                                              axis=2)
+                tgt = field_base[sel][:, None] \
+                    + np.arange(BLOCK // vpw, dtype=np.int64)[None, :]
+                lanes[tgt.ravel()] = packed.ravel()
+            field_base += w_f.astype(np.int64) << 2
+        blk_widths = np.zeros(nb, np.int32)
+        for i, f in enumerate(fields):
+            blk_widths |= widths[f] << (PACK_WIDTH_BITS * i)
+        return PackedPostings(
+            n=n, fields=fields, lanes=lanes.astype(np.int32),
+            blk_base=blk_base.astype(np.int32), blk_widths=blk_widths,
+            anchors=anchors)
+
+
+def concat_packed(stores: list) -> "PackedPostings":
+    """Concatenate packed stores into one (posting ordinals shift by each
+    predecessor's *padded* count — callers must use BLOCK-aligned stream
+    bases, which ``n_padded`` is by construction)."""
+    assert stores
+    fields = stores[0].fields
+    assert all(s.fields == fields for s in stores)
+    lane_off, base_parts = 0, []
+    for s in stores:
+        base_parts.append(s.blk_base.astype(np.int64) + lane_off)
+        lane_off += len(s.lanes)
+    return PackedPostings(
+        n=sum(s.n_padded for s in stores),   # pads are addressable ordinals
+        fields=fields,
+        lanes=np.concatenate([s.lanes for s in stores]),
+        blk_base=np.concatenate(base_parts).astype(np.int32),
+        blk_widths=np.concatenate([s.blk_widths for s in stores]),
+        anchors={f: np.concatenate([s.anchors[f] for s in stores])
+                 for f in fields})

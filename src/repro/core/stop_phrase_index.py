@@ -14,7 +14,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.postings import CSR, pack_stop_phrase_key
+from repro.core.postings import CSR, PackedPostings, pack_stop_phrase_key
 
 
 @dataclasses.dataclass
@@ -22,9 +22,14 @@ class StopPhraseIndex:
     phrases: CSR          # key = packed sorted stop ids; columns: doc, pos (phrase start)
     min_len: int
     max_len: int
+    # device representation: bit-packed (doc, pos) block store
+    packed: PackedPostings | None = None
 
     def nbytes(self) -> int:
         return self.phrases.nbytes()
+
+    def packed_nbytes(self) -> int:
+        return self.packed.nbytes() if self.packed is not None else 0
 
     def find(self, stop_local_ids) -> tuple[int, int]:
         """Slice for a phrase given its stop *local* ids (any order)."""

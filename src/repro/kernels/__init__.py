@@ -1,11 +1,13 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; see tests/).
 
 banded_intersect — posting-list intersection / positional window join
+unpack_fields    — packed-postings bit extract (block store decode)
 segment_bag      — EmbeddingBag gather-reduce (recsys)
 flash_decode     — single-token decode attention over long KV caches
 flash_prefill    — causal GQA prefill with VMEM-resident score tiles
 """
 from repro.kernels.ops import (banded_intersect, flash_decode, flash_prefill,
-                               segment_bag)
+                               segment_bag, unpack_fields, unpack_postings)
 
-__all__ = ["banded_intersect", "flash_decode", "flash_prefill", "segment_bag"]
+__all__ = ["banded_intersect", "flash_decode", "flash_prefill", "segment_bag",
+           "unpack_fields", "unpack_postings"]

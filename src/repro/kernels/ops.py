@@ -20,10 +20,78 @@ from repro.kernels.intersect import (I32_SENTINEL, banded_intersect_pallas,
                                      banded_intersect_rows_pallas,
                                      banded_min_delta_rows_pallas)
 from repro.kernels.segment_bag import segment_bag_pallas
+from repro.kernels.unpack import ROWS_PER_TILE, unpack_fields_pallas
 
 _SDB = 4      # delta bits of the (key << 4 | delta) scoring composite
               # (== core.fetch_tables.SCORE_DELTA_BITS; kept literal here so
               # the kernel layer stays import-free of core)
+
+# packed-postings block geometry (== core.postings.BLOCK/BLOCK_LOG2 and
+# PACK_WIDTH_BITS; literal for the same core-import-free reason as _SDB)
+_BLOCK_LOG2 = 7
+_BLOCK = 1 << _BLOCK_LOG2
+_WBITS = 6
+
+
+# ---------------------------------------------------------------------------
+# packed-postings unpack
+# ---------------------------------------------------------------------------
+
+def unpack_fields(words: jax.Array, shifts: jax.Array, widths: jax.Array,
+                  anchors: jax.Array, *, implementation: str = "pallas",
+                  interpret: bool = True) -> jax.Array:
+    """anchor + ((word >> shift) & mask(width)) elementwise — the bit-extract
+    half of the packed-postings decode (any int32 shape; the Pallas path
+    pads/reshapes to [R, 128] tiles)."""
+    if implementation == "ref":
+        mask = jnp.where(widths >= 32, jnp.int32(-1),
+                         (jnp.int32(1) << jnp.minimum(widths, 31)) - 1)
+        return anchors + ((words >> shifts) & mask)
+    shape = words.shape
+    n = words.size
+    tile = ROWS_PER_TILE * 128
+    pad = (-n) % tile
+
+    def prep(x):
+        x = x.reshape(-1)
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((pad,), jnp.int32)])
+        return x.reshape(-1, 128)
+
+    out = unpack_fields_pallas(prep(words), prep(shifts), prep(widths),
+                               prep(anchors), interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def unpack_postings(arena: dict, idx: jax.Array, *,
+                    implementation: str = "ref", interpret: bool = True):
+    """(doc, pos, dist) int32 for posting ordinals `idx` of a packed arena.
+
+    arena: device dict with `lanes` [W] int32 packed delta words and
+    `blk_meta` [NB, 5] int32 per-block metadata (column 0 = base lane word,
+    1 = packed field widths, 2..4 = doc/pos/dist anchors — see
+    core.postings.PackedPostings.meta_matrix; NB * 128 is the addressable
+    ordinal range).  One metadata row gather + one lane gather per field are
+    plain XLA gathers; the bit extract runs through `unpack_fields` (ref
+    math or the Pallas kernel).  Out-of-range lane reads (width-0 tail
+    blocks) rely on jnp's clamping gather semantics."""
+    lanes = arena["lanes"]
+    blk = idx >> _BLOCK_LOG2
+    off = idx & (_BLOCK - 1)
+    meta = arena["blk_meta"][blk]              # [..., 5] one gather
+    base, bw = meta[..., 0], meta[..., 1]
+    m = (1 << _WBITS) - 1
+    ws = [bw & m, (bw >> _WBITS) & m, (bw >> (2 * _WBITS)) & m]
+    fbs = [base, base + (ws[0] << 2), base + ((ws[0] + ws[1]) << 2)]
+    words, shifts = [], []
+    for w, fb in zip(ws, fbs):
+        bit = off * w
+        words.append(lanes[fb + (bit >> 5)])
+        shifts.append(bit & 31)
+    out = unpack_fields(jnp.stack(words), jnp.stack(shifts), jnp.stack(ws),
+                        jnp.stack([meta[..., 2], meta[..., 3], meta[..., 4]]),
+                        implementation=implementation, interpret=interpret)
+    return out[0], out[1], out[2]
 
 
 def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:

@@ -1,0 +1,57 @@
+"""Pallas bit-unpack for the packed postings store (core/postings.py).
+
+The packed arena stores each posting column as per-block anchors + bit-packed
+deltas in width classes that divide the 32-bit lane, so a value never
+straddles lane words and decode is branch-free VPU math:
+
+    value = anchor + ((word >> shift) & mask(width))
+
+The executors gather the lane words / per-block metadata with a plain XLA
+gather (ops.unpack_postings) and hand this kernel the *dense, aligned*
+(word, shift, width, anchor) planes — the dense-compute twin of the banded
+intersect kernels next door, fusing the whole unpack of a gathered slab into
+one elementwise pass.  Arithmetic right shift is safe: a packed value at bit
+`shift` has width ≤ 32 - shift (widths divide 32), so the sign-extension
+bits land above the mask; width 32 uses the all-ones mask and reproduces the
+word itself.  Values are exact modulo 2**32, i.e. bit-exact for every int32
+posting column.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+ROWS_PER_TILE = 8
+
+
+def _kernel(words_ref, shift_ref, width_ref, anchor_ref, o_ref):
+    w = width_ref[...]
+    # width 32 -> all-ones; the (1 << w) - 1 branch is only selected for
+    # w <= 16 (the clamp keeps the unselected branch's shift in-range)
+    mask = jnp.where(w >= 32, jnp.int32(-1),
+                     (jnp.int32(1) << jnp.minimum(w, 31)) - 1)
+    val = (words_ref[...] >> shift_ref[...]) & mask
+    o_ref[...] = anchor_ref[...] + val
+
+
+def unpack_fields_pallas(words: jax.Array, shifts: jax.Array,
+                         widths: jax.Array, anchors: jax.Array, *,
+                         interpret: bool = True) -> jax.Array:
+    """anchor + ((words >> shifts) & mask(widths)), elementwise int32.
+
+    All inputs [R, 128] int32 with R a multiple of ROWS_PER_TILE (ops.py
+    pads); widths in core.postings.PACK_WIDTHS."""
+    R = words.shape[0]
+    grid = (R // ROWS_PER_TILE,)
+    spec = pl.BlockSpec((ROWS_PER_TILE, LANES), lambda i: (i, 0))
+    fn = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(words.shape, jnp.int32),
+        interpret=interpret,
+    )
+    return fn(words, shifts, widths, anchors)

@@ -10,11 +10,13 @@ is gone; serve results are bit-identical to `engine.search_batch`.
 
 Distributed-IR layout: documents are partitioned contiguously over the
 dp = pod x data mesh axes; every dp shard holds only its own slice of the
-posting arena (all six streams concatenated so a fetch is a single gather)
-plus the matching near-stop rows.  Host-side tensorization is shard-
-segmented (batch_executor._build_rows): each execution row targets exactly
-one doc shard, so a row's fetches live wholly inside one dp shard's arena
-and carry an `owner` column.  Inside shard_map every device executes only
+posting arena (all six streams concatenated so a fetch is a single gather —
+re-packed per shard into the bit-packed block store of core/postings.py, so
+each device holds packed lanes + per-block anchor/width metadata instead of
+raw int32 columns) plus the matching near-stop rows.  Host-side
+tensorization is shard-segmented (batch_executor._build_rows): each
+execution row targets exactly one doc shard, so a row's fetches live wholly
+inside one dp shard's arena and carry an `owner` column.  Inside shard_map every device executes only
 its own rows (others are masked inactive), and the per-row results — each
 produced on exactly one device — are combined with a single `pmin` over the
 dp axes.  The `model` axis replicates the index and serves to scale query
@@ -63,12 +65,17 @@ class SearchServeConfig:
     check_forms: int = 2           # M: stop forms per near-stop check
     ns_k: int = 20                 # stream-3 slots per posting
     # per-shard arena sizes (basic|expanded|stop|first|multi segments
-    # concatenated)
+    # concatenated), in POSTINGS — the packed block store derives its block
+    # count from this and its lane-word budget from `lane_words`
     n_basic: int = 10_000_000
     n_expanded: int = 17_000_000
     n_stop: int = 23_000_000
     n_first: int = 4_000_000
     n_multi: int = 12_000_000      # multi-component key postings (pairs+triples)
+    lane_words: int = 0            # int32 words of packed posting deltas per
+                                   # shard; 0 = n_arena (a ~32-bit/posting
+                                   # budget — generous: doc/pos/dist widths
+                                   # at bench scale average well under that)
     impl: str = "ref"              # intersect implementation (ref | pallas)
     interpret: bool = True         # pallas interpreter (True on CPU hosts)
     ranked: bool = False           # dry-run cells: lower the proximity-scored
@@ -79,6 +86,16 @@ class SearchServeConfig:
     def n_arena(self) -> int:
         return (self.n_basic + self.n_expanded + self.n_stop + self.n_first
                 + self.n_multi)
+
+    @property
+    def n_blocks(self) -> int:
+        """Packed blocks per shard (BLOCK postings each)."""
+        from repro.core.postings import BLOCK
+        return max(1, -(-self.n_arena // BLOCK))
+
+    @property
+    def n_lane_words(self) -> int:
+        return self.lane_words or self.n_arena
 
     @property
     def p_seed(self) -> int:
@@ -98,12 +115,14 @@ def _dp_size(mesh) -> int:
 
 
 def arena_specs(cfg: SearchServeConfig, n_shards: int) -> dict:
-    """ShapeDtypeStructs for the stacked per-shard index arenas."""
+    """ShapeDtypeStructs for the stacked per-shard index arenas: the packed
+    block store (lanes + per-block base/width/anchor metadata, see
+    core/postings.PackedPostings) plus the raw stream-3 near-stop slots."""
     i32 = jnp.int32
+    nb = cfg.n_blocks
     return {
-        "arena_doc": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
-        "arena_pos": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), i32),
-        "arena_dist": jax.ShapeDtypeStruct((n_shards, cfg.n_arena), jnp.int8),
+        "lanes": jax.ShapeDtypeStruct((n_shards, cfg.n_lane_words), i32),
+        "blk_meta": jax.ShapeDtypeStruct((n_shards, nb, 5), i32),
         "basic_ns": jax.ShapeDtypeStruct((n_shards, cfg.n_basic, cfg.ns_k),
                                          jnp.int16),
     }
@@ -141,15 +160,19 @@ def make_search_serve_step(cfg: SearchServeConfig, mesh,
     dp = _dp_axes(mesh)
     P0, Pc = cfg.p_seed, cfg.postings_pad
 
-    def local(arena_doc, arena_pos, arena_dist, basic_ns, t):
+    def local(arenas, t):
         me = jax.lax.axis_index(dp[0])
         for a in dp[1:]:
             me = me * mesh.shape[a] + jax.lax.axis_index(a)
         own = t["owner"] == me
         tt = {k: v for k, v in t.items() if k != "owner"}
         tt["active"] = t["active"] & own[:, None]
+        # this shard's packed arena (leading stacked-shard dim is 1 inside
+        # shard_map), keyed the way bucket_step_math expects
+        arena = {k: v[0] for k, v in arenas.items() if k != "basic_ns"}
+        arena["near_stop"] = arenas["basic_ns"][0]
         out = bucket_step_math(
-            arena_doc[0], arena_pos[0], arena_dist[0], basic_ns[0], tt,
+            arena, tt,
             P0=P0, P=Pc, impl=cfg.impl, interpret=cfg.interpret,
             ranked=ranked)
         if ranked:
@@ -167,17 +190,15 @@ def make_search_serve_step(cfg: SearchServeConfig, mesh,
 
     spec_shard = P(dp)
     spec_rep = P()
+    a_specs = {k: spec_shard for k in arena_specs(cfg, 1)}
     q_specs = {k: spec_rep for k in query_table_specs(cfg)}
     out_specs = (spec_rep, spec_rep, spec_rep) if ranked \
         else (spec_rep, spec_rep)
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(spec_shard, spec_shard, spec_shard, spec_shard,
-                             q_specs),
+    fn = shard_map(local, mesh=mesh, in_specs=(a_specs, q_specs),
                    out_specs=out_specs, check_vma=False)
 
     def step(arenas: dict, tables: dict):
-        return fn(arenas["arena_doc"], arenas["arena_pos"],
-                  arenas["arena_dist"], arenas["basic_ns"], tables)
+        return fn(arenas, tables)
     return step
 
 
@@ -224,34 +245,40 @@ class _ServeBatchExecutor(BatchExecutor):
         """Bucket the global arena to its owning dp shard host-side: shard d
         keeps exactly the postings of docs [d*docs_per_dp, (d+1)*docs_per_dp),
         in global order — so every stream stays a contiguous local segment
-        and a global fetch slice maps to one local slice per shard."""
+        and a global fetch slice maps to one local slice per shard.  Each
+        shard's selection is re-packed into its own block store (local
+        posting ordinals address it, exactly what the remapped fetch starts
+        produce); block-pad ordinals of the global arena are excluded from
+        the selection so local ordinals stay dense."""
+        from repro.core.postings import PackedPostings
         d = self.dev
         doc_np = d.arena_doc_np
-        pos_np = d.arena_pos_np
-        dist_np = d.arena_dist_np
         ns_np = d.near_stop_np
         nb = ns_np.shape[0]                      # basic stream length
         own = doc_np // self.docs_per_dp
-        self._sel = [np.nonzero(own == dd)[0] for dd in range(self.n_dp)]
-        a_pad = max(max((len(s) for s in self._sel), default=0), 1)
+        self._sel = [np.nonzero(d.arena_real_np & (own == dd))[0]
+                     for dd in range(self.n_dp)]
+        packs = [PackedPostings.from_columns(
+            {"doc": doc_np[sel], "pos": d.arena_pos_np[sel],
+             "dist": d.arena_dist_np[sel]}, fields=("doc", "pos", "dist"))
+            for sel in self._sel]
+        lw_pad = max(max(len(p.lanes) for p in packs), 1)
+        nblk_pad = max(max(p.n_blocks for p in packs), 1)
         nb_l = [int(np.searchsorted(s, nb)) for s in self._sel]
         nb_pad = max(max(nb_l, default=0), 1)
         k = ns_np.shape[1]
-        doc_l = np.zeros((self.n_dp, a_pad), np.int32)
-        pos_l = np.zeros((self.n_dp, a_pad), np.int32)
-        dist_l = np.zeros((self.n_dp, a_pad), np.int8)
+        lanes_l = np.zeros((self.n_dp, lw_pad), np.int32)
+        meta_l = np.zeros((self.n_dp, nblk_pad, 5), np.int32)
         ns_l = np.full((self.n_dp, nb_pad, k), -1, np.int16)
-        for dd, sel in enumerate(self._sel):
-            doc_l[dd, :len(sel)] = doc_np[sel]
-            pos_l[dd, :len(sel)] = pos_np[sel]
-            dist_l[dd, :len(sel)] = dist_np[sel]
+        for dd, (sel, p) in enumerate(zip(self._sel, packs)):
+            lanes_l[dd, :len(p.lanes)] = p.lanes
+            meta_l[dd, :p.n_blocks] = p.meta_matrix()
             ns_l[dd, :nb_l[dd]] = ns_np[sel[:nb_l[dd]]]
         dp = _dp_axes(self.mesh)
         shard = NamedSharding(self.mesh, P(dp))
         self.arenas = {
-            "arena_doc": jax.device_put(doc_l, shard),
-            "arena_pos": jax.device_put(pos_l, shard),
-            "arena_dist": jax.device_put(dist_l, shard),
+            "lanes": jax.device_put(lanes_l, shard),
+            "blk_meta": jax.device_put(meta_l, shard),
             "basic_ns": jax.device_put(ns_l, shard),
         }
 

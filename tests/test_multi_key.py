@@ -213,6 +213,69 @@ def test_planner_type5_shape(small_world):
     assert pair_fetches and all(f.pivot_from_dist for f in pair_fetches)
 
 
+def test_neighbor_distance_dial_parity(small_world):
+    """IndexParams.neighbor_distance decoupled from near_window (ND=4 vs the
+    default 8): the multi-key index shrinks (raw AND packed bytes); near
+    windows <= ND still ride multi-key lookups while wider windows fall back
+    to banded full ordinary-index reads (the planner's guard) — recall is
+    oracle-parity on stop-heavy near queries at BOTH window settings, per
+    query and batched."""
+    import dataclasses
+
+    from repro.core import (AdditionalIndexEngine, SearchRequest,
+                            brute_force_search)
+    from repro.core.builder import build_all
+    w = small_world
+    index8 = w["index"]
+    params = dataclasses.replace(index8.params, neighbor_distance=4)
+    assert params.multi_key_neighbor_distance == 4
+    index4 = build_all(w["corpus"], w["lex"], w["ana"], params)
+    assert index4.multi_key.neighbor_distance == 4
+    # the size dial actually dials: fewer postings, fewer raw + packed bytes
+    assert index4.multi_key.n_postings < index8.multi_key.n_postings
+    assert index4.multi_key.nbytes() < index8.multi_key.nbytes()
+    assert index4.multi_key.packed_nbytes() < index8.multi_key.packed_nbytes()
+    # every other stream is untouched by the dial
+    assert index4.expanded.pairs.n_postings == index8.expanded.pairs.n_postings
+    eng = AdditionalIndexEngine(index4)
+    rng = np.random.default_rng(99)
+    corpus = w["corpus"]
+    queries = []
+    while len(queries) < 24:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        n = int(rng.integers(2, 5))
+        if len(toks) <= 2 * n:
+            continue
+        st = int(rng.integers(0, len(toks) - 2 * n))
+        queries.append(toks[st:st + 2 * n:2].tolist())
+    streams_seen = set()
+    for window in (4, 8):
+        reqs = [SearchRequest(q, mode=MODE_NEAR, window=window)
+                for q in queries]
+        batch = eng.search_batch(reqs)
+        for q, req, r in zip(queries, reqs, batch):
+            per = eng.search(req)
+            assert np.array_equal(per.doc, r.doc), (q, window)
+            assert np.array_equal(per.pos, r.pos), (q, window)
+            positional, doc_level = brute_force_search(
+                corpus, index4, q, mode=MODE_NEAR, window=window)
+            if r.doc_only:
+                assert set(r.doc.tolist()) == doc_level, (q, window)
+            else:
+                got = set(zip(r.doc.tolist(), r.pos.tolist()))
+                assert got == positional, (q, window)
+            for sp in eng.plan(q, mode=MODE_NEAR, window=window).subplans:
+                if sp.qtype == QTYPE_MULTI:
+                    streams_seen |= {(window, f.stream) for g in sp.groups
+                                     for f in g.fetches}
+    # window <= ND used multi-key lookups; window > ND fell back to the
+    # banded ordinary-index escape
+    assert (4, "multi") in streams_seen
+    assert (8, "ordinary") in streams_seen
+    assert (8, "multi") not in streams_seen
+
+
 def test_auto_docs_per_shard_heuristic(small_world):
     """The heuristic is pinned at the canonical bench stats (ROADMAP's
     19-shard sweet spot) and behaves at the edges."""

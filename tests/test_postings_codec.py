@@ -1,0 +1,196 @@
+"""Packed block store codec (core/postings.PackedPostings): property and
+boundary coverage — exact round trips, block-boundary slices, max 17-bit
+positions, negative dist payloads, empty and single-posting lists, and
+width-class edges — plus the device unpack (kernels/ops.unpack_postings,
+ref math AND the Pallas kernel) against the numpy decode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fetch_tables import TABLE_POS_BITS
+from repro.core.postings import (BLOCK, PACK_WIDTHS, PackedPostings,
+                                 concat_packed, pack_dist_pair)
+from repro.kernels import ops
+
+
+def _random_cols(rng, n, doc_hi=3000, pos_bits=13):
+    return {
+        "doc": np.sort(rng.integers(0, doc_hi, n)).astype(np.int32),
+        "pos": rng.integers(0, 1 << pos_bits, n).astype(np.int32),
+        "dist": rng.integers(-15, 16, n).astype(np.int8),
+    }
+
+
+def _assert_roundtrip(pp, cols):
+    for f, col in cols.items():
+        assert np.array_equal(pp.decode(f), col.astype(np.int32)), f
+
+
+def test_roundtrip_exact_seeded():
+    """Multiset is too weak a promise: the store must round-trip each column
+    EXACTLY, element for element, across sizes spanning every tail shape."""
+    rng = np.random.default_rng(0)
+    sizes = [1, 2, 127, 128, 129, 255, 256, 257, 1000]
+    sizes += [int(rng.integers(1, 5000)) for _ in range(30)]
+    for n in sizes:
+        cols = _random_cols(rng, n)
+        _assert_roundtrip(PackedPostings.from_columns(cols), cols)
+
+
+def test_block_boundary_slices():
+    """decode(start, end) for slices that start/end exactly on, one before,
+    and one after block boundaries."""
+    rng = np.random.default_rng(1)
+    n = 5 * BLOCK + 17
+    cols = _random_cols(rng, n)
+    pp = PackedPostings.from_columns(cols)
+    edges = [0, 1, BLOCK - 1, BLOCK, BLOCK + 1, 2 * BLOCK, 3 * BLOCK - 1, n]
+    for s in edges:
+        for e in edges:
+            if s <= e:
+                for f in cols:
+                    assert np.array_equal(pp.decode(f, s, e),
+                                          cols[f][s:e].astype(np.int32)), (f, s, e)
+
+
+def test_max_17bit_positions():
+    """Positions at the top of the packed-key domain (2**17 - 1) round-trip;
+    a block whose pos span crosses 2**16 takes the 32-bit class and still
+    decodes exactly."""
+    n = 2 * BLOCK
+    pos = np.concatenate([np.zeros(BLOCK, np.int32),
+                          np.full(BLOCK, (1 << TABLE_POS_BITS) - 1, np.int32)])
+    mixed = np.arange(n, dtype=np.int32) * ((1 << TABLE_POS_BITS) // n)
+    for col in (pos, mixed):
+        pp = PackedPostings.from_columns({"pos": col})
+        assert np.array_equal(pp.decode("pos"), col)
+
+
+def test_negative_dist_payloads():
+    """Signed int8 dist incl. the extremes, and anchors below zero."""
+    dist = np.array([-128, 127, 0, -1, 1, -15, 15, -128] * BLOCK, np.int8)
+    pp = PackedPostings.from_columns({"dist": dist})
+    assert np.array_equal(pp.decode("dist").astype(np.int8), dist)
+    assert np.array_equal(pp.decode("dist"), dist.astype(np.int32))
+    # all-negative block: anchor is negative, deltas stay unsigned
+    neg = np.full(BLOCK, -7, np.int8)
+    pp = PackedPostings.from_columns({"dist": neg})
+    assert int(pp.anchors["dist"][0]) == -7
+    assert int(pp.field_width("dist")[0]) == 0
+    assert np.array_equal(pp.decode("dist"), np.full(BLOCK, -7, np.int32))
+
+
+def test_dpair_payload_roundtrip():
+    """The triples' packed nibble payload (int8 holding two 4-bit distances)
+    survives bit-exactly — decode returns the container's signed value."""
+    rng = np.random.default_rng(2)
+    d1 = rng.integers(0, 16, 500)
+    d2 = rng.integers(0, 16, 500)
+    dpair = pack_dist_pair(d1, d2)
+    pp = PackedPostings.from_columns({"dpair": dpair})
+    assert np.array_equal(pp.decode("dpair").astype(np.int8), dpair)
+
+
+def test_empty_and_single_posting_lists():
+    for n in (0, 1):
+        cols = _random_cols(np.random.default_rng(3), n)
+        pp = PackedPostings.from_columns(cols)
+        assert pp.n == n
+        assert pp.n_padded == BLOCK          # one (padded) block
+        _assert_roundtrip(pp, cols)
+    # pads decode to the edge-replicated tail value
+    cols = _random_cols(np.random.default_rng(4), 3)
+    pp = PackedPostings.from_columns(cols)
+    tail = pp.decode("doc", 3, BLOCK)
+    assert (tail == cols["doc"][-1]).all()
+
+
+@pytest.mark.parametrize("w", PACK_WIDTHS)
+def test_width_class_edges(w):
+    """A block whose span is exactly 2**w - 1 packs at width w; span 2**w
+    forces the next class up.  Both round-trip."""
+    span = (1 << w) - 1 if w else 0
+    base = 1000
+    col = np.full(BLOCK, base, np.int64)
+    col[1] = base + span
+    pp = PackedPostings.from_columns({"x": col.astype(np.int64)})
+    assert int(pp.field_width("x")[0]) == w
+    assert np.array_equal(pp.decode("x"), col.astype(np.int32))
+    if w < 32:
+        col[1] = base + span + 1
+        pp = PackedPostings.from_columns({"x": col})
+        nxt = PACK_WIDTHS[PACK_WIDTHS.index(w) + 1]
+        assert int(pp.field_width("x")[0]) == nxt
+        assert np.array_equal(pp.decode("x"), col.astype(np.int32))
+
+
+def test_full_int32_range():
+    """Width-32 blocks recover values exactly modulo 2**32 — i.e. bit-exact
+    int32 incl. both extremes in one block."""
+    x = np.array([-2**31, 2**31 - 1, 0, 12345] * (BLOCK // 4), np.int32)
+    pp = PackedPostings.from_columns({"x": x})
+    assert int(pp.field_width("x")[0]) == 32
+    assert np.array_equal(pp.decode("x"), x)
+
+
+def test_constant_blocks_cost_no_lanes():
+    """An all-constant column is width 0 everywhere: metadata only."""
+    c = np.full(10 * BLOCK, 42, np.int32)
+    pp = PackedPostings.from_columns({"c": c})
+    assert (pp.field_width("c") == 0).all()
+    assert len(pp.lanes) == 1                  # the single safety word
+    assert np.array_equal(pp.decode("c"), c)
+
+
+def test_concat_packed_block_aligned_ordinals():
+    """concat_packed shifts ordinals by each predecessor's PADDED count —
+    the contract stream bases in the executor arena rely on."""
+    rng = np.random.default_rng(5)
+    parts = [_random_cols(rng, n) for n in (200, 77, 128)]
+    stores = [PackedPostings.from_columns(c) for c in parts]
+    cat = concat_packed(stores)
+    base = 0
+    for c, s in zip(parts, stores):
+        for f in c:
+            assert np.array_equal(cat.decode(f, base, base + s.n),
+                                  c[f].astype(np.int32))
+        base += s.n_padded
+    assert cat.n_padded == base
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_unpack_ops_matches_numpy_decode(impl):
+    """Device unpack (gather + bit extract; ref math and the Pallas kernel)
+    == host numpy decode on random gathers, incl. repeated and boundary
+    ordinals."""
+    rng = np.random.default_rng(6)
+    n = 2000
+    cols = _random_cols(rng, n, doc_hi=100_000, pos_bits=TABLE_POS_BITS)
+    pp = PackedPostings.from_columns(cols, fields=("doc", "pos", "dist"))
+    arena = {"lanes": jnp.asarray(pp.lanes),
+             "blk_meta": jnp.asarray(pp.meta_matrix())}
+    idx_np = np.concatenate([rng.integers(0, n, 1000),
+                             [0, 1, BLOCK - 1, BLOCK, n - 1], [n - 1] * 19])
+    doc, pos, dist = ops.unpack_postings(
+        arena, jnp.asarray(idx_np.astype(np.int32)), implementation=impl,
+        interpret=True)
+    assert np.array_equal(np.asarray(doc), cols["doc"][idx_np])
+    assert np.array_equal(np.asarray(pos), cols["pos"][idx_np])
+    assert np.array_equal(np.asarray(dist), cols["dist"][idx_np].astype(np.int32))
+
+
+def test_unpack_fields_pallas_matches_ref_on_tiles():
+    """The raw bit-extract kernel on exact [R, 128] tiles, every width."""
+    rng = np.random.default_rng(7)
+    shape = (16, 128)
+    words = rng.integers(-2**31, 2**31, shape).astype(np.int32)
+    widths = rng.choice(PACK_WIDTHS, shape).astype(np.int32)
+    # shifts valid for the width: multiples of w below 32
+    slots = np.where(widths > 0, 32 // np.maximum(widths, 1), 1)
+    shifts = (rng.integers(0, 1 << 16, shape) % slots) * widths
+    anchors = rng.integers(-2**20, 2**20, shape).astype(np.int32)
+    args = [jnp.asarray(a.astype(np.int32))
+            for a in (words, shifts, widths, anchors)]
+    ref = ops.unpack_fields(*args, implementation="ref")
+    pal = ops.unpack_fields(*args, implementation="pallas", interpret=True)
+    assert np.array_equal(np.asarray(ref), np.asarray(pal))

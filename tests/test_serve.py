@@ -132,23 +132,31 @@ def test_serve_multi_shard_parity(small_world, paper_queries):
 
 def test_serve_smoke_dryrun_shapes():
     """The smoke-scale serve cell lowers and runs on 1 device with random
-    tables in the unified schema."""
+    tables in the unified schema (random postings packed into the block
+    store, padded out to the cfg's spec shapes)."""
     from repro.configs.registry import get_arch
+    from repro.core.postings import PackedPostings
+    from repro.serve.search_serve import arena_specs
     spec = get_arch("veretennikov")
     cfg = spec.make_smoke_config()
     mesh = make_host_mesh(data=1, model=1)
     step = make_search_serve_step(cfg, mesh)
     rng = np.random.default_rng(0)
-    arenas = {
-        "arena_doc": jax.numpy.asarray(
-            np.sort(rng.integers(0, 50, (1, cfg.n_arena))).astype(np.int32)),
-        "arena_pos": jax.numpy.asarray(
-            rng.integers(0, 400, (1, cfg.n_arena)).astype(np.int32)),
-        "arena_dist": jax.numpy.asarray(
-            rng.integers(-5, 6, (1, cfg.n_arena)).astype(np.int8)),
-        "basic_ns": jax.numpy.asarray(
-            np.full((1, cfg.n_basic, cfg.ns_k), -1, np.int16)),
-    }
+    pp = PackedPostings.from_columns(
+        {"doc": np.sort(rng.integers(0, 50, cfg.n_arena)).astype(np.int32),
+         "pos": rng.integers(0, 400, cfg.n_arena).astype(np.int32),
+         "dist": rng.integers(-5, 6, cfg.n_arena).astype(np.int8)},
+        fields=("doc", "pos", "dist"))
+    specs = arena_specs(cfg, 1)
+    parts = {"lanes": pp.lanes, "blk_meta": pp.meta_matrix()}
+    arenas = {}
+    for k, v in parts.items():
+        buf = np.zeros(specs[k].shape, np.int32)
+        assert len(v) <= buf.shape[1], (k, len(v))   # spec budgets hold
+        buf[0, :len(v)] = v
+        arenas[k] = jax.numpy.asarray(buf)
+    arenas["basic_ns"] = jax.numpy.asarray(
+        np.full((1, cfg.n_basic, cfg.ns_k), -1, np.int16))
     t = {}
     for k, s in query_table_specs(cfg).items():
         if k == "length":
