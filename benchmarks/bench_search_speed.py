@@ -158,6 +158,78 @@ def run_serve(w, queries, batch_size: int = 64,
             "serve": serve}
 
 
+def run_front(w, queries, batch_size: int = 64,
+              per_query_results=None) -> dict:
+    """Front-door pass (serve/front.py): the workload as INDIVIDUAL
+    requests through the serving front door — admission, micro-batch
+    coalescing, shape-bucket routing, dispatch, merge — with the result
+    cache disabled so the QPS is honest re-execution, not memoization.
+    Every response must be SERVED_EXACT and bit-identical to the per-query
+    results; nothing may shed at this offered load."""
+    from repro.serve.front import FrontDoor, FrontDoorConfig
+
+    cfg = FrontDoorConfig(max_queue=max(512, 2 * len(queries)),
+                          max_batch=batch_size,
+                          default_deadline_ms=600_000.0,
+                          cache_capacity=0, shard_timeout_s=600.0)
+    front = FrontDoor(w["index"], cfg=cfg)
+    reqs = _requests(queries)
+    front.search_batch(reqs)                        # warm every shape bucket
+    elapsed, results, stats = float("inf"), None, None
+    for _ in range(3):
+        front.stats = type(front.stats)()
+        t0 = time.perf_counter()
+        cur = front.search_batch(reqs)
+        dt = time.perf_counter() - t0
+        if dt < elapsed:
+            elapsed, results, stats = dt, cur, front.stats
+    front.close()
+    mismatched = 0
+    if per_query_results is not None:
+        for r1, r2 in zip(per_query_results, results):
+            if not (np.array_equal(r1.doc, r2.doc)
+                    and np.array_equal(r1.pos, r2.pos)
+                    and r1.postings_read == r2.postings_read):
+                mismatched += 1
+    return {"qps": len(reqs) / elapsed,
+            "p50_ms": stats.percentile(50),
+            "p95_ms": stats.percentile(95),
+            "p99_ms": stats.percentile(99),
+            "shed": stats.shed,
+            "non_exact": sum(r.status != "SERVED_EXACT" for r in results),
+            "result_mismatches": mismatched}
+
+
+def run_ranked_flex_ab(w, queries, limit: int | None = None) -> dict:
+    """A/B for the per-query flex ranked path: pow2-padded jit'd group
+    steps (the default) vs the old eager per-group loop
+    (`Executor.ranked_jit = False`).  Both sides re-measured live each run,
+    same precedent as near_stop_confined_misses_type4_before — recorded
+    numbers from dead code drift silently."""
+    eng = w["engine"]
+    qs = queries if limit is None else queries[:limit]
+    reqs = _requests(qs, rank=True)
+    out = {}
+    try:
+        for jit_on, key in ((True, "ranked_qps_flex"),
+                            (False, "ranked_qps_flex_eager")):
+            eng.executor.ranked_jit = jit_on
+            for req in reqs:                        # warm
+                eng.search(req)
+            best = float("inf")
+            for _ in range(2):
+                t0 = time.perf_counter()
+                for req in reqs:
+                    eng.search(req)
+                best = min(best, time.perf_counter() - t0)
+            out[key] = len(reqs) / best
+    finally:
+        eng.executor.ranked_jit = True
+    out["ranked_flex_jit_speedup"] = (out["ranked_qps_flex"]
+                                      / out["ranked_qps_flex_eager"])
+    return out
+
+
 def run_ranked(w, queries, batch_size: int = 64, serve=None,
                oracle_limit: int | None = None) -> dict:
     """Proximity-ranked pass (arXiv:2108.00410): the same workload with
@@ -373,6 +445,23 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
         rk = run_ranked(w, queries, batch_size=batch_size, serve=s["serve"],
                         oracle_limit=None if n_queries <= 128 else 120)
         out.update(rk)
+        # front door: individual requests coalesced into shape-bucketed
+        # micro-batches — the serve-tier QPS acceptance number (>= 10x the
+        # PR 5 fixed-slab serve baseline of 2.8), plus latency percentiles
+        f = run_front(w, queries, batch_size=batch_size,
+                      per_query_results=add_results)
+        out["front_qps"] = f["qps"]
+        out["front_p50_ms"] = f["p50_ms"]
+        out["front_p95_ms"] = f["p95_ms"]
+        out["front_p99_ms"] = f["p99_ms"]
+        out["front_shed"] = f["shed"]
+        out["front_non_exact"] = f["non_exact"]
+        out["front_result_mismatches"] = f["result_mismatches"]
+        # flex ranked path A/B: jit'd pow2-padded group steps vs the old
+        # eager loop (both measured live, capped — the flex loop is the
+        # slow per-query path by construction)
+        out.update(run_ranked_flex_ab(
+            w, queries, limit=None if n_queries <= 128 else 200))
         # segmented gather: per-shard cost roughly flat, not linear
         out["shard_scaling"] = run_shard_scaling(w, queries,
                                                  batch_size=batch_size)

@@ -1,21 +1,20 @@
-"""End-to-end serving driver: batched phrase queries through the unified
-serve tier (the same batch-executor tables and bucket math the engine runs,
-shard_map'd over document shards — and the same step the multi-pod dry-run
-lowers at 512 chips), with straggler-mitigating dispatch across simulated
-document shards.
+"""End-to-end serving driver, now through the serving front door
+(serve/front.py): individual SearchRequests are admitted, coalesced into
+deadline-bounded micro-batches, routed to shape buckets, fanned out over
+replicated document shards (dist/fault_tolerance.ShardDispatcher), and
+merged bit-identically to `engine.search_batch` — with explicit
+SERVED_EXACT / SERVED_DEGRADED / SHED statuses instead of silent failure
+when shards die.
 
     PYTHONPATH=src python examples/search_serve.py
 """
-import time
-
 import numpy as np
 
 from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
                         MODE_NEAR, SearchRequest, build_all, generate_corpus,
                         make_lexicon_and_analyzer)
-from repro.dist.fault_tolerance import ShardDispatcher, merge_topk
-from repro.launch.mesh import make_host_mesh
-from repro.serve.search_serve import SearchServe, SearchServeConfig
+from repro.dist.chaos import ChaosShard
+from repro.serve import FrontDoor, FrontDoorConfig, build_doc_shards
 
 
 def main():
@@ -26,16 +25,20 @@ def main():
     index = build_all(corpus, lex, ana)
     engine = AdditionalIndexEngine(index)
 
-    mesh = make_host_mesh(data=1, model=1)
-    cfg = SearchServeConfig(queries=16, postings_pad=8192, seed_pad=2048,
-                            n_basic=1, n_expanded=1, n_stop=1, n_first=1,
-                            n_multi=1)
-    serve = SearchServe(index, cfg, mesh)
+    # two replicated document shards behind the front door; generous
+    # timeouts so first-call jit compiles never read as stragglers
+    backends, replicas = build_doc_shards(corpus, index, 2, replicate=True)
+    chaos = [ChaosShard(b) for b in backends]
+    front = FrontDoor(index, backends=chaos, replicas=replicas,
+                      cfg=FrontDoorConfig(default_deadline_ms=600_000.0,
+                                          shard_timeout_s=120.0,
+                                          retry_backoff_ms=5.0))
 
-    # query batch from indexed documents
+    # individual queries from indexed documents — the front door does the
+    # batching, not the client
     rng = np.random.default_rng(0)
     requests = []
-    while len(requests) < cfg.queries:
+    while len(requests) < 16:
         d = int(rng.integers(corpus.n_docs))
         toks = corpus.doc(d)
         if len(toks) < 10:
@@ -43,52 +46,57 @@ def main():
         st = int(rng.integers(len(toks) - 6))
         requests.append(SearchRequest(toks[st:st + 3].tolist()))
 
-    results = serve.search_batch(requests)      # warm
-    t0 = time.perf_counter()
-    results = serve.search_batch(requests)
-    dt = time.perf_counter() - t0
-    print(f"serve: {cfg.queries} queries in {dt*1e3:.1f} ms "
-          f"({dt/cfg.queries*1e3:.2f} ms/query)")
+    tickets = [front.submit(r, client="example") for r in requests]
+    results = [t.result() for t in tickets]
+    st = front.stats
+    print(f"front door: {st.submitted} submitted -> {st.served_exact} exact "
+          f"in {st.batches} micro-batches, p99 {st.percentile(99):.1f} ms")
     for i in range(4):
         r = results[i]
         pairs = list(zip(r.doc.tolist(), r.pos.tolist()))
-        print(f"  q{i} {list(requests[i].surface_ids)}: {len(r.doc)} hits, "
-              f"first: {pairs[:4]}")
+        print(f"  q{i} {list(requests[i].surface_ids)}: {r.status}, "
+              f"shards {r.shards}, {len(r.doc)} hits, first: {pairs[:4]}")
 
-    # the unified tier must agree with the engine bit-for-bit
+    # SERVED_EXACT must agree with the engine bit-for-bit — including the
+    # postings accounting, despite the doc-sharded backends
     wants = engine.search_batch(requests)
     assert all(np.array_equal(w.doc, r.doc) and np.array_equal(w.pos, r.pos)
+               and w.postings_read == r.postings_read
                for w, r in zip(wants, results))
-    print("serve == engine.search_batch on all queries")
+    print("front == engine.search_batch on all queries")
 
-    # ranked serving: same postings, proximity-scored top-k DocHits,
+    # a repeated query is a plan-signature cache hit
+    again = front.search(requests[0], client="example")
+    assert again.cached and again.status == "SERVED_EXACT"
+    print(f"cache: repeat query served from cache "
+          f"({front.stats.cache_hits} hit)")
+
+    # ranked serving through the same door: proximity-scored top-k DocHits,
     # bit-identical to the engine's ranked batch
     ranked_reqs = [SearchRequest(r.surface_ids, mode=MODE_NEAR, rank=True,
                                  top_k=3) for r in requests[:4]]
-    ranked = serve.search_batch(ranked_reqs)
+    ranked = front.search_batch(ranked_reqs, client="example")
     ranked_eng = engine.search_batch(ranked_reqs)
     assert all(np.array_equal(w.doc_ids, g.doc_ids)
                and np.array_equal(w.doc_scores, g.doc_scores)
                for w, g in zip(ranked_eng, ranked))
-    print("ranked serve == ranked engine; sample top-k:")
+    print("ranked front == ranked engine; sample top-k:")
     for req, r in zip(ranked_reqs, ranked[:2]):
         print(f"  {list(req.surface_ids)}: "
               f"{[(h.doc, round(h.score, 3)) for h in r.hits]}")
 
-    # straggler-mitigating dispatch across simulated shard replicas
-    def shard_fn(delay):
-        def fn(batch):
-            if delay > 0.05:
-                raise TimeoutError("straggler")
-            return np.array([[1.0, delay]])
-        return fn
-
-    disp = ShardDispatcher([shard_fn(0.0), shard_fn(0.1), shard_fn(0.01)],
-                           replica_fns=[shard_fn(0.0)] * 3, timeout=0.05)
-    res = disp.dispatch("batch")
-    print(f"\ndispatcher: {disp.stats.total} batch, "
-          f"{disp.stats.redispatched} re-dispatched to replicas, "
-          f"top-k merged: {merge_topk(res, 2).tolist()}")
+    # kill a primary: the replica absorbs the re-dispatch, still EXACT
+    # (a FRESH query — a repeat would be a cache hit and dodge the shards)
+    chaos[1].set(fail=True)
+    toks = corpus.doc(7)
+    fresh = SearchRequest(toks[4:7].tolist())
+    rescued = front.search(fresh, client="example")
+    assert rescued.status == "SERVED_EXACT"
+    print(f"replica rescue: primary 1 down, replica answered "
+          f"({front.dispatcher.stats.redispatched} re-dispatched) -> "
+          f"{rescued.status}")
+    chaos[1].set()
+    front.close()
 
 
 if __name__ == "__main__":

@@ -43,6 +43,18 @@ import numpy as np
 MODE_PHRASE = "phrase"
 MODE_NEAR = "near"
 
+# -- serving statuses (serve.front) -----------------------------------------
+# Every response handed out by the serving front door carries exactly one of
+# these.  Engine / serve-tier responses are exact by construction, so the
+# dataclass default is STATUS_SERVED_EXACT and only the front door ever
+# downgrades it.
+STATUS_SERVED_EXACT = "SERVED_EXACT"        # all shards answered, on time
+STATUS_SERVED_DEGRADED = "SERVED_DEGRADED"  # partial shards and/or past the
+                                            # deadline: results are a correct
+                                            # merge of the contributing shards
+STATUS_SHED = "SHED"                        # admission control refused the
+                                            # request: no search executed
+
 _LEGACY_MSG = ("positional search signatures are deprecated: pass a "
                "SearchRequest (repro.core.api) — e.g. "
                "engine.search(SearchRequest(ids, mode=MODE_NEAR)) — and "
@@ -79,6 +91,11 @@ class SearchRequest:
                 `max_results` semantics).  None = unlimited.
     rank      : compute proximity relevance and order hits by it.
     ranking   : scoring weights (ignored unless rank=True).
+    deadline_ms : latency budget for the serving front door (relative; the
+                front converts it to an absolute deadline at admission and
+                sheds the request if it cannot be met).  None = the front's
+                default.  Engines ignore it — a direct engine call always
+                runs to completion.
     """
     surface_ids: tuple
     mode: str = MODE_PHRASE
@@ -86,6 +103,7 @@ class SearchRequest:
     top_k: int | None = None
     rank: bool = False
     ranking: RankingParams = RankingParams()
+    deadline_ms: float | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "surface_ids",
@@ -94,6 +112,18 @@ class SearchRequest:
             raise ValueError(f"unknown mode {self.mode!r}")
         if self.top_k is not None and self.top_k < 0:
             raise ValueError("top_k must be >= 0")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError("deadline_ms must be > 0")
+
+    def plan_signature(self) -> tuple:
+        """Hashable identity of the *plan* this request compiles to — every
+        field that changes the result, and nothing that doesn't.  Two
+        requests with equal signatures get bit-identical responses, which is
+        what makes it the front door's cache key.  `deadline_ms` is
+        deliberately excluded: it shapes scheduling, not results."""
+        return (self.surface_ids, self.mode, self.window, self.top_k,
+                self.rank, self.ranking.proximity_scale,
+                self.ranking.doc_only_score)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +163,19 @@ class SearchResponse:
     doc_ids: np.ndarray | None = None         # ranked docs (top_k applied)
     doc_scores: np.ndarray | None = None      # float32, aligned with doc_ids
     request: SearchRequest | None = None
+    # -- execution provenance -----------------------------------------------
+    # positional-key count per supported subplan: how many anchor keys each
+    # tier-split subquery matched BEFORE the union/dedup merge.  This is what
+    # lets a doc-sharded front door reconstruct the global fallback decision
+    # (a subplan falls back iff it has fallback groups and zero positional
+    # keys across ALL shards) without re-executing anything.
+    subplan_pos_hits: tuple = ()
+    # -- serving transport metadata (set by serve.front only) ---------------
+    status: str = STATUS_SERVED_EXACT
+    shards: tuple = ()             # doc-shard indices that contributed
+    cached: bool = False           # served from the hot-query result cache
+    shed_reason: str = ""          # SHED / DEGRADED: why ("" otherwise)
+    latency_ms: float | None = None
     _hits: list | None = dataclasses.field(default=None, repr=False)
 
     def __len__(self):

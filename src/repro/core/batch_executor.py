@@ -444,11 +444,13 @@ class BatchExecutor:
         pad)."""
         return G_CAP, F_CAP, F_SPLIT_CAP, P_CAP, P_CAP
 
-    def _order_groups(self, groups):
+    def _order_groups(self, groups, ranked=False):
         """Seed-first ordering; None when no valid seed exists.  Shared with
         the flexible ranked path (executor.order_groups_seed_first) so the
-        two executors accumulate float32 scores in the same group order."""
-        return order_groups_seed_first(groups)
+        two executors accumulate float32 scores in the same group order
+        (ranked ordering is plan-order deterministic — see
+        order_groups_seed_first)."""
+        return order_groups_seed_first(groups, ranked=ranked)
 
     def _task_fits(self, groups) -> bool:
         g_cap, f_cap, _, _, _ = self._caps()
@@ -542,7 +544,7 @@ class BatchExecutor:
                 continue
             main_dead = (not sp.groups) or any(not g.fetches for g in sp.groups)
             if not main_dead:
-                ordered = self._order_groups(sp.groups)
+                ordered = self._order_groups(sp.groups, ranked=ranked)
                 if ordered is None or not self._task_fits(ordered):
                     return False
                 checks = ordered[0].fetches[0].stop_checks

@@ -108,9 +108,12 @@ class AdditionalIndexEngine(_BatchSearchMixin):
 
     def __init__(self, index: IndexSet, batch_impl: str = "ref",
                  interpret: bool = True, docs_per_shard: int | None = None,
-                 windowed_near_stop: bool = True):
+                 windowed_near_stop: bool = True, occ_counts=None):
         self.index = index
-        self.planner = Planner(index, windowed_near_stop=windowed_near_stop)
+        # occ_counts: cluster-global occurrence stats for doc-sharded
+        # deployments (serve.front) — see Planner.__init__
+        self.planner = Planner(index, windowed_near_stop=windowed_near_stop,
+                               occ_counts=occ_counts)
         self.executor = Executor(index)
         self._init_batch(batch_impl, interpret, docs_per_shard)
 

@@ -47,11 +47,21 @@ def _next_pow2(n: int, floor: int = 256) -> int:
     return p
 
 
-def order_groups_seed_first(groups):
+def order_groups_seed_first(groups, ranked=False):
     """Seed-first execution order shared by the batched tensorizer and the
     flexible ranked path (identical order => identical float32 score
     accumulation => bit-identical ranked output).  None when no valid seed
-    exists (no band-0 group and no near-stop-checked pivot)."""
+    exists (no band-0 group and no near-stop-checked pivot).
+
+    Unranked seeds pick the smallest band-0 group by *resolved* posting
+    count — a pure speed heuristic (the surviving key set is seed-invariant).
+    Ranked seeds instead take the FIRST band-0 group in plan order: plan
+    order is lexicon/params-driven, so a doc-sharded deployment (serve.front)
+    where every shard resolves different posting lengths still accumulates
+    float32 scores in one global order — shard merges stay bit-identical to
+    the unsharded engine.  (Plan construction puts the pivot's own group
+    first whenever it exists, so the ranked seed is the natural anchor.)
+    """
     ns = [g for g in groups if any(f.stop_checks for f in g.fetches)]
     if ns:
         seed = ns[0]
@@ -59,7 +69,10 @@ def order_groups_seed_first(groups):
         band0 = [g for g in groups if g.band == 0]
         if not band0:
             return None
-        seed = min(band0, key=lambda g: sum(f.length for f in g.fetches))
+        if ranked:
+            seed = band0[0]
+        else:
+            seed = min(band0, key=lambda g: sum(f.length for f in g.fetches))
     return [seed] + [g for g in groups if g is not seed]
 
 
@@ -125,6 +138,32 @@ def _sort_keys(keys):
 
 
 @jax.jit
+def _ranked_seed_init(a, d_self, bias):
+    """Fused seed-side init of the ranked accumulation (one dispatch):
+    validity mask, bias + w(self-delta) score, composite probe keys."""
+    a_valid = a < SENTINEL
+    score = bias + proximity_w(d_self)
+    probe = jnp.where(a_valid, a << SCORE_DELTA_BITS, SENTINEL)
+    return a_valid, score, probe
+
+
+@jax.jit
+def _ranked_group_step(comp_sorted, probe, a_valid, score):
+    """One constraint group of the ranked flex path, fused into a single
+    dispatch: banded min-delta membership + masked score accumulation.
+    All operands are pow2-padded (pads probe at SENTINEL => no hit; pads in
+    comp_sorted sort last and never fall inside a band), so the compile
+    cache stays bounded like the batched executor's shape buckets.  The
+    band rides in `comp_sorted`'s companion scalar (traced — no recompile
+    per window width)."""
+    from repro.kernels.ops import I32_SENTINEL
+    comp, band = comp_sorted
+    delta_g = scored_probe(comp[None], probe[None], band)[0]
+    hit = delta_g < I32_SENTINEL
+    return a_valid & hit, score + jnp.where(hit, proximity_w(delta_g), 0.0)
+
+
+@jax.jit
 def _near_stop_ok(slots, packed_targets, target_valid):
     """slots [N, K]; packed_targets [C, M]: per check C, any of M ids at the
     required delta must appear among the K slots; all checks must pass."""
@@ -171,7 +210,8 @@ def merge_subplan_results(all_keys: list, doc_only_keys: list, postings: int,
     resp = SearchResponse(
         doc=np.empty(0, np.int32), pos=np.empty(0, np.int32),
         postings_read=postings, used_fallback=used_fallback, doc_only=False,
-        subplan_types=tuple(types), ranked=ranked, request=request)
+        subplan_types=tuple(types), ranked=ranked, request=request,
+        subplan_pos_hits=tuple(len(k) for k in all_keys))
     have_pos = any(len(k) for k in all_keys)
     if have_pos and not ranked:
         keys = np.unique(np.concatenate(all_keys))
@@ -409,36 +449,71 @@ class Executor:
         res = np.asarray(a)[np.asarray(a_valid)]
         return res[res < SENTINEL]
 
+    # toggled off only by the benchmark's A/B pass (ranked_qps_flex_eager)
+    ranked_jit = True
+
     def _run_groups_ranked(self, sp: SubPlan):
         """Ranked twin of _run_groups: surviving anchors AND their proximity
         scores, accumulated in the SAME canonical float32 order as the
         batched bucket step (bias, seed self-delta, then each constraint
         group seed-first) — identical group sets give bit-identical scores.
+
+        The per-query ranked path is the flex escape a deadline-bounded
+        front door falls back to, so it runs pow2-padded through two fused
+        jit kernels (seed init + one dispatch per constraint group) instead
+        of the old eager op chain; `ranked_jit=False` keeps the eager chain
+        alive for the benchmark's A/B comparison.
         """
         from repro.kernels.ops import I32_SENTINEL
         groups = sp.groups
         empty = (np.empty(0, np.int64), np.empty(0, np.float32))
         if not groups or any(not g.fetches for g in groups):
             return empty
-        ordered = order_groups_seed_first(groups)
+        ordered = order_groups_seed_first(groups, ranked=True)
         if ordered is None:
             return empty
         seed = ordered[0]
         a_parts = [self._fetch_keys(f, sp.mode) for f in seed.fetches]
-        a = jnp.concatenate([p.astype(jnp.int64) for p in a_parts])
-        d_self = jnp.concatenate([self._fetch_delta(f) for f in seed.fetches])
-        a_valid = a < SENTINEL
+        d_parts = [self._fetch_delta(f) for f in seed.fetches]
         bias = jnp.float32(sp.n_slots - len(groups))
-        score = bias + proximity_w(d_self)
-        probe = jnp.where(a_valid, a << SCORE_DELTA_BITS, SENTINEL)
+        n = sum(int(p.shape[0]) for p in a_parts)
+        if not self.ranked_jit:
+            a = jnp.concatenate([p.astype(jnp.int64) for p in a_parts])
+            d_self = jnp.concatenate(d_parts)
+            a_valid = a < SENTINEL
+            score = bias + proximity_w(d_self)
+            probe = jnp.where(a_valid, a << SCORE_DELTA_BITS, SENTINEL)
+            for g in ordered[1:]:
+                comp, _, _ = self._group_keys(g, sp.mode, scored=True)
+                delta_g = scored_probe(comp[None], probe[None], int(g.band))[0]
+                hit = delta_g < I32_SENTINEL
+                a_valid &= hit
+                score = score + jnp.where(hit, proximity_w(delta_g), 0.0)
+            sel = np.asarray(a_valid)
+            return np.asarray(a)[sel], np.asarray(score, np.float32)[sel]
+        # pow2-pad the seed side once (pads = SENTINEL keys, delta 0): every
+        # downstream dispatch then hits a bounded set of compiled shapes
+        A = _next_pow2(max(n, 1), floor=128)
+        a = jnp.full((A,), SENTINEL, dtype=jnp.int64)
+        d_self = jnp.zeros((A,), dtype=jnp.int32)
+        off = 0
+        for p, dp in zip(a_parts, d_parts):
+            a = jax.lax.dynamic_update_slice(a, p.astype(jnp.int64), (off,))
+            d_self = jax.lax.dynamic_update_slice(d_self, dp, (off,))
+            off += int(p.shape[0])
+        a_valid, score, probe = _ranked_seed_init(a, d_self, bias)
         for g in ordered[1:]:
             comp, _, _ = self._group_keys(g, sp.mode, scored=True)
-            delta_g = scored_probe(comp[None], probe[None], int(g.band))[0]
-            hit = delta_g < I32_SENTINEL
-            a_valid &= hit
-            score = score + jnp.where(hit, proximity_w(delta_g), 0.0)
-        sel = np.asarray(a_valid)
-        return np.asarray(a)[sel], np.asarray(score, np.float32)[sel]
+            Pb = _next_pow2(max(int(comp.shape[0]), 1), floor=128)
+            if int(comp.shape[0]) < Pb:
+                comp = jnp.concatenate(
+                    [comp, jnp.full((Pb - int(comp.shape[0]),), SENTINEL,
+                                    dtype=jnp.int64)])
+            a_valid, score = _ranked_group_step(
+                (comp, jnp.int32(g.band)), probe, a_valid, score)
+        sel = np.asarray(a_valid)[:n]
+        return (np.asarray(a)[:n][sel],
+                np.asarray(score, np.float32)[:n][sel])
 
     def execute(self, plan: QueryPlan, max_results: int | None = None,
                 request: SearchRequest | None = None) -> SearchResponse:

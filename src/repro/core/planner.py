@@ -137,10 +137,16 @@ def split_query_parts(n: int, min_len: int, max_len: int) -> list[tuple[int, int
 
 
 class Planner:
-    def __init__(self, index: IndexSet, windowed_near_stop: bool = True):
+    def __init__(self, index: IndexSet, windowed_near_stop: bool = True,
+                 occ_counts=None):
         self.index = index
         self.lex = index.lexicon
-        self._occ_counts = index.base_occ_counts()
+        # `occ_counts` overrides the pivot/seed statistics with CLUSTER-WIDE
+        # counts: a doc-sharded deployment (serve.front) plans every shard
+        # with the global numbers so pick_pivot lands on the same slot
+        # everywhere — the precondition for bit-identical shard merges.
+        self._occ_counts = (index.base_occ_counts() if occ_counts is None
+                            else np.asarray(occ_counts))
         # expanded-pair reach per basic form: max(ProcessingDistance,
         # near_window) — precomputed once; planning is on the per-query
         # latency path

@@ -105,9 +105,12 @@ class ShardDispatcher:
         # timeout, and its replica must still find a free one
         self._pool = ThreadPoolExecutor(max_workers=max(2 * len(self.shard_fns), 1))
 
-    def dispatch(self, batch) -> list:
+    def dispatch(self, batch, shards: Optional[Sequence[int]] = None) -> list:
         """Returns one result per shard (replica result where the primary
-        failed; None when both did).
+        failed; None when both did).  The list is always len(shard_fns);
+        `shards` restricts the fan-out to a subset of shard indices (the
+        front door's bounded retry re-dispatches only the shards still
+        missing), leaving every other slot None.
 
         All primaries are submitted up front and waited against a single
         shared deadline per phase (primaries, then replicas), so a dispatch
@@ -117,8 +120,10 @@ class ShardDispatcher:
         the 2N-sized pool absorbs one such generation, persistent zombies
         need process-level supervision."""
         self.stats.total += 1
-        futures = [self._pool.submit(fn, batch) for fn in self.shard_fns]
-        out: list = [None] * len(futures)
+        idxs = range(len(self.shard_fns)) if shards is None else shards
+        futures = {i: self._pool.submit(self.shard_fns[i], batch)
+                   for i in idxs}
+        out: list = [None] * len(self.shard_fns)
 
         def collect(pending: dict) -> dict:
             """pending: {shard_i: future}; returns the shards that failed."""
@@ -132,7 +137,7 @@ class ShardDispatcher:
                     failed[i] = fut
             return failed
 
-        down = collect(dict(enumerate(futures)))
+        down = collect(futures)
         self.stats.redispatched += len(down)
         if self.replica_fns is None:
             self.stats.failed += len(down)
@@ -141,6 +146,10 @@ class ShardDispatcher:
                    for i in down}
         self.stats.failed += len(collect(retries))
         return out
+
+    def close(self):
+        """Release the worker pool without waiting on hung shard calls."""
+        self._pool.shutdown(wait=False)
 
 
 def merge_topk(results: Sequence, k: int) -> np.ndarray:

@@ -1,4 +1,7 @@
 """Serving layer: batched phrase-query serving + LM decode serving."""
+from repro.serve.front import (FrontDoor, FrontDoorConfig,  # noqa: F401
+                               FrontStats, ShardBackend, TokenBucket,
+                               build_doc_shards, merge_shard_responses)
 from repro.serve.search_serve import (SearchServe, SearchServeConfig,  # noqa: F401
                                       arena_specs, make_search_serve_step,
                                       query_table_specs)

@@ -38,10 +38,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.api import SearchRequest, SearchResponse, as_request
-from repro.core.batch_executor import BatchExecutor, bucket_step_math
+from repro.core.batch_executor import P_FLOOR, BatchExecutor, bucket_step_math
 from repro.core.builder import IndexSet
 from repro.core.engine import _coerce_requests
-from repro.core.executor import SENTINEL
+from repro.core.executor import SENTINEL, _next_pow2
 from repro.core.fetch_tables import batch_table_specs
 from repro.core.planner import MODE_PHRASE, Planner
 
@@ -52,11 +52,16 @@ __all__ = ["SearchServeConfig", "SearchServe", "arena_specs",
 @dataclasses.dataclass(frozen=True)
 class SearchServeConfig:
     name: str = "veretennikov-serve"
+    # groups/fetch_slots/postings_pad/seed_pad are CAPS: they size the
+    # dry-run cells and bound tensorization, but live steps run through a
+    # <=3-tier (G, F, P0, P) ladder derived from the first batch's actual
+    # row population (plus pow2-tight T), so a smoke-scale workload is not
+    # billed for the full production slab
     queries: int = 64              # query batch size (sizing hint for rows)
-    rows: int = 0                  # T: execution rows per step; 0 = 2*queries
-    groups: int = 8                # G: fetch groups per row (seed + G-1)
-    fetch_slots: int = 8           # F: union slots per group (forms + splits)
-    postings_pad: int = 32768      # P: padded postings per constraint slot
+    rows: int = 0                  # T cap: execution rows per step; 0 = 2*queries
+    groups: int = 8                # G cap: fetch groups per row (seed + G-1)
+    fetch_slots: int = 8           # F cap: union slots per group (forms + splits)
+    postings_pad: int = 32768      # P cap: padded postings per constraint slot
     seed_pad: int = 0              # P0: seed (pivot) slot pad; 0 = postings_pad.
                                    # The planner seeds with the RAREST list,
                                    # so a small pad bounds the seed gather +
@@ -141,7 +146,9 @@ def query_table_specs(cfg: SearchServeConfig) -> dict:
 
 
 def make_search_serve_step(cfg: SearchServeConfig, mesh,
-                           ranked: bool | None = None):
+                           ranked: bool | None = None,
+                           p_seed: int | None = None,
+                           postings_pad: int | None = None):
     """Returns step(arenas, tables) -> (keys [T, F*P0] int64, found bool)
     — plus proximity scores [T, F*P0] float32 when `ranked` (default:
     cfg.ranked), computed by the SAME bucket math the engine jit's and
@@ -158,7 +165,10 @@ def make_search_serve_step(cfg: SearchServeConfig, mesh,
     if ranked is None:
         ranked = cfg.ranked
     dp = _dp_axes(mesh)
-    P0, Pc = cfg.p_seed, cfg.postings_pad
+    # cfg gives the CAP pads (the dry-run cell shapes); the serve executor's
+    # tier ladder lowers tighter variants for the live plan population
+    P0 = p_seed or cfg.p_seed
+    Pc = postings_pad or cfg.postings_pad
 
     def local(arenas, t):
         me = jax.lax.axis_index(dp[0])
@@ -232,14 +242,23 @@ class _ServeBatchExecutor(BatchExecutor):
         self.shards_per_dp = max(1, -(-d.n_shards // self.n_dp))
         self.docs_per_dp = dps * self.shards_per_dp
         self._build_dp_arenas(index)
-        self._steps = {False: jax.jit(make_search_serve_step(cfg, mesh,
-                                                            ranked=False))}
+        self._tiers: list | None = None
+        self.slab_stats = {"steps": 0, "slab_rows": 0, "live_rows": 0,
+                           "slab_elems": 0, "live_elems": 0}
+        self._steps = {(False, cfg.p_seed, cfg.postings_pad):
+                       jax.jit(make_search_serve_step(cfg, mesh,
+                                                      ranked=False))}
 
-    def _step_for(self, ranked: bool):
-        if ranked not in self._steps:
-            self._steps[ranked] = jax.jit(
-                make_search_serve_step(self.cfg, self.mesh, ranked=ranked))
-        return self._steps[ranked]
+    def _step_for(self, ranked: bool, p_seed: int | None = None,
+                  postings_pad: int | None = None):
+        cfg = self.cfg
+        key = (ranked, p_seed or cfg.p_seed, postings_pad or cfg.postings_pad)
+        if key not in self._steps:
+            self._steps[key] = jax.jit(
+                make_search_serve_step(cfg, self.mesh, ranked=ranked,
+                                       p_seed=p_seed,
+                                       postings_pad=postings_pad))
+        return self._steps[key]
 
     def _build_dp_arenas(self, index: IndexSet):
         """Bucket the global arena to its owning dp shard host-side: shard d
@@ -309,37 +328,103 @@ class _ServeBatchExecutor(BatchExecutor):
             self._run_rows_variant([r for r in rows if r.task.ranked == ranked],
                                    ranked)
 
+    def _row_shape(self, row) -> tuple:
+        """Pow2-padded (G, F, P0, P) this row actually needs, clipped to the
+        cfg caps (tensorization already guarantees the raw requirements
+        fit them)."""
+        cfg = self.cfg
+        G = max(2, _next_pow2(len(row.groups), floor=2))
+        F = _next_pow2(max(len(g.slots) for g in row.groups), floor=1)
+        P0 = _next_pow2(max((ln for _, _, ln in row.groups[0].slots),
+                            default=1), floor=P_FLOOR)
+        Pc = _next_pow2(max((ln for g in row.groups[1:] for _, _, ln in g.slots),
+                            default=1), floor=P_FLOOR)
+        return (min(G, cfg.groups), min(F, cfg.fetch_slots),
+                min(P0, cfg.p_seed), min(Pc, cfg.postings_pad))
+
+    @staticmethod
+    def _tier_volume(s: tuple) -> int:
+        G, F, P0, Pc = s
+        return F * P0 + (G - 1) * F * Pc
+
+    def _tier_ladder(self, rows: list) -> list:
+        """Derive <= 3 nested (G, F, P0, P) tiers from the first batch's row
+        population (the auto_docs_per_shard move applied to table shapes):
+        rows volume-sorted, elementwise max over tertiles, running max keeps
+        the ladder monotone.  cfg's slab sizes stay pure CAPS — the dry-run
+        cell contract — and serve as the emergency tier for later rows that
+        outgrow the population the ladder was derived from."""
+        if self._tiers is None:
+            shapes = sorted((self._row_shape(r) for r in rows),
+                            key=self._tier_volume)
+            n = len(shapes)
+            tiers, prev = [], (0, 0, 0, 0)
+            for third in (shapes[:max(n // 3, 1)],
+                          shapes[max(n // 3, 1):max(2 * n // 3, 1)],
+                          shapes[max(2 * n // 3, 1):]):
+                if not third:
+                    continue
+                t = tuple(max(prev[i], max(s[i] for s in third))
+                          for i in range(4))
+                prev = t
+                if t not in tiers:
+                    tiers.append(t)
+            self._tiers = tiers
+        return self._tiers
+
     def _run_rows_variant(self, rows: list, ranked: bool):
         if not rows:
             return
         cfg = self.cfg
-        R, G, F = cfg.task_rows, cfg.groups, cfg.fetch_slots
-        step = self._step_for(ranked)
-        for lo in range(0, len(rows), R):
-            part = rows[lo:lo + R]
-            t = self._tensorize_bucket(part, G, F, cfg.check_slots,
-                                       cfg.check_forms, R)
-            owner = np.zeros(R, np.int32)
-            owner[:len(part)] = [row.shard // self.shards_per_dp
-                                 for row in part]
-            # remap global fetch starts into each owner shard's local arena:
-            # one vectorized searchsorted per dp shard touched by the chunk
-            live = t["length"] > 0
-            for dd in np.unique(owner[:len(part)]):
-                m = (owner == dd)[:, None, None] & live
-                t["start"][m] = np.searchsorted(self._sel[dd], t["start"][m])
-            t["owner"] = owner
-            tj = {k: jnp.asarray(v) for k, v in t.items()}
-            with self.mesh:
-                out = step(self.arenas, tj)
-            if ranked:
-                a64, found, scores = out
-                self._scatter_row_keys(part, np.asarray(a64),
-                                       np.asarray(found), np.asarray(scores))
-            else:
-                a64, found = out
-                self._scatter_row_keys(part, np.asarray(a64),
-                                       np.asarray(found))
+        cap = (cfg.groups, cfg.fetch_slots, cfg.p_seed, cfg.postings_pad)
+        tiers = self._tier_ladder(rows)
+        assign: dict = {}
+        for row in rows:
+            req = self._row_shape(row)
+            tier = next((t for t in tiers
+                         if all(a <= b for a, b in zip(req, t))), cap)
+            assign.setdefault(tier, []).append(row)
+        for (G, F, P0, Pc), rs in assign.items():
+            step = self._step_for(ranked, p_seed=P0, postings_pad=Pc)
+            for lo in range(0, len(rs), cfg.task_rows):
+                part = rs[lo:lo + cfg.task_rows]
+                # tight T: pow2-chunked instead of the full fixed slab, so a
+                # smoke-sized batch no longer drags task_rows dead rows
+                # through the packed unpack + gather + sort
+                T = min(cfg.task_rows, _next_pow2(len(part), floor=4))
+                t = self._tensorize_bucket(part, G, F, cfg.check_slots,
+                                           cfg.check_forms, T)
+                owner = np.zeros(T, np.int32)
+                owner[:len(part)] = [row.shard // self.shards_per_dp
+                                     for row in part]
+                # remap global fetch starts into each owner shard's local
+                # arena: one vectorized searchsorted per dp shard touched
+                live = t["length"] > 0
+                for dd in np.unique(owner[:len(part)]):
+                    m = (owner == dd)[:, None, None] & live
+                    t["start"][m] = np.searchsorted(self._sel[dd],
+                                                    t["start"][m])
+                t["owner"] = owner
+                st = self.slab_stats
+                st["steps"] += 1
+                st["slab_rows"] += T
+                st["live_rows"] += len(part)
+                st["slab_elems"] += T * self._tier_volume((G, F, P0, Pc))
+                st["live_elems"] += sum(
+                    ln for row in part for g in row.groups
+                    for _, _, ln in g.slots)
+                tj = {k: jnp.asarray(v) for k, v in t.items()}
+                with self.mesh:
+                    out = step(self.arenas, tj)
+                if ranked:
+                    a64, found, scores = out
+                    self._scatter_row_keys(part, np.asarray(a64),
+                                           np.asarray(found),
+                                           np.asarray(scores))
+                else:
+                    a64, found = out
+                    self._scatter_row_keys(part, np.asarray(a64),
+                                           np.asarray(found))
 
 
 class SearchServe:
