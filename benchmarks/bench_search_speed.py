@@ -314,6 +314,103 @@ def run_shard_scaling(w, queries, batch_size: int = 64,
             "shard_ratio": shards[-1] / max(shards[0], 1)}
 
 
+def run_ingest(w, queries, batch_size: int = 64, n_batches: int = 4,
+               per_query_results=None) -> dict:
+    """Incremental-ingestion pass (core/segments.py): feed the corpus in
+    `n_batches` batches through a SegmentManager (ingest throughput), search
+    the multi-segment union while a merge runs on a background thread
+    (availability during compaction), then check the fully-merged manager
+    answers the whole workload bit-identically to the per-query engine —
+    postings accounting included.  A second manager drives the front-door
+    staleness probe: query / cache / ingest / re-query, counting any cached
+    response that survives the generation bump (gated at 0 in CI)."""
+    import threading
+
+    from repro.core.segments import SegmentManager, corpus_batches
+    from repro.serve.front import FrontDoor, FrontDoorConfig
+
+    corpus, index = w["corpus"], w["index"]
+    reqs = _requests(queries)
+    batches = corpus_batches(corpus, n_batches)
+    mgr = SegmentManager(w["lex"], w["ana"], params=index.params,
+                         auto_merge=False)
+    t0 = time.perf_counter()
+    for b in batches:
+        mgr.ingest(b)
+    ingest_s = time.perf_counter() - t0
+    out = {"ingest_batches": n_batches,
+           "ingest_docs_per_sec": corpus.n_docs / ingest_s}
+
+    # search the segment union WHILE the merge compacts it (at least one
+    # full round always runs, so the QPS is defined even when the merge
+    # finishes inside the first round)
+    sub = reqs[:batch_size]
+    mgr.search_batch(sub)                            # warm
+    done = threading.Event()
+
+    def _merge():
+        try:
+            mgr.merge_now()
+        finally:
+            done.set()
+
+    th = threading.Thread(target=_merge)
+    served = 0
+    t0 = time.perf_counter()
+    th.start()
+    while True:
+        mgr.search_batch(sub)
+        served += len(sub)
+        if done.is_set():
+            break
+    out["search_qps_during_merge"] = served / (time.perf_counter() - t0)
+    th.join()
+
+    # fully merged == the one-shot build: the whole workload, accounting
+    # included, against the per-query engine results
+    mismatched = 0
+    assert len(mgr.segments) == 1, [s.state for s in mgr.segments]
+    results = []
+    for lo in range(0, len(reqs), batch_size):
+        results.extend(mgr.search_batch(reqs[lo:lo + batch_size]))
+    if per_query_results is not None:
+        for r1, r2 in zip(per_query_results, results):
+            if not (np.array_equal(r1.doc, r2.doc)
+                    and np.array_equal(r1.pos, r2.pos)
+                    and r1.postings_read == r2.postings_read):
+                mismatched += 1
+    mgr.close()
+
+    # front-door staleness probe: cached responses must die with the
+    # generation, and the post-ingest responses must match the full-corpus
+    # engine (doc/pos — the union's accounting follows its own global plan)
+    mgr2 = SegmentManager(w["lex"], w["ana"], params=index.params,
+                          auto_merge=False)
+    for b in batches[:-1]:
+        mgr2.ingest(b)
+    front = FrontDoor(segments=mgr2,
+                      cfg=FrontDoorConfig(cache_capacity=64,
+                                          default_deadline_ms=600_000.0,
+                                          shard_timeout_s=600.0))
+    probe = reqs[:min(8, len(reqs))]
+    front.search_batch(probe)
+    cached = front.search_batch(probe)               # hits the cache
+    stale = sum(int(not r.cached) for r in cached)   # warm cache sanity
+    mgr2.ingest(batches[-1])                         # the index just changed
+    fresh = front.search_batch(probe)
+    stale += sum(int(r.cached) for r in fresh)       # survived the bump?
+    if per_query_results is not None:
+        for r1, r2 in zip(per_query_results, fresh):
+            if not (np.array_equal(r1.doc, r2.doc)
+                    and np.array_equal(r1.pos, r2.pos)):
+                mismatched += 1
+    out["ingest_stale_cache_hits"] = front.stats.stale_cache_hits + stale
+    out["ingest_result_mismatches"] = mismatched
+    front.close()
+    mgr2.close()
+    return out
+
+
 CANONICAL = (1200, 400, 64)    # the BENCH_search.json perf-trajectory scale
 CI_SMOKE = (300, 96, 32)       # the CI perf-gate scale
 
@@ -465,6 +562,11 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
         # segmented gather: per-shard cost roughly flat, not linear
         out["shard_scaling"] = run_shard_scaling(w, queries,
                                                  batch_size=batch_size)
+        # incremental ingestion (core/segments.py): ingest throughput,
+        # availability during a background merge, post-merge bit-identity,
+        # and the front-door cache-staleness probe
+        out.update(run_ingest(w, queries, batch_size=batch_size,
+                              per_query_results=add_results))
 
     if write_json:
         out["ci_smoke"] = ci_smoke_baseline()

@@ -21,6 +21,10 @@ from repro.core.lexicon import (Lexicon, LexiconConfig, TIER_FREQUENT,
 from repro.core.multi_key_index import MultiKeyIndex
 from repro.core.planner import (MODE_NEAR, MODE_PHRASE, Planner, QTYPE_MULTI,
                                 QueryPlan)
+# segments last: it builds on builder/corpus/planner above (its serve-side
+# imports are lazy, inside methods — no core -> serve import cycle)
+from repro.core.segments import (IndexSegment, SegmentManager, concat_corpora,
+                                 corpus_batches)
 
 __all__ = [
     "Analyzer", "make_lexicon_and_analyzer",
@@ -35,4 +39,5 @@ __all__ = [
     "DeviceIndex", "Executor", "SearchResult",
     "Lexicon", "LexiconConfig", "TIER_FREQUENT", "TIER_ORDINARY", "TIER_STOP",
     "MODE_NEAR", "MODE_PHRASE", "Planner", "QTYPE_MULTI", "QueryPlan",
+    "IndexSegment", "SegmentManager", "concat_corpora", "corpus_batches",
 ]

@@ -128,9 +128,20 @@ class BatchDeviceIndex:
     `docs_per_shard` sets the doc-shard granularity of the segmented gather
     (≤ fetch_tables.DOCS_PER_SHARD so packed int32 keys can't overflow);
     smaller shards only add rows, never change results.
+
+    `doc_base` is the index's first GLOBAL doc id (0 for a standalone
+    index).  A segment built from a corpus slice (core/segments.py) stores
+    LOCAL doc ids in its arenas, but its execution rows are laid on the
+    GLOBAL shard grid: row shard ids are global, and each row's
+    `shard_base` is the local re-basing origin `shard*dps - doc_base` (may
+    be negative), so the rebased int32 keys stay in [0, dps) exactly as for
+    an unsegmented index.  Output keys are unaffected (still local doc
+    ids); only the row cuts move — and smaller/shifted shards never change
+    results.
     """
 
-    def __init__(self, index: IndexSet, docs_per_shard: int | None = None):
+    def __init__(self, index: IndexSet, docs_per_shard: int | None = None,
+                 doc_base: int = 0):
         packed = ensure_packed_streams(index)
         b = index.basic.occurrences
         e = index.expanded.pairs
@@ -194,7 +205,11 @@ class BatchDeviceIndex:
             docs_per_shard = auto_docs_per_shard(self.n_docs,
                                                  index.max_posting_run())
         self.docs_per_shard = max(1, min(docs_per_shard, DOCS_PER_SHARD))
-        self.n_shards = max(1, -(-self.n_docs // self.docs_per_shard))
+        # global shard grid: shard ids count from GLOBAL doc 0 so every
+        # segment of a growing corpus buckets on the same boundaries
+        self.doc_base = int(doc_base)
+        self.n_shards = max(1, -(-(self.doc_base + self.n_docs)
+                                 // self.docs_per_shard))
 
     @property
     def device_arena(self) -> dict:
@@ -422,9 +437,10 @@ class BatchExecutor:
 
     def __init__(self, index: IndexSet, flex: Executor | None = None,
                  impl: str = "ref", interpret: bool = True,
-                 docs_per_shard: int | None = None):
+                 docs_per_shard: int | None = None, doc_base: int = 0):
         self.index = index
-        self.dev = BatchDeviceIndex(index, docs_per_shard=docs_per_shard)
+        self.dev = BatchDeviceIndex(index, docs_per_shard=docs_per_shard,
+                                    doc_base=doc_base)
         self.flex = flex or Executor(index)
         self.impl = impl
         self.interpret = interpret
@@ -474,12 +490,16 @@ class BatchExecutor:
         F slots of the same group (slot unions).  None => plan goes flex."""
         d = self.dev
         dps = d.docs_per_shard
+        base = d.doc_base
         _, _, split_cap, p0_cap, p_cap = self._caps()
         p0_cap, p_cap = max(1, p0_cap), max(1, p_cap)
-        if d.n_shards == 1:
-            per_group = [{0: [(f, d.bases[f.stream] + f.start, f.length)
-                              for f in g.fetches]} for g in ordered]
-            seed_shards = [0]
+        # arena doc ids are LOCAL; shard ids live on the GLOBAL grid
+        sh_lo = base // dps
+        sh_hi = (base + max(d.n_docs - 1, 0)) // dps
+        if sh_lo == sh_hi:
+            per_group = [{sh_lo: [(f, d.bases[f.stream] + f.start, f.length)
+                                  for f in g.fetches]} for g in ordered]
+            seed_shards = [sh_lo]
         else:
             per_group = []
             for g in ordered:
@@ -487,11 +507,13 @@ class BatchExecutor:
                 for f in g.fetches:
                     s0 = d.bases[f.stream] + f.start
                     arr = d.arena_doc_np[s0:s0 + f.length]
-                    lo, hi = int(arr[0]) // dps, int(arr[-1]) // dps
+                    lo = (int(arr[0]) + base) // dps
+                    hi = (int(arr[-1]) + base) // dps
                     if lo == hi:
                         m.setdefault(lo, []).append((f, s0, f.length))
                         continue
-                    cuts = np.searchsorted(arr, np.arange(lo + 1, hi + 1) * dps)
+                    cuts = np.searchsorted(
+                        arr, np.arange(lo + 1, hi + 1) * dps - base)
                     edges = np.concatenate(([0], cuts, [f.length]))
                     for i in range(len(edges) - 1):
                         ln = int(edges[i + 1] - edges[i])
@@ -502,6 +524,7 @@ class BatchExecutor:
             seed_shards = sorted(per_group[0])
         rows = []
         for sh in seed_shards:
+            shard_base = sh * dps - base       # local re-basing origin
             groups, sortfree = [], True
             for gi in range(len(ordered)):
                 cap = p0_cap if gi == 0 else p_cap
@@ -528,7 +551,7 @@ class BatchExecutor:
                                 or f.pivot_from_dist):
                             sortfree = False
                 groups.append(_RowGroup(band=int(ordered[gi].band), slots=slots))
-            rows.append(_Row(task=task, shard=sh, shard_base=sh * dps,
+            rows.append(_Row(task=task, shard=sh, shard_base=shard_base,
                              groups=groups, sortfree=sortfree))
         return rows
 

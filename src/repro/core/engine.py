@@ -51,10 +51,11 @@ class _BatchSearchMixin:
     posting streams on device, so per-query-only users never pay for it."""
 
     def _init_batch(self, batch_impl: str, interpret: bool,
-                    docs_per_shard: int | None = None):
+                    docs_per_shard: int | None = None, doc_base: int = 0):
         self._batch_impl = batch_impl
         self._interpret = interpret
         self._docs_per_shard = docs_per_shard
+        self._doc_base = doc_base
         self._batch_executor = None
 
     @property
@@ -63,7 +64,8 @@ class _BatchSearchMixin:
             self._batch_executor = BatchExecutor(
                 self.index, flex=self.executor, impl=self._batch_impl,
                 interpret=self._interpret,
-                docs_per_shard=self._docs_per_shard)
+                docs_per_shard=self._docs_per_shard,
+                doc_base=self._doc_base)
         return self._batch_executor
 
     def search(self, request, mode: str = MODE_PHRASE,
@@ -108,14 +110,22 @@ class AdditionalIndexEngine(_BatchSearchMixin):
 
     def __init__(self, index: IndexSet, batch_impl: str = "ref",
                  interpret: bool = True, docs_per_shard: int | None = None,
-                 windowed_near_stop: bool = True, occ_counts=None):
+                 windowed_near_stop: bool = True, occ_counts=None,
+                 doc_base: int = 0):
         self.index = index
         # occ_counts: cluster-global occurrence stats for doc-sharded
-        # deployments (serve.front) — see Planner.__init__
+        # deployments (serve.front) — see Planner.__init__.  doc_base: this
+        # engine's first GLOBAL doc id (segments / doc shards); the batched
+        # executor lays its rows on the global shard grid so every segment
+        # buckets identically.
         self.planner = Planner(index, windowed_near_stop=windowed_near_stop,
                                occ_counts=occ_counts)
         self.executor = Executor(index)
-        self._init_batch(batch_impl, interpret, docs_per_shard)
+        self._init_batch(batch_impl, interpret, docs_per_shard, doc_base)
+
+    def refresh_occ_counts(self, occ_counts=None):
+        """Re-snapshot planner pivot statistics (see Planner.refresh_occ_counts)."""
+        self.planner.refresh_occ_counts(occ_counts)
 
     def plan_request(self, request: SearchRequest) -> QueryPlan:
         return self.planner.plan(list(request.surface_ids),

@@ -145,8 +145,7 @@ class Planner:
         # counts: a doc-sharded deployment (serve.front) plans every shard
         # with the global numbers so pick_pivot lands on the same slot
         # everywhere — the precondition for bit-identical shard merges.
-        self._occ_counts = (index.base_occ_counts() if occ_counts is None
-                            else np.asarray(occ_counts))
+        self.refresh_occ_counts(occ_counts)
         # expanded-pair reach per basic form: max(ProcessingDistance,
         # near_window) — precomputed once; planning is on the per-query
         # latency path
@@ -161,6 +160,18 @@ class Planner:
         self.windowed_near_stop = windowed_near_stop
 
     # -- public API ---------------------------------------------------------
+
+    def refresh_occ_counts(self, occ_counts=None):
+        """Re-snapshot the pivot/seed occurrence statistics.
+
+        The counts are deliberately a snapshot (planning must not race a
+        mutating index), but a mutable corpus — segments landing via
+        `core.segments.SegmentManager` — must re-snapshot on every
+        generation bump or pivot choice drifts from the true statistics.
+        `occ_counts=None` re-reads the planner's own index; pass the
+        cluster-global sum for doc-sharded / segmented deployments."""
+        self._occ_counts = (self.index.base_occ_counts() if occ_counts is None
+                            else np.asarray(occ_counts))
 
     def plan(self, surface_ids: list[int], mode: str = MODE_PHRASE,
              window: Optional[int] = None, ranked: bool = False) -> QueryPlan:

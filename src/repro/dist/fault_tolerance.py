@@ -105,7 +105,8 @@ class ShardDispatcher:
         # timeout, and its replica must still find a free one
         self._pool = ThreadPoolExecutor(max_workers=max(2 * len(self.shard_fns), 1))
 
-    def dispatch(self, batch, shards: Optional[Sequence[int]] = None) -> list:
+    def dispatch(self, batch, shards: Optional[Sequence[int]] = None,
+                 on_late: Optional[Callable] = None) -> list:
         """Returns one result per shard (replica result where the primary
         failed; None when both did).  The list is always len(shard_fns);
         `shards` restricts the fan-out to a subset of shard indices (the
@@ -118,7 +119,15 @@ class ShardDispatcher:
         max(latency), not sum(latency).  Caveat: Python threads can't be
         killed, so a shard fn that NEVER returns leaks its worker thread;
         the 2N-sized pool absorbs one such generation, persistent zombies
-        need process-level supervision."""
+        need process-level supervision.
+
+        `on_late(shard_i, result)` — when given, a shard call that merely
+        EXCEEDED the deadline (as opposed to raising) gets a done-callback
+        that delivers its eventual result after the dispatch returned: the
+        straggler's work is not thrown away, the caller can backfill
+        (serve.front re-merges it into the response cache).  Called from the
+        straggler's worker thread; exceptions in the callback are swallowed
+        (late delivery is best-effort by construction)."""
         self.stats.total += 1
         idxs = range(len(self.shard_fns)) if shards is None else shards
         futures = {i: self._pool.submit(self.shard_fns[i], batch)
@@ -133,7 +142,18 @@ class ShardDispatcher:
                 try:
                     out[i] = fut.result(
                         timeout=max(0.0, deadline - time.monotonic()))
-                except (Exception, FutTimeout):
+                except FutTimeout:
+                    failed[i] = fut
+                    if on_late is not None:
+                        def _deliver(f, i=i):
+                            try:
+                                if f.cancelled() or f.exception() is not None:
+                                    return
+                                on_late(i, f.result())
+                            except Exception:
+                                pass
+                        fut.add_done_callback(_deliver)
+                except Exception:
                     failed[i] = fut
             return failed
 

@@ -135,6 +135,10 @@ class FrontStats:
     served_degraded: int = 0
     shed: int = 0
     cache_hits: int = 0
+    stale_cache_hits: int = 0   # pre-invalidation entry served post-bump
+                                # (structurally 0: the CI staleness gate)
+    backfilled: int = 0         # late-shard results re-merged into the cache
+    generation_bumps: int = 0   # segment-manager invalidations observed
     flex_routed: int = 0
     batches: int = 0
     retries: int = 0
@@ -198,9 +202,13 @@ class ShardBackend:
                  batch_impl: str = "ref", interpret: bool = True):
         self.doc_base = int(doc_base)
         self.n_docs = index.n_docs
+        # doc_base reaches the engine too: its batched rows then sit on the
+        # GLOBAL doc-shard grid (same bucket boundaries for every shard /
+        # segment of the corpus) — results are identical at any grid
         self.engine = AdditionalIndexEngine(index, batch_impl=batch_impl,
                                             interpret=interpret,
-                                            occ_counts=occ_counts)
+                                            occ_counts=occ_counts,
+                                            doc_base=doc_base)
 
     def __call__(self, requests: Sequence[SearchRequest]) -> list[SearchResponse]:
         resps = self.engine.search_batch(list(requests))
@@ -334,22 +342,38 @@ class FrontDoor:
     `backends`/`replicas` default to one ShardBackend over the whole index
     (the bench configuration: single-shard fronts are bit-identical to the
     engine INCLUDING postings accounting).  `clock` is injectable
-    (dist.chaos.SkewedClock) for the clock-skew chaos scenario."""
+    (dist.chaos.SkewedClock) for the clock-skew chaos scenario.
 
-    def __init__(self, index: IndexSet,
+    `segments` plugs in a `core.segments.SegmentManager` instead of a fixed
+    index: backends and planner come from the manager's live segments, and
+    the front subscribes to generation bumps — every ingest/merge
+    invalidates the result cache (the stale-cache bugfix) and re-syncs
+    backends + cluster-global occ counts before the next micro-batch."""
+
+    def __init__(self, index: IndexSet | None = None,
                  backends: Optional[Sequence[ShardBackend]] = None,
                  replicas: Optional[Sequence[ShardBackend]] = None,
                  cfg: FrontDoorConfig = FrontDoorConfig(),
                  clock: Callable[[], float] = time.monotonic,
-                 batch_impl: str = "ref", interpret: bool = True):
+                 batch_impl: str = "ref", interpret: bool = True,
+                 segments=None):
         self.cfg = cfg
         self.clock = clock
-        if backends is None:
-            backends = [ShardBackend(index, batch_impl=batch_impl,
-                                     interpret=interpret)]
+        self.segments = segments
+        if segments is not None:
+            if not segments.segments:
+                raise ValueError(
+                    "FrontDoor(segments=...) needs >= 1 ingested segment")
+            backends = segments.engine_backends()
+            replicas = None       # segment backends re-sync; no replica tier
+            self.planner = segments.current_planner()
+        else:
+            if backends is None:
+                backends = [ShardBackend(index, batch_impl=batch_impl,
+                                         interpret=interpret)]
+            self.planner = Planner(index)
         self.backends = list(backends)
         self.n_shards = len(self.backends)
-        self.planner = Planner(index)
         self.dispatcher = ShardDispatcher(
             self.backends, replica_fns=replicas, timeout=cfg.shard_timeout_s)
         self.stats = FrontStats()
@@ -358,9 +382,13 @@ class FrontDoor:
         self._cache: dict = {}
         self._cache_order: list = []    # LRU order, oldest first
         self._cache_lock = threading.Lock()
+        self._generation = 0            # bumped by invalidate_cache()
+        self._resync = False            # segment set changed: rebuild backends
         self._buckets: dict[str, TokenBucket] = {}
         self._buckets_lock = threading.Lock()
         self._closed = False
+        if segments is not None:
+            segments.subscribe(self._on_generation)
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="front-door")
         self._thread.start()
@@ -422,31 +450,75 @@ class FrontDoor:
                 self._buckets[client] = b
             return b
 
+    def invalidate_cache(self) -> None:
+        """Drop every cached result and advance the cache generation — any
+        index change (segment ingest / merge) makes every cached response
+        potentially stale.  New entries key on the NEW generation, and
+        results computed against the old segment set can no longer land
+        (`_cache_put` checks the generation it was planned under)."""
+        with self._cache_lock:
+            self._generation += 1
+            self._cache.clear()
+            self._cache_order.clear()
+
+    def _on_generation(self, gen: int) -> None:
+        """SegmentManager subscription: invalidate + schedule a backend
+        re-sync (picked up by the dispatcher thread before the next batch)."""
+        with self._stats_lock:
+            self.stats.generation_bumps += 1
+        self._resync = True
+        self.invalidate_cache()
+
+    def _cache_generation(self) -> int:
+        with self._cache_lock:
+            return self._generation
+
     def _cache_get(self, request: SearchRequest) -> SearchResponse | None:
         if self.cfg.cache_capacity <= 0:
             return None
-        key = request.plan_signature()
+        stale = False
         with self._cache_lock:
-            resp = self._cache.get(key)
-            if resp is None:
-                return None
-            self._cache_order.remove(key)
-            self._cache_order.append(key)
+            key = (request.plan_signature(), self._generation)
+            entry = self._cache.get(key)
+            if entry is not None:
+                gen, resp = entry
+                if gen != self._generation:
+                    # structurally unreachable (invalidation clears the dict
+                    # and the key embeds the generation) — kept as the
+                    # regression tripwire behind stats.stale_cache_hits
+                    self._cache.pop(key, None)
+                    if key in self._cache_order:
+                        self._cache_order.remove(key)
+                    entry, stale = None, True
+                else:
+                    self._cache_order.remove(key)
+                    self._cache_order.append(key)
+        if stale:
+            with self._stats_lock:
+                self.stats.stale_cache_hits += 1
+        if entry is None:
+            return None
         # shallow copy: result arrays are shared (treated immutable), the
         # transport fields are per-delivery; the caller's request (possibly
         # a different deadline — excluded from the key) rides along
-        return dataclasses.replace(resp, cached=True, request=request)
+        return dataclasses.replace(entry[1], cached=True, request=request)
 
-    def _cache_put(self, request: SearchRequest, resp: SearchResponse):
+    def _cache_put(self, request: SearchRequest, resp: SearchResponse,
+                   gen: int | None = None):
+        """`gen` is the cache generation the response was COMPUTED under
+        (captured at dispatch); a bump that landed mid-flight means the
+        result may predate the newest segments — skip, never cache it."""
         if self.cfg.cache_capacity <= 0:
             return
-        key = request.plan_signature()
         with self._cache_lock:
+            if gen is not None and gen != self._generation:
+                return
+            key = (request.plan_signature(), self._generation)
             if key in self._cache:
                 self._cache_order.remove(key)
             elif len(self._cache) >= self.cfg.cache_capacity:
                 self._cache.pop(self._cache_order.pop(0), None)
-            self._cache[key] = resp
+            self._cache[key] = (self._generation, resp)
             self._cache_order.append(key)
 
     # -- resolution ---------------------------------------------------------
@@ -501,12 +573,33 @@ class FrontDoor:
                 batch.append(t)
                 window_end = min(window_end, t.deadline)
             try:
+                if self._resync:
+                    self._sync_segments()
                 self._dispatch_batch(batch)
             except Exception:                        # pragma: no cover
                 # a dispatcher bug must not silently strand tickets
                 for t in batch:
                     if not t.done():
                         self._shed(t, "internal_error")
+
+    def _sync_segments(self):
+        """Rebuild backends/planner from the segment manager's current
+        generation (dispatcher thread only).  The resync flag clears FIRST
+        so a bump landing mid-sync re-triggers.  The old dispatcher is
+        closed without waiting: its in-flight late futures may still fire,
+        but backfill is generation-guarded so they can never pollute the
+        new generation's cache."""
+        self._resync = False
+        segs = self.segments
+        backends = segs.engine_backends()
+        planner = segs.current_planner()
+        old = self.dispatcher
+        self.dispatcher = ShardDispatcher(backends, replica_fns=None,
+                                          timeout=self.cfg.shard_timeout_s)
+        self.backends = backends
+        self.n_shards = len(backends)
+        self.planner = planner
+        old.close()
 
     def _is_overflow(self, plan: QueryPlan) -> bool:
         """Routing hint: would this plan escape the batched executor's shape
@@ -557,7 +650,12 @@ class FrontDoor:
 
     def _execute(self, items: list):
         reqs = [t.request for t in items]
-        results = self.dispatcher.dispatch(reqs)
+        gen0 = self._cache_generation()
+        slot = _BackfillSlot(items, gen0, self.n_shards)
+        on_late = None
+        if self.cfg.cache_capacity > 0:
+            on_late = lambda i, res: self._backfill(slot, i, res)  # noqa: E731
+        results = self.dispatcher.dispatch(reqs, on_late=on_late)
         missing = [i for i, r in enumerate(results) if r is None]
         attempt = 0
         while missing and attempt < self.cfg.max_retries:
@@ -565,12 +663,24 @@ class FrontDoor:
             attempt += 1
             with self._stats_lock:
                 self.stats.retries += 1
-            sub = self.dispatcher.dispatch(reqs, shards=missing)
+            sub = self.dispatcher.dispatch(reqs, shards=missing,
+                                           on_late=on_late)
             for i in missing:
                 if sub[i] is not None:
                     results[i] = sub[i]
             missing = [i for i, r in enumerate(results) if r is None]
         live = [i for i, r in enumerate(results) if r is not None]
+        # arm (or close) the backfill slot: late-shard results re-merge into
+        # the cache only while shards are actually missing
+        early = []
+        with slot.lock:
+            if missing:
+                slot.results = list(results)
+                early, slot.early = slot.early, []
+            else:
+                slot.done = True
+        for i, res in early:        # stragglers that beat the finalize
+            self._backfill(slot, i, res)
         for q_i, t in enumerate(items):
             if not live:
                 resp = SearchResponse(
@@ -590,9 +700,58 @@ class FrontDoor:
             late = self.clock() > t.deadline
             if len(live) == self.n_shards and not late:
                 resp.status = STATUS_SERVED_EXACT
-                self._cache_put(t.request, resp)
+                self._cache_put(t.request, resp, gen=gen0)
             else:
                 resp.status = STATUS_SERVED_DEGRADED
                 resp.shed_reason = "shards" if len(live) < self.n_shards \
                     else "late"
             self._fulfill(t, resp)
+
+    def _backfill(self, slot: "_BackfillSlot", shard_i: int, res):
+        """A shard answered AFTER its dispatch timed out (ShardDispatcher
+        `on_late`): fold its per-query responses into the slot.  The
+        delivered SERVED_DEGRADED responses stay final — what heals is the
+        CACHE: once every shard has contributed, the full merge is cached
+        (generation-guarded) so the next identical query is EXACT."""
+        with slot.lock:
+            if slot.done or slot.results is None:
+                if not slot.done:
+                    slot.early.append((shard_i, res))
+                return
+            if slot.results[shard_i] is not None:
+                return                        # replica/retry already answered
+            slot.results[shard_i] = res
+            complete = all(r is not None for r in slot.results)
+            results = list(slot.results) if complete else None
+            if complete:
+                slot.done = True
+        with self._stats_lock:
+            self.stats.backfilled += 1
+        if results is None:
+            return
+        live = list(range(slot.n_shards))
+        for q_i, t in enumerate(slot.items):
+            if t.plan is None:                # pragma: no cover
+                continue
+            resp = merge_shard_responses(t.request, t.plan,
+                                         [(s, results[s][q_i]) for s in live])
+            resp.shards = tuple(live)
+            resp.status = STATUS_SERVED_EXACT
+            self._cache_put(t.request, resp, gen=slot.gen)
+
+
+class _BackfillSlot:
+    """Shared state between one `_execute` dispatch and the late-shard
+    callbacks it may receive afterwards (see FrontDoor._backfill)."""
+
+    __slots__ = ("lock", "items", "gen", "n_shards", "results", "early",
+                 "done")
+
+    def __init__(self, items: list, gen: int, n_shards: int):
+        self.lock = threading.Lock()
+        self.items = items
+        self.gen = gen                 # cache generation at dispatch time
+        self.n_shards = n_shards
+        self.results = None            # [n_shards] per-shard response lists
+        self.early: list = []          # lates that arrived before finalize
+        self.done = False

@@ -437,17 +437,23 @@ class SearchServe:
     executor host-side (the same escape hatch the engine uses)."""
 
     def __init__(self, index: IndexSet, cfg: SearchServeConfig, mesh,
-                 docs_per_shard: int | None = None):
+                 docs_per_shard: int | None = None, occ_counts=None):
         self.index = index
         self.cfg = cfg
         self.mesh = mesh
-        self.planner = Planner(index)
+        # occ_counts: cluster-global occurrence stats when this serve tier
+        # holds one doc shard / segment of a larger corpus (see Planner)
+        self.planner = Planner(index, occ_counts=occ_counts)
         self.executor = _ServeBatchExecutor(index, cfg, mesh,
                                             docs_per_shard=docs_per_shard)
 
     @property
     def n_dp(self) -> int:
         return self.executor.n_dp
+
+    def refresh_occ_counts(self, occ_counts=None):
+        """Re-snapshot planner pivot statistics (see Planner.refresh_occ_counts)."""
+        self.planner.refresh_occ_counts(occ_counts)
 
     def plan_request(self, request: SearchRequest):
         return self.planner.plan(list(request.surface_ids),

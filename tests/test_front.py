@@ -426,6 +426,94 @@ def test_serve_tier_ladder_kills_dead_slab_rows(small_world):
 
 
 # ---------------------------------------------------------------------------
+# mutable index: segment ingest vs the result cache, late-shard backfill
+# ---------------------------------------------------------------------------
+
+
+def test_front_segment_ingest_never_serves_stale_cache(small_world):
+    """THE stale-cache regression: a cached response must never survive a
+    segment ingest.  Query before ingest (cached), ingest a batch containing
+    a new matching doc, re-query — the response must be fresh (non-cached),
+    contain the new doc, and the stale tripwire must stay at zero."""
+    from repro.core.segments import SegmentManager, corpus_batches
+
+    corpus, index = small_world["corpus"], small_world["index"]
+    batches = corpus_batches(corpus, 4)
+    pre_docs = sum(b.n_docs for b in batches[:3])
+    mgr = SegmentManager(small_world["lex"], small_world["ana"],
+                         params=index.params, auto_merge=False)
+    for b in batches[:3]:
+        mgr.ingest(b)
+    # query sourced from a batch-4 doc (not yet ingested)
+    d_new = pre_docs + batches[3].n_docs // 2
+    toks = corpus.doc(d_new)
+    req = SearchRequest(tuple(int(x) for x in toks[4:7]), mode=MODE_PHRASE)
+    front = FrontDoor(segments=mgr,
+                      cfg=FrontDoorConfig(cache_capacity=16, **FAST_CFG))
+    try:
+        first = front.search(req)
+        assert first.status == STATUS_SERVED_EXACT and not first.cached
+        assert all(int(x) < pre_docs for x in first.doc)
+        again = front.search(req)
+        assert again.cached and front.stats.cache_hits == 1
+
+        mgr.ingest(batches[3])              # the index just changed
+
+        fresh = front.search(req)
+        assert not fresh.cached, "served a pre-ingest cached response"
+        assert fresh.status == STATUS_SERVED_EXACT
+        assert d_new in set(int(x) for x in fresh.doc)
+        # bit-identical to the one-shot engine over the full corpus
+        ref = small_world["engine"].search_batch([req])[0]
+        assert np.array_equal(ref.doc, fresh.doc)
+        assert np.array_equal(ref.pos, fresh.pos)
+        assert ref.used_fallback == fresh.used_fallback
+        assert ref.doc_only == fresh.doc_only
+        # the new generation caches normally
+        again2 = front.search(req)
+        assert again2.cached and np.array_equal(fresh.doc, again2.doc)
+        assert front.stats.generation_bumps >= 1
+        assert front.stats.stale_cache_hits == 0
+        _ledger_balances(front)
+    finally:
+        front.close()
+        mgr.close()
+
+
+def test_front_late_shard_backfills_cache(shard_world, reference):
+    """A shard that answers AFTER the dispatch timeout degrades the delivered
+    response — but its work is not thrown away: the straggler's result
+    re-merges into the cache, and the next identical query is SERVED_EXACT
+    and bit-identical to the unsharded engine."""
+    backends = [ChaosShard(b) for b in shard_world["backends"]]
+    backends[1].set(stall_s=3.0)
+    front = FrontDoor(shard_world["index"], backends=backends,
+                      cfg=FrontDoorConfig(default_deadline_ms=600_000.0,
+                                          shard_timeout_s=1.0, max_retries=0,
+                                          cache_capacity=16))
+    try:
+        req = shard_world["requests"][0]
+        got = front.search(req)
+        assert got.status == STATUS_SERVED_DEGRADED
+        assert got.shed_reason == "shards"
+        assert got.shards == (0, 2, 3)
+        # the straggler finishes ~2s later and backfills the cache
+        deadline = time.monotonic() + SLOW
+        while front.stats.backfilled < 1:
+            assert time.monotonic() < deadline, "backfill never landed"
+            time.sleep(0.02)
+        again = front.search(req)
+        assert again.cached and again.status == STATUS_SERVED_EXACT
+        assert again.shards == (0, 1, 2, 3)
+        _assert_identical(reference[0], again)
+        assert front.stats.stale_cache_hits == 0
+        _ledger_balances(front)
+    finally:
+        backends[1].set()
+        front.close()
+
+
+# ---------------------------------------------------------------------------
 # open-loop smoke: offered load through the front door, shed_rate == 0
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,304 @@
+"""Segment lifecycle suite: incremental ingest + background merge
+(core/segments.py) against the one-shot build and the brute-force oracle.
+
+The acceptance contract: a corpus built via K-batch incremental ingest (with
+at least one merge) returns bit-identical results — doc/pos/score/accounting
+— to the same corpus built one-shot, on the engine, serve, and front-door
+paths, at every generation; and a merger crash leaves serving on the old
+generation with no silent drops.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (SearchRequest, SegmentManager, brute_force_search,
+                        concat_corpora, corpus_batches)
+from repro.core.planner import Planner, pick_pivot
+from repro.core.segments import SEG_FRESH, SEG_RETIRED
+
+
+def _requests(corpus, n=32, seed=11):
+    """Phrase/near mix sampled from indexed docs, every third ranked."""
+    rng = np.random.default_rng(seed)
+    out = []
+    while len(out) < n:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        k = int(rng.integers(2, 5))
+        if len(toks) < 2 * k + 2:
+            continue
+        st = int(rng.integers(0, len(toks) - 2 * k))
+        i = len(out)
+        if i % 2:
+            q, mode = toks[st:st + k], "phrase"
+        else:
+            q, mode = toks[st:st + 2 * k:2], "near"
+        out.append(SearchRequest(tuple(int(x) for x in q), mode=mode,
+                                 rank=(i % 3 == 0)))
+    return out
+
+
+def _assert_identical(ref, got, accounting=True, ctx=""):
+    assert np.array_equal(ref.doc, got.doc), ctx
+    assert np.array_equal(ref.pos, got.pos), ctx
+    assert ref.used_fallback == got.used_fallback, ctx
+    assert ref.doc_only == got.doc_only, ctx
+    assert ref.subplan_types == got.subplan_types, ctx
+    if accounting:
+        assert ref.postings_read == got.postings_read, ctx
+    assert ref.ranked == got.ranked, ctx
+    if ref.ranked:
+        assert np.array_equal(ref.anchor_scores, got.anchor_scores), ctx
+        assert np.array_equal(ref.doc_ids, got.doc_ids), ctx
+        assert np.array_equal(ref.doc_scores, got.doc_scores), ctx
+
+
+@pytest.fixture()
+def manager(small_world):
+    mgr = SegmentManager(small_world["lex"], small_world["ana"],
+                         small_world["index"].params, auto_merge=False)
+    yield mgr
+    mgr.close()
+
+
+def test_corpus_batches_round_trip(small_world):
+    corpus = small_world["corpus"]
+    parts = corpus_batches(corpus, 5)
+    assert sum(p.n_docs for p in parts) == corpus.n_docs
+    back = concat_corpora(parts)
+    assert np.array_equal(back.doc_offsets, corpus.doc_offsets)
+    assert np.array_equal(back.tokens, corpus.tokens)
+
+
+def test_generation_listeners_and_global_occ(small_world, manager):
+    """Ingest bumps are monotonic and observed; occurrence counts are
+    additive across segments — the union's occ equals the one-shot index's
+    at every step's corresponding prefix."""
+    corpus, index = small_world["corpus"], small_world["index"]
+    seen = []
+    manager.subscribe(seen.append)
+    gens = [manager.ingest(b) for b in corpus_batches(corpus, 4)]
+    assert gens == sorted(gens) and len(set(gens)) == 4
+    assert seen == gens
+    assert manager.generation == gens[-1]
+    assert manager.n_docs == corpus.n_docs
+    assert [s.doc_base for s in manager.segments] == \
+        [round(i * corpus.n_docs / 4) for i in range(4)]
+    assert np.array_equal(manager.occ_counts(), index.base_occ_counts())
+
+
+def test_multi_segment_union_parity(small_world, manager):
+    """4 live segments, no merge: union results are bit-identical to the
+    one-shot engine — accounting included when the union replays the
+    one-shot plan (`plan_index`), and doc/pos/score identical under the
+    manager's own planner."""
+    corpus, index = small_world["corpus"], small_world["index"]
+    for b in corpus_batches(corpus, 4):
+        manager.ingest(b)
+    reqs = _requests(corpus, n=32)
+    ref = small_world["engine"].search_batch(reqs)
+    got = manager.search_batch(reqs, plan_index=index)
+    for q, (r, g) in zip(reqs, zip(ref, got)):
+        _assert_identical(r, g, accounting=True, ctx=q)
+    own = manager.search_batch(reqs)
+    for q, (r, g) in zip(reqs, zip(ref, own)):
+        _assert_identical(r, g, accounting=False, ctx=q)
+
+
+def test_merge_bit_identical_to_one_shot(small_world, manager):
+    """K ingest batches + merge == one-shot build: the merged segment's
+    streams are rebuilt over the concatenated corpus, so results (accounting
+    included, via the manager's OWN planner) match the one-shot engine, and
+    positional results match the brute-force oracle."""
+    corpus, index = small_world["corpus"], small_world["index"]
+    for b in corpus_batches(corpus, 3):
+        manager.ingest(b)
+    assert manager.merge_now()
+    segs = manager.segments
+    assert len(segs) == 1 and segs[0].doc_base == 0
+    assert manager.merges_completed == 1
+    assert all(s.state == SEG_RETIRED for s in manager.retired_segments)
+    merged = segs[0].index
+    assert np.array_equal(merged.base_occ_counts(), index.base_occ_counts())
+    reqs = _requests(corpus, n=32)
+    ref = small_world["engine"].search_batch(reqs)
+    got = manager.search_batch(reqs)
+    for q, (r, g) in zip(reqs, zip(ref, got)):
+        _assert_identical(r, g, accounting=True, ctx=q)
+    # oracle cross-check (paper: indexed phrases are precisely found)
+    for q, g in list(zip(reqs, got))[:8]:
+        positional, doc_level = brute_force_search(
+            corpus, index, list(q.surface_ids), mode=q.mode)
+        if g.doc_only:
+            assert set(g.doc.tolist()) == doc_level, q
+        else:
+            assert set(zip(g.doc.tolist(), g.pos.tolist())) == positional, q
+
+
+def test_planner_occ_refresh(small_world, manager):
+    """The frozen-stats bugfix, both halves: (a) refresh_occ_counts moves
+    pick_pivot when the statistics change; (b) after ingest, every segment
+    planner plans the same structure as the one-shot planner."""
+    corpus, index = small_world["corpus"], small_world["index"]
+    # (a) direct: doctor the counts so the old pivot becomes the most
+    # frequent slot — a planner that never refreshes keeps the stale pivot
+    from repro.core.lexicon import TIER_ORDINARY
+    lex = small_world["lex"]
+    planner = Planner(index)
+    reqs = _requests(corpus, n=24, seed=5)
+    for near in reqs:
+        if near.mode != "near":
+            continue
+        form_lists = [index.analyzer.forms_of(s) for s in near.surface_ids]
+        tiered = [(int(lex.base_tier[int(f[0])]), [int(x) for x in f])
+                  for f in form_lists]
+        if sum(t == TIER_ORDINARY for t, _ in tiered) >= 2:
+            break
+    else:
+        pytest.fail("no near query with two ordinary slots in the sample")
+    occ = index.base_occ_counts().astype(np.int64)
+    old_pivot = pick_pivot(tiered, occ)
+    doctored = occ.copy()
+    for f in form_lists[old_pivot]:
+        doctored[f] = int(occ.max()) + 1
+    planner.refresh_occ_counts(doctored)
+    assert planner._occ_counts[int(form_lists[old_pivot][0])] == \
+        int(occ.max()) + 1
+    assert pick_pivot(tiered, doctored) != old_pivot
+    planner.refresh_occ_counts()                  # back to the index's own
+    assert np.array_equal(planner._occ_counts, occ)
+
+    # (b) plan parity after ingest: segment backends + union planner agree
+    # with the one-shot planner on plan structure (pivot bands included)
+    for b in corpus_batches(corpus, 3):
+        manager.ingest(b)
+
+    def sig(plan):
+        return tuple(
+            (sp.qtype, tuple((g.slot, g.band) for g in sp.groups),
+             tuple((g.slot, g.band) for g in sp.fallback_groups))
+            for sp in plan.subplans if sp.supported)
+
+    one_shot = small_world["engine"].planner
+    union = manager.current_planner()
+    backends = manager.engine_backends()
+    for r in reqs:
+        want = sig(one_shot.plan(list(r.surface_ids), mode=r.mode,
+                                 ranked=r.rank))
+        assert sig(union.plan(list(r.surface_ids), mode=r.mode,
+                              ranked=r.rank)) == want, r
+        for b in backends:
+            assert sig(b.engine.planner.plan(
+                list(r.surface_ids), mode=r.mode, ranked=r.rank)) == want, r
+
+
+def test_search_during_merge(small_world, manager):
+    """Concurrent search-during-merge safety: queries issued while the
+    merger is re-packing return bit-identical results throughout, and the
+    post-merge generation still matches."""
+    corpus = small_world["corpus"]
+    for b in corpus_batches(corpus, 4):
+        manager.ingest(b)
+    reqs = _requests(corpus, n=12, seed=3)
+    ref = small_world["engine"].search_batch(reqs)
+    manager.merge_fault = lambda: time.sleep(0.4)   # widen the merge window
+    done = threading.Event()
+    ok = []
+
+    def merge():
+        ok.append(manager.merge_now())
+        done.set()
+
+    th = threading.Thread(target=merge)
+    th.start()
+    rounds = 0
+    while not done.is_set():
+        got = manager.search_batch(reqs)
+        for q, (r, g) in zip(reqs, zip(ref, got)):
+            _assert_identical(r, g, accounting=False, ctx=(rounds, q))
+        rounds += 1
+    th.join()
+    assert ok == [True] and rounds >= 1
+    assert len(manager.segments) == 1
+    got = manager.search_batch(reqs)
+    for q, (r, g) in zip(reqs, zip(ref, got)):
+        _assert_identical(r, g, accounting=True, ctx=("post", q))
+
+
+def test_merger_crash_leaves_old_generation(small_world, manager):
+    """Chaos tier: a merger crash mid-merge reverts the sources to FRESH,
+    leaves the generation (and every query result) untouched, and a later
+    healthy merge succeeds — no silent drops at any point."""
+    corpus = small_world["corpus"]
+    for b in corpus_batches(corpus, 3):
+        manager.ingest(b)
+    gen = manager.generation
+    reqs = _requests(corpus, n=12, seed=9)
+    ref = small_world["engine"].search_batch(reqs)
+
+    def boom():
+        raise RuntimeError("injected merger crash")
+
+    manager.merge_fault = boom
+    assert manager.merge_now() is False
+    assert manager.merge_failures == 1
+    assert manager.generation == gen               # old generation serves on
+    assert len(manager.segments) == 3
+    assert all(s.state == SEG_FRESH for s in manager.segments)
+    got = manager.search_batch(reqs)
+    for q, (r, g) in zip(reqs, zip(ref, got)):
+        _assert_identical(r, g, accounting=False, ctx=q)
+    manager.merge_fault = None                     # heal
+    assert manager.merge_now()
+    assert manager.generation == gen + 1
+    assert len(manager.segments) == 1
+    got = manager.search_batch(reqs)
+    for q, (r, g) in zip(reqs, zip(ref, got)):
+        _assert_identical(r, g, accounting=True, ctx=q)
+
+
+def test_background_merger_thread(small_world):
+    """auto_merge: the background thread compacts once the fresh-segment
+    count reaches the threshold; results stay identical before and after."""
+    corpus = small_world["corpus"]
+    mgr = SegmentManager(small_world["lex"], small_world["ana"],
+                         small_world["index"].params,
+                         merge_threshold=2, auto_merge=True)
+    try:
+        for b in corpus_batches(corpus, 4):
+            mgr.ingest(b)
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            if len(mgr.segments) == 1 and mgr.merges_completed >= 1:
+                break
+            time.sleep(0.05)
+        assert len(mgr.segments) == 1, [s.state for s in mgr.segments]
+        reqs = _requests(corpus, n=16, seed=21)
+        ref = small_world["engine"].search_batch(reqs)
+        for q, (r, g) in zip(reqs, zip(ref, mgr.search_batch(reqs))):
+            _assert_identical(r, g, accounting=True, ctx=q)
+    finally:
+        mgr.close()
+
+
+def test_serve_union_parity(small_world, manager):
+    """The distributed serve tier unions across segments too: per-segment
+    SearchServe backends under the shard merge are bit-identical to the
+    one-shot engine (accounting via the one-shot plan replay)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.search_serve import SearchServeConfig
+
+    corpus, index = small_world["corpus"], small_world["index"]
+    for b in corpus_batches(corpus, 2):
+        manager.ingest(b)
+    cfg = SearchServeConfig(queries=16, postings_pad=4096, seed_pad=1024,
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1,
+                            n_multi=1)
+    backends = manager.serve_backends(cfg, make_host_mesh(data=1, model=1))
+    reqs = _requests(corpus, n=16, seed=17)
+    ref = small_world["engine"].search_batch(reqs)
+    got = manager.search_batch(reqs, backends=backends, plan_index=index)
+    for q, (r, g) in zip(reqs, zip(ref, got)):
+        _assert_identical(r, g, accounting=True, ctx=q)
