@@ -46,7 +46,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_world, paper_query_stream
+from benchmarks.common import (bench_world, kword_query_stream,
+                               paper_query_stream)
 from repro.core import SearchRequest
 
 
@@ -285,6 +286,97 @@ def run_ranked(w, queries, batch_size: int = 64, serve=None,
     out["ranked_oracle_mismatches"] = oracle_bad
     out["ranked_oracle_checked"] = n_oracle
     return out
+
+
+def run_kword(w, queries, batch_size: int = 64, serve=None,
+              oracle_limit: int | None = None) -> dict:
+    """K-word proximity pass (arXiv:2009.02684): the stop-heavy K in {3,4,5}
+    workload from `common.kword_query_stream` through every execution tier.
+
+    Records, for BENCH_search.json / the CI gates:
+      * kword_qps_batched — engine `search_batch` steady-state throughput;
+      * kword_result_mismatches — bit-identity failures across the flexible
+        per-query executor, the batched executor, and (when `serve` is
+        given) the shard_map'd serve tier, postings accounting and ranked
+        scores included — gated at 0;
+      * kword_oracle_mismatches — disagreements with the literal
+        nested-loop `brute_force_kword` oracle — gated at 0;
+      * kword_postings_ratio — ordinary-index postings read over the
+        multi-key-cover plan's (the ISSUE-9 acceptance counter: the cover
+        must read measurably fewer postings than the baseline)."""
+    from repro.core import MODE_KWORD, brute_force_kword
+    eng, base = w["engine"], w["ordinary"]
+    reqs = [SearchRequest(q, mode=MODE_KWORD, window=win)
+            for q, win, _src in queries]
+    ranked_reqs = [SearchRequest(q, mode=MODE_KWORD, window=win, rank=True)
+                   for q, win, _src in queries]
+
+    flex_results = [eng.search(r) for r in reqs]
+    flex_ranked = [eng.search(r) for r in ranked_reqs]
+    for lo in range(0, len(reqs), batch_size):                    # warm
+        eng.search_batch(reqs[lo:lo + batch_size])
+    elapsed = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        results = []
+        for lo in range(0, len(reqs), batch_size):
+            results.extend(eng.search_batch(reqs[lo:lo + batch_size]))
+        elapsed = min(elapsed, time.perf_counter() - t0)
+    ranked_results = []
+    for lo in range(0, len(ranked_reqs), batch_size):
+        ranked_results.extend(eng.search_batch(ranked_reqs[lo:lo + batch_size]))
+
+    def _same(r1, r2, rank=False) -> bool:
+        same = (np.array_equal(r1.doc, r2.doc)
+                and np.array_equal(r1.pos, r2.pos)
+                and r1.postings_read == r2.postings_read
+                and r1.used_fallback == r2.used_fallback
+                and r1.doc_only == r2.doc_only)
+        if rank and same:
+            same = (np.array_equal(r1.anchor_scores, r2.anchor_scores)
+                    and np.array_equal(r1.doc_ids, r2.doc_ids)
+                    and np.array_equal(r1.doc_scores, r2.doc_scores))
+        return same
+
+    mismatched = 0
+    for r1, r2 in zip(flex_results, results):
+        mismatched += int(not _same(r1, r2))
+    for r1, r2 in zip(flex_ranked, ranked_results):
+        mismatched += int(not _same(r1, r2, rank=True))
+    if serve is not None:
+        sres, sres_rk = [], []
+        for lo in range(0, len(reqs), batch_size):
+            sres.extend(serve.search_batch(reqs[lo:lo + batch_size]))
+            sres_rk.extend(serve.search_batch(
+                ranked_reqs[lo:lo + batch_size]))
+        for r1, r2 in zip(results, sres):
+            mismatched += int(not _same(r1, r2))
+        for r1, r2 in zip(ranked_results, sres_rk):
+            mismatched += int(not _same(r1, r2, rank=True))
+
+    oracle_bad = 0
+    n_oracle = len(queries) if oracle_limit is None else \
+        min(oracle_limit, len(queries))
+    for (q, win, _src), r in list(zip(queries, results))[:n_oracle]:
+        truth_pos, truth_doc = brute_force_kword(w["corpus"], w["index"], q,
+                                                 win)
+        if r.doc_only:
+            oracle_bad += int(bool(truth_pos)
+                              or set(r.doc.tolist()) != truth_doc)
+        else:
+            oracle_bad += int(
+                set(zip(r.doc.tolist(), r.pos.tolist())) != truth_pos)
+
+    # multi-key cover vs ordinary baseline: postings read per query
+    add_p = np.array([r.postings_read for r in results], np.float64)
+    ord_p = np.array([base.search(r).postings_read for r in reqs], np.float64)
+    return {"kword_qps_batched": len(reqs) / elapsed,
+            "kword_result_mismatches": mismatched,
+            "kword_oracle_mismatches": oracle_bad,
+            "kword_oracle_checked": n_oracle,
+            "kword_postings_mean": float(add_p.mean()),
+            "kword_ord_postings_mean": float(ord_p.mean()),
+            "kword_postings_ratio": float(ord_p.mean() / max(add_p.mean(), 1.0))}
 
 
 def run_shard_scaling(w, queries, batch_size: int = 64,
@@ -528,6 +620,11 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
     out["batched_speedup"] = b["qps"] * per_query_time / len(queries)
     out["batched_result_mismatches"] = b["result_mismatches"]
 
+    # k-word proximity pass (arXiv:2009.02684): stop-heavy K in {3,4,5}
+    # windowed word-set queries through flex + batched (+ serve when full),
+    # oracle-checked, with the multi-key-cover postings-advantage counter
+    kword_queries = kword_query_stream(w, n_queries, seed=seed + 2)
+
     if full:
         # serve tier: bit-identical to search_batch, promised recall intact
         s = run_serve(w, queries, batch_size=batch_size,
@@ -542,6 +639,9 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
         rk = run_ranked(w, queries, batch_size=batch_size, serve=s["serve"],
                         oracle_limit=None if n_queries <= 128 else 120)
         out.update(rk)
+        out.update(run_kword(
+            w, kword_queries, batch_size=batch_size, serve=s["serve"],
+            oracle_limit=None if n_queries <= 128 else 120))
         # front door: individual requests coalesced into shape-bucketed
         # micro-batches — the serve-tier QPS acceptance number (>= 10x the
         # PR 5 fixed-slab serve baseline of 2.8), plus latency percentiles
@@ -567,6 +667,11 @@ def run(n_docs: int = 1200, n_queries: int = 400, seed: int = 1,
         # and the front-door cache-staleness probe
         out.update(run_ingest(w, queries, batch_size=batch_size,
                               per_query_results=add_results))
+    else:
+        # smoke / CI-baseline runs still measure the kword pass (no serve
+        # tier, capped oracle) — the gates need the counters at every scale
+        out.update(run_kword(w, kword_queries, batch_size=batch_size,
+                             oracle_limit=min(60, n_queries)))
 
     if write_json:
         out["ci_smoke"] = ci_smoke_baseline()
@@ -630,6 +735,7 @@ def _ci_baseline_main():
         "batch_size": CI_SMOKE[2],
         "add_qps_batched": ci["add_qps_batched"],
         "ranked_qps_batched": rk["ranked_qps_batched"],
+        "kword_qps_batched": ci["kword_qps_batched"],
         # the per-query path is the runner-speed yardstick the CI gate
         # normalizes against
         "add_qps_per_query": ci["add_qps_per_query"],

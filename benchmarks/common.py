@@ -59,3 +59,37 @@ def paper_query_stream(corpus, n_queries: int, seed: int = 1):
         if len(out) < n_queries:
             out.append((toks[st:st + 2 * n:2].tolist(), "near", d))
     return out
+
+
+def kword_query_stream(world, n_queries: int, seed: int = 3,
+                       wide_frac: float = 0.1):
+    """Stop-heavy K-word proximity workload (arXiv:2009.02684): K in {3,4,5}
+    word sets sampled from indexed documents at strides 1..3, ~70% with an
+    explicit stop-surface injection, window sized to cover the sampled span
+    (plus jitter).  `wide_frac` of the queries get windows beyond the device
+    executors' int32 delta masks (W > 15) to keep the flexible escape path
+    measured.  Yields (surface_ids, window, source_doc) triples."""
+    corpus = world["corpus"]
+    lex, ana = world["lex"], world["ana"]
+    rng = np.random.default_rng(seed)
+    stop_surfaces = [s for s in range(400)
+                     if bool(lex.is_stop(np.asarray(ana.forms_of(s))).any())][:8]
+    out = []
+    while len(out) < n_queries:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        k = int(rng.integers(3, 6))
+        stride = int(rng.integers(1, 4))
+        span = stride * (k - 1) + 1
+        if len(toks) <= span:
+            continue
+        st = int(rng.integers(0, len(toks) - span))
+        q = toks[st:st + span:stride].tolist()
+        if rng.random() < 0.7:
+            q[int(rng.integers(k))] = int(rng.choice(stop_surfaces))
+        if rng.random() < wide_frac:
+            window = 16 + int(rng.integers(0, 16))      # flex-only range
+        else:
+            window = min(span - 1 + int(rng.integers(0, 4)), 15)
+        out.append((q, max(window, 2), d))
+    return out

@@ -7,8 +7,8 @@ proximity relevance (SearchRequest(rank=True)).
 import numpy as np
 
 from repro.core import (AdditionalIndexEngine, CorpusConfig, LexiconConfig,
-                        MODE_NEAR, MODE_PHRASE, OrdinaryEngine, SearchRequest,
-                        build_all, generate_corpus,
+                        MODE_KWORD, MODE_NEAR, MODE_PHRASE, OrdinaryEngine,
+                        SearchRequest, build_all, generate_corpus,
                         make_lexicon_and_analyzer)
 
 
@@ -61,6 +61,19 @@ def main():
         print(f"  doc {hit.doc}: score {hit.score:.3f}, "
               f"{len(hit.positions)} anchors, subplans {hit.subplans}")
     assert ranked.hits[0].doc == doc or doc in {h.doc for h in ranked.hits}
+
+    # K-word proximity (arXiv:2009.02684): every query word inside ONE
+    # (window + 1)-wide span, any order — the planner covers stop slots
+    # with multi-component-key lookups instead of full stop posting scans
+    kword = toks[start:start + 5].tolist()
+    kreq = SearchRequest(kword, mode=MODE_KWORD, window=8)
+    kr = engine.search(kreq)
+    kr0 = ordinary.search(kreq)
+    print(f"\nkword query={kword} window=8: {len(kr.doc)} anchor hits, "
+          f"{kr.postings_read:,} postings read "
+          f"(ordinary plan: {kr0.postings_read:,} — "
+          f"{kr0.postings_read / max(kr.postings_read, 1):.1f}x more)")
+    assert doc in set(kr.doc.tolist())
 
     # incremental ingestion: the same corpus fed in batches through the
     # segment manager — each batch becomes an immutable segment, the

@@ -12,9 +12,11 @@ from repro.core.builder import (IndexParams, IndexSet, auto_docs_per_shard,
                                 build_all, build_multi_key_index)
 from repro.core.corpus import Corpus, CorpusConfig, generate_corpus
 from repro.core.engine import (AdditionalIndexEngine, OrdinaryEngine,
+                               brute_force_kword, brute_force_kword_ranked,
                                brute_force_ranked, brute_force_search,
                                near_query_contains_stop,
                                near_query_stop_confined)
+from repro.core.kword import MODE_KWORD
 from repro.core.executor import DeviceIndex, Executor, SearchResult
 from repro.core.lexicon import (Lexicon, LexiconConfig, TIER_FREQUENT,
                                 TIER_ORDINARY, TIER_STOP)
@@ -33,11 +35,13 @@ __all__ = [
     "IndexParams", "IndexSet", "auto_docs_per_shard", "build_all",
     "build_multi_key_index", "MultiKeyIndex",
     "Corpus", "CorpusConfig", "generate_corpus",
-    "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_ranked",
+    "AdditionalIndexEngine", "OrdinaryEngine", "brute_force_kword",
+    "brute_force_kword_ranked", "brute_force_ranked",
     "brute_force_search", "near_query_contains_stop",
     "near_query_stop_confined",
     "DeviceIndex", "Executor", "SearchResult",
     "Lexicon", "LexiconConfig", "TIER_FREQUENT", "TIER_ORDINARY", "TIER_STOP",
-    "MODE_NEAR", "MODE_PHRASE", "Planner", "QTYPE_MULTI", "QueryPlan",
+    "MODE_KWORD", "MODE_NEAR", "MODE_PHRASE", "Planner", "QTYPE_MULTI",
+    "QueryPlan",
     "IndexSegment", "SegmentManager", "concat_corpora", "corpus_batches",
 ]

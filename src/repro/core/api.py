@@ -42,6 +42,13 @@ import numpy as np
 
 MODE_PHRASE = "phrase"
 MODE_NEAR = "near"
+MODE_KWORD = "kword"
+
+# kword window bounds (== core.kword.KW_FLEX_MAX_WINDOW; literal here so the
+# API layer stays import-free of the planner stack): the flexible executor's
+# int64 delta masks reach W = 31; the device executors handle W <= 15 and
+# route wider windows to flex automatically.
+_KWORD_MAX_WINDOW = 31
 
 # -- serving statuses (serve.front) -----------------------------------------
 # Every response handed out by the serving front door carries exactly one of
@@ -83,9 +90,17 @@ class RankingParams:
 class SearchRequest:
     """One query: surface ids + match semantics + ranking controls.
 
-    mode      : MODE_PHRASE (order + adjacency) or MODE_NEAR (word set
-                within `window` of the pivot).
+    mode      : MODE_PHRASE (order + adjacency), MODE_NEAR (word set within
+                `window` of the pivot), or MODE_KWORD (K-word proximity,
+                arXiv:2009.02684: every query word inside ONE
+                (window + 1)-wide position span, any order — anchors are
+                occurrences of the rarest non-stop word; the planner covers
+                stop slots with multi-component-key lookups, see
+                core/kword.py).  kword requires K >= 2 words and an explicit
+                window in [1, 31]; windows <= 15 run on the device
+                executors, wider ones ride the flexible escape path.
     window    : near-mode window; None = IndexParams.near_window.
+                kword mode: the span width (required, 1..31).
     top_k     : ranked => keep the top_k highest-scoring documents;
                 unranked => truncate the flat anchor arrays (the legacy
                 `max_results` semantics).  None = unlimited.
@@ -108,8 +123,15 @@ class SearchRequest:
     def __post_init__(self):
         object.__setattr__(self, "surface_ids",
                            tuple(int(s) for s in self.surface_ids))
-        if self.mode not in (MODE_PHRASE, MODE_NEAR):
+        if self.mode not in (MODE_PHRASE, MODE_NEAR, MODE_KWORD):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.mode == MODE_KWORD:
+            if len(self.surface_ids) < 2:
+                raise ValueError("kword mode needs at least 2 query words")
+            if self.window is None or not 1 <= int(self.window) <= _KWORD_MAX_WINDOW:
+                raise ValueError(
+                    f"kword mode needs an explicit window in "
+                    f"[1, {_KWORD_MAX_WINDOW}], got {self.window!r}")
         if self.top_k is not None and self.top_k < 0:
             raise ValueError("top_k must be >= 0")
         if self.deadline_ms is not None and self.deadline_ms <= 0:

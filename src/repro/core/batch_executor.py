@@ -69,11 +69,13 @@ from repro.core.executor import (SENTINEL, Executor, SearchResult,
 from repro.core.fetch_tables import (DOCS_PER_SHARD, NO_DIST,
                                      SCORE_DELTA_BITS, TABLE_POS_BITS,
                                      alloc_batch_tables, pack_ns_checks)
+from repro.core.kword import KW_DEVICE_MAX_WINDOW, MODE_KWORD
 from repro.core.planner import MODE_PHRASE, QueryPlan
 from repro.core.postings import (BLOCK, PHRASE_BIAS, POS_BITS, concat_packed,
                                  pad_block_multiple)
-from repro.kernels.ops import (I32_SENTINEL, banded_intersect_rows,
-                               banded_min_delta_rows, unpack_postings)
+from repro.kernels.ops import (I32_SENTINEL, banded_delta_mask_rows,
+                               banded_intersect_rows, banded_min_delta_rows,
+                               kword_window_hits, unpack_postings)
 
 # table caps: a task exceeding these routes its whole plan to the flexible
 # executor (rare: >8 AND-groups or >8 unioned form fetches per slot).
@@ -273,7 +275,8 @@ class _Row:
 
 def bucket_step_math(arena, t, *,
                      P0: int, P: int, impl: str, interpret: bool,
-                     presorted: bool = False, ranked: bool = False):
+                     presorted: bool = False, ranked: bool = False,
+                     kword: bool = False):
     """One shape bucket of segmented rows: gather packed lanes → vectorized
     unpack (ops.unpack_postings over the bit-packed block arena) → keys →
     per-row int32 rebase against `shard_base` → banded rows intersection.
@@ -352,6 +355,25 @@ def bucket_step_math(arena, t, *,
 
     a64 = gk0.reshape(T, F * P0)
     a32 = rebase(gk0, dt1[:, None, None], base[:, None, None]).reshape(T, F * P0)
+
+    def kword_found(b32_sorted):
+        """K-way windowed span join (kword buckets): per-group signed delta
+        masks, window-start scans ANDed across groups (core/kword.py;
+        ops.banded_delta_mask_rows + kword_window_hits).  Every active
+        constraint group of a kword task is banded at the task's window W
+        (plan construction), so the per-row W is the max over group bands
+        (inactive pads are band 0 and never constrain)."""
+        a_rows = jnp.broadcast_to(a32[:, None], (T, G - 1, F * P0))
+        masks = banded_delta_mask_rows(
+            a_rows.reshape(T * (G - 1), F * P0),
+            b32_sorted.reshape(T * (G - 1), F * P),
+            jnp.broadcast_to(t["band"][:, 1:], (T, G - 1)).reshape(-1),
+            implementation=impl, interpret=interpret)
+        masks = masks.reshape(T, G - 1, F * P0).transpose(1, 0, 2)
+        kw_bands = t["band"][:, 1:].max(axis=1)
+        active = t["active"][:, 1:].transpose(1, 0)
+        return kword_window_hits(masks, active, kw_bands)
+
     if ranked:
         # proximity scores, canonical accumulation order (mirrored exactly by
         # Executor._run_groups_ranked): per-task bias, the seed's own delta,
@@ -403,6 +425,12 @@ def bucket_step_math(arena, t, *,
                 live = hit_g & active_c[:, gi]
                 score = score + jnp.where(live, proximity_w(delta_g[:, gi]), 0.0)
                 found &= hit_g | ~active_c[:, gi]
+            if kword:
+                # kword found = the span join, not pairwise membership; a
+                # span match implies an in-band hit for every group, so the
+                # score accumulated above is exact for every survivor (and
+                # zeroed below for the rest)
+                found = kword_found(jnp.sort(b32, axis=-1))
         found &= a32 != I32_SENTINEL
         return a64, found, jnp.where(found, score, 0.0)
     if G > 1:
@@ -411,6 +439,9 @@ def bucket_step_math(arena, t, *,
                      base[:, None, None, None]).reshape(T, G - 1, F * P)
         if not presorted:
             b32 = jnp.sort(b32, axis=-1)
+        if kword:
+            found = kword_found(b32)
+            return a64, found & (a32 != I32_SENTINEL)
         a_rows = jnp.broadcast_to(a32[:, None], (T, G - 1, F * P0))
         hit = banded_intersect_rows(
             a_rows.reshape(T * (G - 1), F * P0),
@@ -425,7 +456,8 @@ def bucket_step_math(arena, t, *,
 
 
 _batch_step = partial(jax.jit, static_argnames=(
-    "P0", "P", "impl", "interpret", "presorted", "ranked"))(bucket_step_math)
+    "P0", "P", "impl", "interpret", "presorted", "ranked",
+    "kword"))(bucket_step_math)
 
 
 class BatchExecutor:
@@ -468,7 +500,7 @@ class BatchExecutor:
         order_groups_seed_first)."""
         return order_groups_seed_first(groups, ranked=ranked)
 
-    def _task_fits(self, groups) -> bool:
+    def _task_fits(self, groups, kword: bool = False) -> bool:
         g_cap, f_cap, _, _, _ = self._caps()
         if len(groups) > g_cap:
             return False
@@ -476,6 +508,10 @@ class BatchExecutor:
             if len(g.fetches) > f_cap:
                 return False
             if int(g.band) > self._pos_budget:
+                return False
+            # kword delta masks are int32 bitfields over d in [-W, W]: wider
+            # windows ride the flexible escape path (int64 masks, W <= 31)
+            if kword and int(g.band) > KW_DEVICE_MAX_WINDOW:
                 return False
             for f in g.fetches:
                 if f.stream == "first" and not _is_first_group(g):
@@ -568,7 +604,8 @@ class BatchExecutor:
             main_dead = (not sp.groups) or any(not g.fetches for g in sp.groups)
             if not main_dead:
                 ordered = self._order_groups(sp.groups, ranked=ranked)
-                if ordered is None or not self._task_fits(ordered):
+                if ordered is None or not self._task_fits(
+                        ordered, kword=sp.mode == MODE_KWORD):
                     return False
                 checks = ordered[0].fetches[0].stop_checks
                 if any(f.stop_checks != checks for f in ordered[0].fetches) or \
@@ -617,7 +654,8 @@ class BatchExecutor:
         # small P the sort is cheap and splitting buckets costs more calls
         # (ranked rows always sort: scoring needs the composite order)
         sortfree = row.sortfree and P >= 2048 and not row.task.ranked
-        return (G, F, P0, P, C, M, sortfree, row.task.ranked)
+        return (G, F, P0, P, C, M, sortfree, row.task.ranked,
+                row.task.mode == MODE_KWORD)
 
     def _tensorize_bucket(self, rows: list, G: int, F: int, C: int, M: int,
                           T_pad: int) -> dict:
@@ -678,7 +716,7 @@ class BatchExecutor:
         for row in rows:
             buckets.setdefault(self._bucket_key(row), []).append(row)
         d = self.dev
-        for (G, F, P0, P, C, M, sortfree, ranked), rs in buckets.items():
+        for (G, F, P0, P, C, M, sortfree, ranked, kword), rs in buckets.items():
             per_task = F * P0 + (G - 1) * F * P
             if C > 0:                  # near-stop gather adds an [F, P0, K] slab
                 per_task += F * P0 * int(d.near_stop_np.shape[1])
@@ -699,7 +737,7 @@ class BatchExecutor:
                 out = _batch_step(
                     d.device_arena, tj,
                     P0=P0, P=P, impl=self.impl, interpret=self.interpret,
-                    presorted=sortfree, ranked=ranked)
+                    presorted=sortfree, ranked=ranked, kword=kword)
                 if ranked:
                     a64, found, scores = out
                     self._scatter_row_keys(part, np.asarray(a64),

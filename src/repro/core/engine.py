@@ -29,9 +29,11 @@ from repro.core.batch_executor import BatchExecutor
 from repro.core.builder import IndexSet, expand_token_forms
 from repro.core.corpus import Corpus
 from repro.core.executor import DeviceIndex, Executor, SearchResult
+from repro.core.kword import MODE_KWORD, pick_kword_anchor
 from repro.core.lexicon import Lexicon
-from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE, Planner,
-                                QueryPlan, ResolvedFetch, SubPlan)
+from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE,
+                                QTYPE_KWORD, Planner, QueryPlan,
+                                ResolvedFetch, SubPlan)
 
 
 def _coerce_requests(queries, modes, window, max_results, what) -> list[SearchRequest]:
@@ -176,6 +178,27 @@ class OrdinaryEngine(_BatchSearchMixin):
         if mode == MODE_PHRASE:
             for i, forms in enumerate(form_lists):
                 groups.append(self._slot_group(i, forms, band=0))
+        elif mode == MODE_KWORD:
+            # the baseline pays full posting-list reads for every slot, stop
+            # words included; the anchor is the rarest slot that has a
+            # non-stop form (the span join needs an anchorable slot), and
+            # the K-way windowed join runs over the full lists — the cost
+            # comparison the multi-key cover is benchmarked against
+            if window is None:
+                raise ValueError("kword mode requires an explicit window")
+            lex = self.index.lexicon
+            counts = [sum(int(self._counts[f]) for f in forms)
+                      for forms in form_lists]
+            nonstop = [i for i, forms in enumerate(form_lists)
+                       if not bool(lex.is_stop(np.asarray(forms)).all())]
+            eligible = nonstop or list(range(len(form_lists)))
+            anchor = min(eligible, key=lambda i: counts[i])
+            for i, forms in enumerate(form_lists):
+                groups.append(self._slot_group(i, forms,
+                                               band=0 if i == anchor else window))
+            return QueryPlan(subplans=[SubPlan(
+                qtype=QTYPE_KWORD, mode=MODE_KWORD, groups=groups,
+                n_slots=len(form_lists), kw_window=window)])
         else:
             counts = [sum(int(self._counts[f]) for f in forms) for forms in form_lists]
             pivot = int(np.argmin(counts))
@@ -464,6 +487,146 @@ def brute_force_ranked(corpus: Corpus, index: IndexSet, surface_ids,
         if docs:
             doc_level_all |= docs
 
+    scale = float(ranking.proximity_scale)
+    anchor_scores = {k: v * scale for k, v in anchor_scores.items()}
+    doc_scores: dict = {}
+    for (d, _p), s in anchor_scores.items():
+        doc_scores[d] = doc_scores.get(d, 0.0) + s
+    return anchor_scores, doc_scores, doc_level_all
+
+
+# ---------------------------------------------------------------------------
+# K-word proximity oracle (arXiv:2009.02684; planner QTYPE_KWORD)
+# ---------------------------------------------------------------------------
+
+def _kword_tier_hits(tiered, matches, anchor, window, doc_of, pos_of, T):
+    """Literal nested-loop span matching for one tier-split subquery: yields
+    (doc, pos, score) for every anchor occurrence where some assignment of
+    one occurrence per remaining slot fits inside a (window + 1)-wide span
+    containing the anchor — the window-start scan is spelled out as loops,
+    nothing shared with the executors' mask math.  `score` is the ranked
+    model's anchor score: w(0) for the anchor plus, per remaining slot, w of
+    the nearest in-window occurrence (the banded min the executors read)."""
+    for t in np.nonzero(matches[anchor])[0]:
+        d = doc_of[t]
+        cands = []
+        good = True
+        for i, m in enumerate(matches):
+            if i == anchor:
+                continue
+            lo, hi = max(0, t - window), min(T, t + window + 1)
+            idx = np.nonzero(m[lo:hi] & (doc_of[lo:hi] == d))[0]
+            if len(idx) == 0:
+                good = False
+                break
+            cands.append((idx + lo - t).astype(int))
+        if not good:
+            continue
+        ok = False
+        for w0 in range(-window, 1):          # window starts containing t
+            if all(any(w0 <= dd <= w0 + window for dd in c) for c in cands):
+                ok = True
+                break
+        if not ok:
+            continue
+        score = 1.0 + sum(1.0 / (1.0 + int(np.abs(c).min())) for c in cands)
+        yield int(d), int(pos_of[t]), score
+
+
+def brute_force_kword(corpus: Corpus, index: IndexSet, surface_ids,
+                      window: int):
+    """O(corpus) K-word span oracle: anchors are occurrences of the rarest
+    non-stop slot (pick_kword_anchor — the planner's anchor rule); an anchor
+    matches iff every other query word has an occurrence such that ALL K
+    words fall inside one (window + 1)-wide position span.  Tier-split like
+    the engine; all-stop tier combinations are unsupported (no anchor) and
+    contribute nothing, mirroring the planner.
+
+    Returns (positional, doc_matches): positional = set[(doc, anchor_pos)];
+    doc_matches = distance-disregarding doc-level intersection of the
+    non-stop words (the stream-1 fallback's ground truth)."""
+    lexicon, analyzer = index.lexicon, index.analyzer
+    occ_counts = index.base_occ_counts()
+    tf_prim = analyzer.primary[corpus.tokens]
+    tf_sec = analyzer.secondary[corpus.tokens]
+    doc_of = corpus.doc_ids_per_token()
+    pos_of = corpus.positions_per_token()
+    T = corpus.n_tokens
+    from repro.core.lexicon import TIER_STOP
+
+    def token_matches(slot_forms):
+        m = np.isin(tf_prim, list(slot_forms))
+        m |= np.isin(tf_sec, list(slot_forms)) & (tf_sec >= 0)
+        return m
+
+    positional = set()
+    doc_level_all = set()
+    for tiered in _tier_splits([analyzer.forms_of(s) for s in surface_ids],
+                               lexicon):
+        anchor = pick_kword_anchor(tiered, occ_counts)
+        if anchor < 0:
+            continue                         # all-stop: unsupported subplan
+        matches = [token_matches(forms) for _, forms in tiered]
+        for d, p, _s in _kword_tier_hits(tiered, matches, anchor, window,
+                                         doc_of, pos_of, T):
+            positional.add((d, p))
+        docs = None
+        for (t, _forms), m in zip(tiered, matches):
+            if t == TIER_STOP:
+                continue
+            dset = set(np.unique(doc_of[m]).tolist())
+            docs = dset if docs is None else (docs & dset)
+        if docs:
+            doc_level_all |= docs
+    return positional, doc_level_all
+
+
+def brute_force_kword_ranked(corpus: Corpus, index: IndexSet, surface_ids,
+                             window: int, ranking=None):
+    """Ranked twin of `brute_force_kword` (same shapes as
+    `brute_force_ranked`): every span-matching anchor scores w(0) for the
+    anchor slot plus w(nearest in-window distance) per remaining slot —
+    exactly the banded min-delta accumulation the executors run, with
+    found overridden by the span join.  Duplicate anchors across tier-split
+    subqueries keep their MAX score; doc relevance sums a doc's anchors."""
+    from repro.core.api import RankingParams
+    from repro.core.lexicon import TIER_STOP
+
+    ranking = ranking or RankingParams()
+    lexicon, analyzer = index.lexicon, index.analyzer
+    occ_counts = index.base_occ_counts()
+    tf_prim = analyzer.primary[corpus.tokens]
+    tf_sec = analyzer.secondary[corpus.tokens]
+    doc_of = corpus.doc_ids_per_token()
+    pos_of = corpus.positions_per_token()
+    T = corpus.n_tokens
+
+    def token_matches(slot_forms):
+        m = np.isin(tf_prim, list(slot_forms))
+        m |= np.isin(tf_sec, list(slot_forms)) & (tf_sec >= 0)
+        return m
+
+    anchor_scores: dict = {}
+    doc_level_all: set = set()
+    for tiered in _tier_splits([analyzer.forms_of(s) for s in surface_ids],
+                               lexicon):
+        anchor = pick_kword_anchor(tiered, occ_counts)
+        if anchor < 0:
+            continue
+        matches = [token_matches(forms) for _, forms in tiered]
+        for d, p, s in _kword_tier_hits(tiered, matches, anchor, window,
+                                        doc_of, pos_of, T):
+            prev = anchor_scores.get((d, p))
+            if prev is None or s > prev:
+                anchor_scores[(d, p)] = s
+        docs = None
+        for (t, _forms), m in zip(tiered, matches):
+            if t == TIER_STOP:
+                continue
+            dset = set(np.unique(doc_of[m]).tolist())
+            docs = dset if docs is None else (docs & dset)
+        if docs:
+            doc_level_all |= docs
     scale = float(ranking.proximity_scale)
     anchor_scores = {k: v * scale for k, v in anchor_scores.items()}
     doc_scores: dict = {}

@@ -32,6 +32,7 @@ from repro.core.api import (RankingParams, SearchRequest, SearchResponse,
                             SearchResult)
 from repro.core.builder import IndexSet
 from repro.core.fetch_tables import SCORE_DELTA_BITS
+from repro.core.kword import kword_span_ok
 from repro.core.planner import (FetchGroup, MODE_NEAR, MODE_PHRASE, QueryPlan,
                                 ResolvedFetch, SubPlan)
 from repro.core.postings import NS_SHIFT, PHRASE_BIAS, POS_BITS
@@ -449,6 +450,29 @@ class Executor:
         res = np.asarray(a)[np.asarray(a_valid)]
         return res[res < SENTINEL]
 
+    def _kword_span_mask(self, sp: SubPlan, a: np.ndarray) -> np.ndarray:
+        """K-way windowed join over the subplan's constraint groups for the
+        anchor keys `a` (core/kword.py; host int64 masks, so windows up to
+        KW_FLEX_MAX_WINDOW — this is the wide-window / cap-overflow escape
+        the batched executors route to)."""
+        ordered = order_groups_seed_first(sp.groups, ranked=True)
+        bs = [np.asarray(self._group_keys(g, sp.mode)) for g in ordered[1:]]
+        return kword_span_ok(a, bs, int(sp.kw_window))
+
+    def _run_groups_kword(self, sp: SubPlan):
+        """Unranked kword: seed anchors filtered by the K-way span join
+        (every slot inside one (W + 1)-wide window containing the anchor)
+        instead of pairwise banded membership."""
+        groups = sp.groups
+        if not groups or any(not g.fetches for g in groups):
+            return np.empty(0, dtype=np.int64)
+        ordered = order_groups_seed_first(groups, ranked=True)
+        if ordered is None:
+            return np.empty(0, dtype=np.int64)
+        a = np.asarray(self._group_keys(ordered[0], sp.mode))
+        sel = (a < SENTINEL) & self._kword_span_mask(sp, a)
+        return a[sel]
+
     # toggled off only by the benchmark's A/B pass (ranked_qps_flex_eager)
     ranked_jit = True
 
@@ -490,6 +514,11 @@ class Executor:
                 a_valid &= hit
                 score = score + jnp.where(hit, proximity_w(delta_g), 0.0)
             sel = np.asarray(a_valid)
+            if sp.kw_window is not None:
+                # kword: found is the span join, not pairwise membership —
+                # a span match implies an in-band hit for every group, so
+                # the score accumulation above is exact for every survivor
+                sel = sel & self._kword_span_mask(sp, np.asarray(a))
             return np.asarray(a)[sel], np.asarray(score, np.float32)[sel]
         # pow2-pad the seed side once (pads = SENTINEL keys, delta 0): every
         # downstream dispatch then hits a bounded set of compiled shapes
@@ -512,6 +541,9 @@ class Executor:
             a_valid, score = _ranked_group_step(
                 (comp, jnp.int32(g.band)), probe, a_valid, score)
         sel = np.asarray(a_valid)[:n]
+        if sp.kw_window is not None:
+            # kword found bit = span join (see the eager branch above)
+            sel = sel & self._kword_span_mask(sp, np.asarray(a)[:n])
         return (np.asarray(a)[:n][sel],
                 np.asarray(score, np.float32)[:n][sel])
 
@@ -532,6 +564,9 @@ class Executor:
             postings += sp.postings_read
             if ranked:
                 keys, scores = self._run_groups_ranked(sp)
+            elif sp.kw_window is not None:
+                keys = self._run_groups_kword(sp)
+                scores = None
             else:
                 keys = self._run_groups(sp.groups, sp.mode)
                 scores = None

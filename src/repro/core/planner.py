@@ -34,6 +34,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.builder import IndexSet
+from repro.core.kword import MODE_KWORD, pick_kword_anchor
 from repro.core.lexicon import TIER_FREQUENT, TIER_ORDINARY, TIER_STOP
 from repro.core.postings import MAX_STOP_PHRASE_LEN
 
@@ -41,6 +42,7 @@ MODE_PHRASE = "phrase"   # precise: order + adjacency
 MODE_NEAR = "near"       # word set: all words within a window of the pivot
 
 QTYPE_MULTI = 5          # windowed near+stop via multi-component keys
+QTYPE_KWORD = 6          # K-word span proximity via multi-key cover
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +94,11 @@ class SubPlan:
                                    # biased by (n_slots - len(groups)) so
                                    # every slot contributes exactly once even
                                    # when groups merge or imply slots
+    kw_window: Optional[int] = None  # QTYPE_KWORD only: the span width W —
+                                     # every constraint group is banded at W
+                                     # and the executors run the K-way
+                                     # windowed join instead of pairwise
+                                     # membership (core/kword.py)
 
     @property
     def postings_read(self) -> int:
@@ -181,6 +188,10 @@ class Planner:
         match semantics are identical, only the group decomposition differs.
         """
         if window is None:
+            if mode == MODE_KWORD:
+                # kword windows are semantic (the span width) — no implicit
+                # default; SearchRequest.__post_init__ enforces the same
+                raise ValueError("kword mode requires an explicit window")
             # near-mode default: the near window (2*(MaxLength-1)) — every
             # slot of the paper's 2.2 every-other-word procedure is within
             # reach of any pivot, making source recall structural
@@ -210,6 +221,8 @@ class Planner:
 
     def _plan_subquery(self, tiered, mode, window, ranked=False) -> SubPlan:
         tiers = [t for t, _ in tiered]
+        if mode == MODE_KWORD:
+            return self._plan_kword(tiered, window, ranked)
         if all(t == TIER_STOP for t in tiers):
             return self._plan_type1(tiered)
         if any(t == TIER_STOP for t in tiers):
@@ -539,3 +552,162 @@ class Planner:
                                              ranked=ranked))
         return SubPlan(qtype=QTYPE_MULTI, mode=MODE_NEAR, groups=groups,
                        fallback_groups=self._fallback_groups(tiered))
+
+    # -- QTYPE_KWORD: K-word span proximity via multi-key cover ----------------
+
+    def _kword_pair_group(self, slot, stop_forms, anchor_forms, window) -> FetchGroup:
+        """(s, anchor) two-component lookups for one kword stop slot, keyed
+        at the STOP word's own position (pos, not pos + dist): the K-way
+        join needs each slot's candidate positions, not pivot echoes.  The
+        |dist| <= window mask prunes to postings whose anchor co-occurrence
+        is inside the span — every in-band stop occurrence of any matching
+        anchor survives it (its own (s, anchor) co-occurrence is within
+        W <= NeighborDistance), so the banded in-band set per anchor is
+        exactly the full occurrence set's."""
+        mk = self.index.multi_key
+        fetches = []
+        for s, v in itertools.product(stop_forms, anchor_forms):
+            st, e = mk.find_pair(int(s), int(v))
+            if e > st:
+                fetches.append(ResolvedFetch(
+                    stream="multi", start=st, length=e - st, offset=slot,
+                    max_abs_dist=window, pivot_from_dist=False))
+        return FetchGroup(slot=slot, fetches=fetches, band=window,
+                          score_slot=slot)
+
+    def _kword_stop_group(self, slot, forms, anchor_forms, window) -> FetchGroup:
+        """Cover choice for a kword stop slot: the multi-key pair lookup
+        (W <= NeighborDistance only) vs the ordinary full posting list,
+        by postings-read cost.  An EMPTY pair group is exact and wins: the
+        stop never co-occurs within NeighborDistance >= W of any anchor
+        form, so no span match exists and the group kills the subplan
+        (the doc-only fallback still runs)."""
+        mk = self.index.multi_key
+        ordn = self._ordinary_band_group(slot, forms, window)
+        if window > mk.neighbor_distance:
+            return ordn
+        pair = self._kword_pair_group(slot, forms, anchor_forms, window)
+        return pair if pair.postings_read <= ordn.postings_read else ordn
+
+    def _kword_expanded_group(self, slot, forms, anchor_forms, window) -> Optional[FetchGroup]:
+        """Expanded (w, v) cover for a kword frequent slot, keyed at the
+        SLOT word's position: pos itself when the slot word is the stored
+        anchor (direct), pos + dist when the query anchor is (mirrored) —
+        the inverse of the near-mode pivot keying.  None when the window
+        exceeds the pair reach for some orientation (under-coverage: the
+        caller falls back to basic fetches); an empty group is exact (no
+        within-reach co-occurrence anywhere) and kills the subplan."""
+        exp = self.index.expanded
+        fetches = []
+        for w, v in itertools.product(forms, anchor_forms):
+            for stored_w, stored_v, mirrored in ((w, v, False), (v, w, True)):
+                reach = int(self._pair_reach[stored_w])
+                if window > reach:
+                    return None
+                s, e = exp.pairs.find(stored_w * exp.n_base + stored_v)
+                if e == s:
+                    continue
+                # stored postings: (doc, pos of stored_w, dist to stored_v)
+                fetches.append(ResolvedFetch(
+                    stream="expanded", start=s, length=e - s, offset=slot,
+                    max_abs_dist=window, pivot_from_dist=mirrored))
+                break   # canonical orientation found
+        return FetchGroup(slot=slot, fetches=fetches, band=window,
+                          score_slot=slot)
+
+    def _kword_triple_seed(self, anchor_slot, s1, s2, anchor_forms,
+                           window) -> Optional[FetchGroup]:
+        """(s1, s2, anchor) three-component seed filter: anchor occurrences
+        with BOTH stops within NeighborDistance, masked to |dist| =
+        max(nearest |d1|, nearest |d2|) <= window — a necessary condition
+        for any span match (both in-span stops sit within W of the anchor),
+        and usually far shorter than the anchor's basic posting list: the
+        'triples first' cost win of the K-word cover.  None when no anchor
+        form has the key."""
+        mk = self.index.multi_key
+        fetches = []
+        for v in anchor_forms:
+            st, e = mk.find_triple(int(s1), int(s2), int(v))
+            if e > st:
+                fetches.append(ResolvedFetch(
+                    stream="multi", start=st, length=e - st,
+                    offset=anchor_slot, max_abs_dist=window,
+                    pivot_from_dist=False))
+        if not fetches:
+            return None
+        return FetchGroup(slot=anchor_slot, fetches=fetches, band=0,
+                          score_slot=anchor_slot)
+
+    def _plan_kword(self, tiered, window, ranked=False) -> SubPlan:
+        """K-word span proximity (arXiv:2009.02684): anchor on the rarest
+        non-stop slot; one band-W constraint group per remaining slot —
+        each covered by the cheapest admissible index (multi-key pairs /
+        expanded pairs / ordinary / basic, by occ-count cost) and keyed at
+        its OWN word's positions; the seed is the anchor's basic list or,
+        when cheaper, a (s1, s2, anchor) triple filter.  The executors
+        evaluate the K-way windowed join over these groups (core/kword.py).
+        """
+        anchor = pick_kword_anchor(tiered, self._occ_counts)
+        if anchor < 0:
+            return SubPlan(qtype=QTYPE_KWORD, mode=MODE_KWORD, groups=[],
+                           supported=False, kw_window=window,
+                           note="all-stop kword tier combination: no "
+                                "non-stop slot to anchor the span join on")
+        anchor_forms = tiered[anchor][1]
+        mk = self.index.multi_key
+        constraints = []
+        stop_singles = []
+        stop_seen = set()
+        for i, (t, forms) in enumerate(tiered):
+            if i == anchor:
+                continue
+            if t == TIER_STOP:
+                if len(forms) == 1:
+                    stop_singles.append((i, int(forms[0])))
+                if not ranked:
+                    # identical form sets impose identical span constraints
+                    # (one occurrence may satisfy several slots); ranked
+                    # keeps per-slot groups for per-slot score payloads
+                    key = tuple(sorted(forms))
+                    if key in stop_seen:
+                        continue
+                    stop_seen.add(key)
+                constraints.append(
+                    self._kword_stop_group(i, forms, anchor_forms, window))
+            else:
+                g = None
+                if t == TIER_FREQUENT:
+                    g = self._kword_expanded_group(i, forms, anchor_forms,
+                                                   window)
+                basic = self._basic_group(i, forms, band=window)
+                if g is None or g.postings_read > basic.postings_read:
+                    g = basic
+                constraints.append(g)
+        # seed: the anchor's own occurrences, or a triple filter when one is
+        # admissible and cheaper (triples first, pairs for the remainder)
+        seed = self._basic_group(anchor, anchor_forms)
+        if window <= mk.neighbor_distance:
+            best_triple = None
+            for (i1, s1), (i2, s2) in itertools.combinations(stop_singles, 2):
+                if s1 == s2 or not mk.has_triple_pair(s1, s2):
+                    continue
+                trip = self._kword_triple_seed(anchor, s1, s2, anchor_forms,
+                                               window)
+                if trip is None:
+                    # admitted (s1, s2) key with no postings for any anchor
+                    # form: the stops never co-occur near an anchor, so the
+                    # span join is empty — a fetchless seed kills the
+                    # subplan (the doc-only fallback still runs)
+                    seed = FetchGroup(slot=anchor, fetches=[], band=0)
+                    best_triple = None
+                    break
+                if (best_triple is None
+                        or trip.postings_read < best_triple.postings_read):
+                    best_triple = trip
+            if (best_triple is not None
+                    and best_triple.postings_read < seed.postings_read):
+                seed = best_triple
+        return SubPlan(qtype=QTYPE_KWORD, mode=MODE_KWORD,
+                       groups=[seed] + constraints,
+                       fallback_groups=self._fallback_groups(tiered),
+                       kw_window=window)

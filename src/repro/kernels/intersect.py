@@ -146,6 +146,63 @@ def banded_min_delta_rows_pallas(a2d: jax.Array, bk2d: jax.Array,
     return fn(lo_tiles, n_tiles, bands, a2d, bk2d, bd2d)
 
 
+def _kernel_rows_delta_mask(lo_ref, nt_ref, band_ref, a_ref, b_ref, o_ref):
+    """K-word join twin of `_kernel_rows` (kword mode, core/kword.py): for
+    each a element, a bitmask over the signed delta d = b - a of the in-band
+    b's — bit (d + band) set iff some b sits exactly at a + d.  The caller
+    AND-combines per-group window scans of these masks to decide whether all
+    K words of a query fit one window (ops.banded_delta_mask_rows).  band
+    <= 15 so every bit index (d + band) <= 30 fits an int32 lane."""
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k < nt_ref[i])
+    def _compute():
+        band = band_ref[i]
+        a = a_ref[...]                       # (RA, 128) int32
+        b = b_ref[...]                       # (RB, 128) int32
+        d = b[None, None, :, :] - a[:, :, None, None]
+        inband = jnp.abs(d) <= band
+        bit = jnp.int32(1) << jnp.clip(d + band, 0, 31)
+        cand = jnp.where(inband, bit, jnp.int32(0))
+        acc = jax.lax.reduce(cand, jnp.int32(0), jax.lax.bitwise_or, (2, 3))
+        o_ref[...] = o_ref[...] | acc
+
+
+def banded_delta_mask_rows_pallas(a2d: jax.Array, b2d: jax.Array,
+                                  lo_tiles: jax.Array, n_tiles: jax.Array,
+                                  bands: jax.Array, *, block_a: int,
+                                  block_b: int, max_tiles: int,
+                                  interpret: bool = True) -> jax.Array:
+    """Raw pallas_call for the batched delta-mask rows (layout identical to
+    banded_intersect_rows_pallas)."""
+    ra, rb = block_a // LANES, block_b // LANES
+    n_a_blocks = a2d.shape[0] // ra
+    n_b_blocks = b2d.shape[0] // rb
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_a_blocks, max_tiles),
+        in_specs=[
+            pl.BlockSpec((ra, LANES), lambda i, k, lo, nt, bd: (i, 0)),
+            pl.BlockSpec((rb, LANES),
+                         lambda i, k, lo, nt, bd: (jnp.minimum(lo[i] + k, n_b_blocks - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((ra, LANES), lambda i, k, lo, nt, bd: (i, 0)),
+    )
+    fn = pl.pallas_call(
+        _kernel_rows_delta_mask,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(a2d.shape, jnp.int32),
+        interpret=interpret,
+    )
+    return fn(lo_tiles, n_tiles, bands, a2d, b2d)
+
+
 def banded_intersect_pallas(a2d: jax.Array, b2d: jax.Array, lo_tiles: jax.Array,
                             n_tiles: jax.Array, *, band: int, block_a: int,
                             block_b: int, max_tiles: int,

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.flash_prefill import flash_prefill_pallas
-from repro.kernels.intersect import (I32_SENTINEL, banded_intersect_pallas,
+from repro.kernels.intersect import (I32_SENTINEL, banded_delta_mask_rows_pallas,
+                                     banded_intersect_pallas,
                                      banded_intersect_rows_pallas,
                                      banded_min_delta_rows_pallas)
 from repro.kernels.segment_bag import segment_bag_pallas
@@ -225,6 +226,119 @@ def banded_intersect_rows(a: jax.Array, b_sorted: jax.Array, bands: jax.Array,
         interpret=interpret)
     found = out2d.reshape(N, pa) > 0
     return found & (a != I32_SENTINEL)
+
+
+_KW_MAX_BAND = 15   # device kword window cap: bit (d + band) <= 30 per lane
+
+
+def banded_delta_mask_rows(a: jax.Array, b_sorted: jax.Array,
+                           bands: jax.Array, *,
+                           implementation: str = "pallas",
+                           interpret: bool = True, block_a: int = 1024,
+                           block_b: int = 1024) -> jax.Array:
+    """Batched signed-delta bitmask (the K-word join twin of
+    `banded_intersect_rows`, core/kword.py): out[n, i] has bit
+    (d + bands[n]) set iff exists j with b_sorted[n, j] - a[n, i] == d and
+    |d| <= bands[n] — one int32 per anchor encoding WHICH offsets of the
+    [-band, band] window hold a candidate for this constraint group.  The
+    K-way combine then scans window starts t in [0, band]: a query matches
+    at an anchor iff some t has every active group's mask non-zero in bits
+    [t, t + band] (see `kword_window_hits` / bucket_step_math's kword pass).
+
+    a: [N, Pa] int32 (any order); b_sorted: [N, Pb] int32 ascending per
+    row; bands: [N] int32, each <= 15 (wider kword windows ride the flex
+    escape — batch_executor._task_fits).  I32_SENTINEL entries of `a` map
+    to mask 0.
+    """
+    assert a.dtype == jnp.int32 and b_sorted.dtype == jnp.int32
+    N, pa = a.shape
+    pb = b_sorted.shape[1]
+    if implementation == "ref":
+        def row(av, bv, band):
+            mask = jnp.zeros_like(av)
+            for d in range(-_KW_MAX_BAND, _KW_MAX_BAND + 1):
+                lo = jnp.searchsorted(bv, av + d, side="left")
+                hi = jnp.searchsorted(bv, av + d, side="right")
+                present = (hi > lo) & (jnp.abs(d) <= band)
+                mask = mask | jnp.where(
+                    present, jnp.int32(1) << jnp.clip(d + band, 0, 31),
+                    jnp.int32(0))
+            return mask
+        out = jax.vmap(row)(a, b_sorted, bands.astype(jnp.int32))
+        return jnp.where(a == I32_SENTINEL, 0, out)
+
+    if N == 0 or pa == 0 or pb == 0:
+        return jnp.zeros((N, pa), jnp.int32)
+
+    def pick_block(p, req):
+        for blk in range(max(min(req, p) // 128 * 128, 128), 127, -128):
+            if p % blk == 0:
+                return blk
+        raise ValueError(f"row width {p} not a multiple of 128")
+
+    block_a = pick_block(pa, block_a)
+    block_b = pick_block(pb, block_b)
+    nab_pp = pa // block_a
+    nbb_pp = pb // block_b
+
+    a_t = a.reshape(N, nab_pp, block_a)
+    amin = a_t.min(axis=2).astype(jnp.int64)
+    amax = a_t.max(axis=2).astype(jnp.int64)
+    b_block_min = b_sorted.reshape(N, nbb_pp, block_b)[:, :, 0].astype(jnp.int64)
+    band64 = bands.astype(jnp.int64)[:, None]
+    lo = jax.vmap(lambda bm, q: jnp.searchsorted(bm, q, side="left"))(
+        b_block_min, amin - band64)
+    lo = jnp.clip(lo - 1, 0, nbb_pp - 1)
+    hi = jax.vmap(lambda bm, q: jnp.searchsorted(bm, q, side="right"))(
+        b_block_min, amax + band64)
+    n_tiles = jnp.maximum(hi - lo, 0).astype(jnp.int32)
+    row_base = (jnp.arange(N, dtype=jnp.int64) * nbb_pp)[:, None]
+    lo_abs = (lo + row_base).astype(jnp.int32)
+    band_per_block = jnp.broadcast_to(bands.astype(jnp.int32)[:, None],
+                                      (N, nab_pp))
+    out2d = banded_delta_mask_rows_pallas(
+        a.reshape(-1, 128), b_sorted.reshape(-1, 128),
+        lo_abs.reshape(-1), n_tiles.reshape(-1), band_per_block.reshape(-1),
+        block_a=block_a, block_b=block_b, max_tiles=nbb_pp,
+        interpret=interpret)
+    out = out2d.reshape(N, pa)
+    return jnp.where(a == I32_SENTINEL, 0, out)
+
+
+def delta_mask_t_bits(mask: jax.Array, bands: jax.Array) -> jax.Array:
+    """Per-group window scan of a delta mask: bit t of the result is set iff
+    the group's mask has a candidate inside the window starting at offset
+    t - W from the anchor, i.e. ((mask >> t) & low(W + 1)) != 0 for
+    t in [0, W].  mask: [N, Pa] int32 from `banded_delta_mask_rows`;
+    bands: [N] int32 (W <= 15).  The K-way combine is a plain AND of these
+    per-group bit sets: the query matches at an anchor iff the AND over all
+    active groups is non-zero (some shared window start survives)."""
+    low = ((jnp.int32(1) << (bands + 1)) - 1)[:, None]     # (W+1) low bits
+    bits = jnp.zeros_like(mask)
+    for t in range(_KW_MAX_BAND + 1):
+        hit = (((mask >> t) & low) != 0) & (t <= bands)[:, None]
+        bits = bits | jnp.where(hit, jnp.int32(1) << t, jnp.int32(0))
+    return bits
+
+
+def kword_window_hits(masks: jax.Array, active: jax.Array,
+                      bands: jax.Array) -> jax.Array:
+    """Combine per-group delta masks into the K-word match bit.
+
+    masks: [G, N, Pa] int32 delta masks (one per constraint group, from
+    `banded_delta_mask_rows`); active: [G, N] bool (dead groups never
+    constrain); bands: [N] int32 window W per row.  Returns bool [N, Pa]:
+    anchor i matches iff some window start t in [0, W] intersects EVERY
+    active group's mask in bits [t, t + W] — i.e. all K words fit inside
+    one (W + 1)-wide window containing the anchor."""
+    t_ok = None
+    for g in range(masks.shape[0]):
+        bits = delta_mask_t_bits(masks[g], bands)
+        bits = jnp.where(active[g][:, None], bits, jnp.int32(-1))
+        t_ok = bits if t_ok is None else (t_ok & bits)
+    if t_ok is None:
+        return jnp.zeros(masks.shape[1:], jnp.bool_)
+    return t_ok != 0
 
 
 def banded_min_delta_rows(a: jax.Array, b_key_sorted: jax.Array,

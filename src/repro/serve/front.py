@@ -607,9 +607,14 @@ class FrontDoor:
         decides WHICH dispatch bucket the request rides in, so the cheap
         group/fetch-count check suffices.)"""
         from repro.core.batch_executor import F_CAP, G_CAP
+        from repro.core.kword import KW_DEVICE_MAX_WINDOW
         for sp in plan.subplans:
             if not sp.supported:
                 continue
+            # kword windows wider than the int32 delta masks run flex-side
+            if sp.kw_window is not None \
+                    and int(sp.kw_window) > KW_DEVICE_MAX_WINDOW:
+                return True
             for gs in (sp.groups, sp.fallback_groups):
                 if len(gs) > G_CAP or any(len(g.fetches) > F_CAP for g in gs):
                     return True

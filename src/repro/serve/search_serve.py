@@ -43,6 +43,7 @@ from repro.core.builder import IndexSet
 from repro.core.engine import _coerce_requests
 from repro.core.executor import SENTINEL, _next_pow2
 from repro.core.fetch_tables import batch_table_specs
+from repro.core.kword import MODE_KWORD
 from repro.core.planner import MODE_PHRASE, Planner
 
 __all__ = ["SearchServeConfig", "SearchServe", "arena_specs",
@@ -148,7 +149,8 @@ def query_table_specs(cfg: SearchServeConfig) -> dict:
 def make_search_serve_step(cfg: SearchServeConfig, mesh,
                            ranked: bool | None = None,
                            p_seed: int | None = None,
-                           postings_pad: int | None = None):
+                           postings_pad: int | None = None,
+                           kword: bool = False):
     """Returns step(arenas, tables) -> (keys [T, F*P0] int64, found bool)
     — plus proximity scores [T, F*P0] float32 when `ranked` (default:
     cfg.ranked), computed by the SAME bucket math the engine jit's and
@@ -184,7 +186,7 @@ def make_search_serve_step(cfg: SearchServeConfig, mesh,
         out = bucket_step_math(
             arena, tt,
             P0=P0, P=Pc, impl=cfg.impl, interpret=cfg.interpret,
-            ranked=ranked)
+            ranked=ranked, kword=kword)
         if ranked:
             a64, found, scores = out
         else:
@@ -245,20 +247,61 @@ class _ServeBatchExecutor(BatchExecutor):
         self._tiers: list | None = None
         self.slab_stats = {"steps": 0, "slab_rows": 0, "live_rows": 0,
                            "slab_elems": 0, "live_elems": 0}
-        self._steps = {(False, cfg.p_seed, cfg.postings_pad):
+        self._steps = {(False, False, cfg.p_seed, cfg.postings_pad):
                        jax.jit(make_search_serve_step(cfg, mesh,
                                                       ranked=False))}
 
     def _step_for(self, ranked: bool, p_seed: int | None = None,
-                  postings_pad: int | None = None):
+                  postings_pad: int | None = None, kword: bool = False):
         cfg = self.cfg
-        key = (ranked, p_seed or cfg.p_seed, postings_pad or cfg.postings_pad)
+        key = (ranked, kword, p_seed or cfg.p_seed,
+               postings_pad or cfg.postings_pad)
         if key not in self._steps:
             self._steps[key] = jax.jit(
                 make_search_serve_step(cfg, self.mesh, ranked=ranked,
                                        p_seed=p_seed,
-                                       postings_pad=postings_pad))
+                                       postings_pad=postings_pad,
+                                       kword=kword))
         return self._steps[key]
+
+    # -- tier-ladder persistence (warm restarts) ----------------------------
+
+    def dump_tiers(self, path):
+        """Write the learned (G, F, P0, P) tier ladder to `path` (JSON) so a
+        fresh executor can warm from it instead of re-deriving (and
+        re-compiling) from its first live batch.  No-op before the ladder
+        exists."""
+        import json
+        if self._tiers is None:
+            return False
+        with open(path, "w") as fh:
+            json.dump({"tiers": [list(t) for t in self._tiers]}, fh)
+        return True
+
+    def load_tiers(self, path) -> bool:
+        """Adopt a previously dumped tier ladder.  Shapes are re-clipped to
+        THIS config's caps (a ladder learned under larger caps stays valid —
+        the caps remain the emergency tier), deduped, and volume-sorted, so a
+        stale file can degrade compile warmth but never correctness."""
+        import json
+        import os
+        if not os.path.exists(path):
+            return False
+        with open(path) as fh:
+            state = json.load(fh)
+        cfg = self.cfg
+        cap = (cfg.groups, cfg.fetch_slots, cfg.p_seed, cfg.postings_pad)
+        tiers = []
+        for t in state.get("tiers", ()):
+            if len(t) != 4 or any(int(x) < 1 for x in t):
+                continue
+            t = tuple(min(int(x), c) for x, c in zip(t, cap))
+            if t not in tiers:
+                tiers.append(t)
+        if not tiers:
+            return False
+        self._tiers = sorted(tiers, key=self._tier_volume)
+        return True
 
     def _build_dp_arenas(self, index: IndexSet):
         """Bucket the global arena to its owning dp shard host-side: shard d
@@ -306,8 +349,8 @@ class _ServeBatchExecutor(BatchExecutor):
         return (cfg.groups, cfg.fetch_slots, cfg.fetch_slots,
                 cfg.p_seed, cfg.postings_pad)
 
-    def _task_fits(self, groups) -> bool:
-        if not super()._task_fits(groups):
+    def _task_fits(self, groups, kword: bool = False) -> bool:
+        if not super()._task_fits(groups, kword=kword):
             return False
         # fixed near-stop slots: checks that don't fit can't be truncated
         # (dropping a check loosens type-4 verification) -> flex
@@ -321,12 +364,16 @@ class _ServeBatchExecutor(BatchExecutor):
         return True
 
     def _run_rows(self, rows: list):
-        # ranked and unranked rows run through separate fixed-shape step
-        # variants (the scoring pass is a different program); each keeps the
-        # chunking and start-remapping of the base executor
+        # ranked/unranked and kword/pairwise rows run through separate
+        # fixed-shape step variants (scoring and the span join are different
+        # programs); each keeps the chunking and start-remapping of the base
+        # executor
         for ranked in (False, True):
-            self._run_rows_variant([r for r in rows if r.task.ranked == ranked],
-                                   ranked)
+            for kword in (False, True):
+                self._run_rows_variant(
+                    [r for r in rows if r.task.ranked == ranked
+                     and (r.task.mode == MODE_KWORD) == kword],
+                    ranked, kword)
 
     def _row_shape(self, row) -> tuple:
         """Pow2-padded (G, F, P0, P) this row actually needs, clipped to the
@@ -372,7 +419,7 @@ class _ServeBatchExecutor(BatchExecutor):
             self._tiers = tiers
         return self._tiers
 
-    def _run_rows_variant(self, rows: list, ranked: bool):
+    def _run_rows_variant(self, rows: list, ranked: bool, kword: bool = False):
         if not rows:
             return
         cfg = self.cfg
@@ -385,7 +432,8 @@ class _ServeBatchExecutor(BatchExecutor):
                          if all(a <= b for a, b in zip(req, t))), cap)
             assign.setdefault(tier, []).append(row)
         for (G, F, P0, Pc), rs in assign.items():
-            step = self._step_for(ranked, p_seed=P0, postings_pad=Pc)
+            step = self._step_for(ranked, p_seed=P0, postings_pad=Pc,
+                                  kword=kword)
             for lo in range(0, len(rs), cfg.task_rows):
                 part = rs[lo:lo + cfg.task_rows]
                 # tight T: pow2-chunked instead of the full fixed slab, so a

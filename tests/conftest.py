@@ -62,6 +62,41 @@ def stop_near_queries(small_world):
 
 
 @pytest.fixture(scope="session")
+def kword_queries(small_world):
+    """Seeded 200-query stop-heavy K-word proximity suite (arXiv:2009.02684,
+    ISSUE 9 acceptance workload): K in {3, 4, 5} word sets sampled from
+    indexed documents at strides 1..3, ~70% with an explicit stop-surface
+    injection, window covering the sampled span plus jitter.  ~10% of the
+    windows exceed the device executors' int32 delta masks (W > 15) so the
+    flexible escape path stays under test.  Yields
+    (surface_ids, window, source_doc) triples."""
+    corpus = small_world["corpus"]
+    lex, ana = small_world["lex"], small_world["ana"]
+    rng = np.random.default_rng(2026)
+    stop_surfaces = [s for s in range(200)
+                     if bool(lex.is_stop(np.asarray(ana.forms_of(s))).any())][:8]
+    queries = []
+    while len(queries) < 200:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        k = int(rng.integers(3, 6))
+        stride = int(rng.integers(1, 4))
+        span = stride * (k - 1) + 1
+        if len(toks) <= span:
+            continue
+        st = int(rng.integers(0, len(toks) - span))
+        q = toks[st:st + span:stride].tolist()
+        if rng.random() < 0.7:
+            q[int(rng.integers(k))] = int(rng.choice(stop_surfaces))
+        if rng.random() < 0.1:
+            window = 16 + int(rng.integers(0, 16))      # flex-only range
+        else:
+            window = max(2, min(span - 1 + int(rng.integers(0, 4)), 15))
+        queries.append((q, window, d))
+    return queries
+
+
+@pytest.fixture(scope="session")
 def paper_queries(small_world):
     """The paper's experiment procedure: random doc, consecutive words (2.1)
     and every-other-word (2.2) queries of 3..5 words."""

@@ -292,6 +292,76 @@ def test_boundary_position_overflow_routes_flex():
         _assert_oracle({"corpus": corpus, "index": index}, q, MODE_PHRASE, r)
 
 
+def _kword_boundary_queries(small_world, k_lo=6, k_hi=9, n=6, seed=41):
+    """Contiguous K in [k_lo, k_hi) word windows from indexed docs with a
+    device-reach span window — the ISSUE's K=6-8 overflow population."""
+    corpus = small_world["corpus"]
+    rng = np.random.default_rng(seed)
+    out = []
+    while len(out) < n:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        k = int(rng.integers(k_lo, k_hi))
+        if len(toks) <= k + 2:
+            continue
+        st = int(rng.integers(0, len(toks) - k))
+        out.append((toks[st:st + k].tolist(), min(k + 1, 15)))
+    return out
+
+
+def test_boundary_kword_many_groups_routes_flex(small_world):
+    """K=6-8 kword plans whose cover still carries > G_CAP AND-groups
+    (shrunk cap: the multi-key cover compresses real K=8 plans under the
+    production cap) must route to flex and stay oracle-identical —
+    positional anchors AND postings accounting."""
+    import repro.core.batch_executor as bx
+    from repro.core import brute_force_kword
+    from repro.core.kword import MODE_KWORD
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    be = BatchExecutor(index, flex=eng.executor)
+    cases = _kword_boundary_queries(small_world, n=6)
+    reqs = [SearchRequest(q, mode=MODE_KWORD, window=w) for q, w in cases]
+    plans = [eng.plan_request(r) for r in reqs]
+    old = bx.G_CAP
+    bx.G_CAP = 3
+    try:
+        over = [i for i, p in enumerate(plans)
+                if any(sp.supported and len(sp.groups) > bx.G_CAP
+                       and all(g.fetches for g in sp.groups)
+                       for sp in p.subplans)]
+        assert len(over) >= 3, "K=6-8 covers never exceeded the shrunk cap"
+        for i in over:
+            assert not be._build_tasks(i, plans[i], []), cases[i]
+        got = be.execute_batch(plans)
+    finally:
+        bx.G_CAP = old
+    for (q, w), req, r in zip(cases, reqs, got):
+        assert _same_result(eng.search(req), r), (q, w)
+        truth_pos, truth_doc = brute_force_kword(corpus, index, q, w)
+        if r.doc_only:
+            assert set(r.doc.tolist()) == truth_doc, (q, w)
+        else:
+            assert set(zip(r.doc.tolist(), r.pos.tolist())) == truth_pos, (q, w)
+
+
+def test_boundary_kword_default_caps_stay_batched(small_world):
+    """The same K=6-8 population at PRODUCTION caps: the multi-key cover
+    must compress every plan under G_CAP so it stays on the device path
+    (guards cover-bloat regressions), still bit-identical to flex."""
+    from repro.core.kword import MODE_KWORD
+    eng = small_world["engine"]
+    be = BatchExecutor(small_world["index"], flex=eng.executor)
+    cases = _kword_boundary_queries(small_world, n=6, seed=43)
+    reqs = [SearchRequest(q, mode=MODE_KWORD, window=w) for q, w in cases]
+    plans = [eng.plan_request(r) for r in reqs]
+    n_batched = sum(bool(be._build_tasks(i, p, []))
+                    for i, p in enumerate(plans))
+    assert n_batched >= 4, n_batched
+    for req, r in zip(reqs, be.execute_batch(plans)):
+        assert _same_result(eng.search(req), r), req
+
+
 @pytest.mark.parametrize("dps", [16, 64])
 def test_search_batch_segmented_shards_match(small_world, dps):
     """Shard-segmented gather: cutting the corpus into many small doc shards

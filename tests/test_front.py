@@ -543,3 +543,54 @@ def test_front_open_loop_smoke_no_shedding(shard_world):
         _ledger_balances(front)
     finally:
         front.close()
+
+
+def test_front_kword_ingest_never_serves_stale_cache(small_world):
+    """K-word twin of the stale-cache regression: a cached kword response
+    must never survive a segment ingest — re-query post-ingest is fresh,
+    EXACT, contains the newly ingested source doc, and is bit-identical to
+    the one-shot engine over the full corpus."""
+    from repro.core.segments import SegmentManager, corpus_batches
+
+    corpus, index = small_world["corpus"], small_world["index"]
+    batches = corpus_batches(corpus, 4)
+    pre_docs = sum(b.n_docs for b in batches[:3])
+    mgr = SegmentManager(small_world["lex"], small_world["ana"],
+                         params=index.params, auto_merge=False)
+    for b in batches[:3]:
+        mgr.ingest(b)
+    # kword query sourced from a batch-4 doc (not yet ingested)
+    d_new = pre_docs + batches[3].n_docs // 2
+    toks = corpus.doc(d_new)
+    req = SearchRequest(tuple(int(x) for x in toks[4:8]), mode="kword",
+                        window=5)
+    front = FrontDoor(segments=mgr,
+                      cfg=FrontDoorConfig(cache_capacity=16, **FAST_CFG))
+    try:
+        first = front.search(req)
+        assert first.status == STATUS_SERVED_EXACT and not first.cached
+        assert all(int(x) < pre_docs for x in first.doc)
+        again = front.search(req)
+        assert again.cached and front.stats.cache_hits == 1
+
+        mgr.ingest(batches[3])              # the index just changed
+
+        fresh = front.search(req)
+        assert not fresh.cached, "served a pre-ingest cached kword response"
+        assert fresh.status == STATUS_SERVED_EXACT
+        assert d_new in set(int(x) for x in fresh.doc)
+        ref = small_world["engine"].search_batch([req])[0]
+        assert np.array_equal(ref.doc, fresh.doc)
+        assert np.array_equal(ref.pos, fresh.pos)
+        assert ref.used_fallback == fresh.used_fallback
+        assert ref.doc_only == fresh.doc_only
+        # postings_read deliberately unasserted: the segment union plans
+        # with the manager's own occ stats (same bits, different accounting)
+        again2 = front.search(req)
+        assert again2.cached and np.array_equal(fresh.doc, again2.doc)
+        assert front.stats.generation_bumps >= 1
+        assert front.stats.stale_cache_hits == 0
+        _ledger_balances(front)
+    finally:
+        front.close()
+        mgr.close()

@@ -1,0 +1,315 @@
+"""K-word proximity search (arXiv:2009.02684 on arXiv:1812.07640 keys),
+locked to the literal nested-loop oracle on every execution path.
+
+ISSUE 9 acceptance contract, on the seeded stop-heavy K in {3,4,5} suite
+(tests/conftest.py::kword_queries, 200 queries):
+
+  * flexible executor (`engine.search`) == `brute_force_kword`, exactly —
+    positional anchors, doc-only fallback docs, span semantics;
+  * `search_batch` == flex, bit for bit (postings accounting included) —
+    the device delta-mask join against the numpy int64 one;
+  * ranked kword: batched == flex bit-identical AND anchor/doc scores match
+    `brute_force_kword_ranked` (arXiv:2108.00410 accumulation) to tolerance;
+  * `SearchServe` == engine on the same workload, ranked included;
+  * the multi-key cover actually covers (most plans read pair/triple
+    streams) and reads fewer postings than the ordinary-index plan;
+  * API validation, the all-stop unsupported combo, wide windows (> the
+    device int32 mask reach) riding flex, and the serve tier-ladder
+    persistence round-trip (satellite: warm restarts).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (SearchRequest, brute_force_kword,
+                        brute_force_kword_ranked)
+from repro.core.kword import KW_DEVICE_MAX_WINDOW, MODE_KWORD
+from repro.core.planner import QTYPE_KWORD
+
+
+def _assert_kword_oracle(corpus, index, q, window, r):
+    truth_pos, truth_doc = brute_force_kword(corpus, index, q, window)
+    if r.doc_only:
+        assert not truth_pos, (q, window)
+        assert set(r.doc.tolist()) == truth_doc, (q, window)
+    else:
+        got = set(zip(r.doc.tolist(), r.pos.tolist()))
+        assert got == truth_pos, (q, window)
+
+
+def _same_result(r1, r2) -> bool:
+    return (np.array_equal(r1.doc, r2.doc) and np.array_equal(r1.pos, r2.pos)
+            and r1.postings_read == r2.postings_read
+            and r1.used_fallback == r2.used_fallback
+            and r1.doc_only == r2.doc_only
+            and r1.subplan_types == r2.subplan_types)
+
+
+def _ranked_same(r1, r2) -> bool:
+    same = _same_result(r1, r2)
+    same = same and np.array_equal(r1.doc_ids, r2.doc_ids)
+    same = same and np.array_equal(r1.doc_scores, r2.doc_scores)
+    if r1.anchor_scores is not None or r2.anchor_scores is not None:
+        same = same and np.array_equal(r1.anchor_scores, r2.anchor_scores)
+    return same
+
+
+def _reqs(queries, **kw):
+    return [SearchRequest(q, mode=MODE_KWORD, window=w, **kw)
+            for q, w, _src in queries]
+
+
+# ---------------------------------------------------------------------------
+# oracle parity: flexible executor, then batched pinned to flex
+# ---------------------------------------------------------------------------
+
+
+def test_flex_matches_kword_oracle(small_world, kword_queries):
+    """engine.search on all 200 queries == the nested-loop span oracle."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    for q, w, _src in kword_queries:
+        r = eng.search(SearchRequest(q, mode=MODE_KWORD, window=w))
+        _assert_kword_oracle(corpus, index, q, w, r)
+
+
+def test_batch_matches_flex_bit_identical(small_world, kword_queries):
+    """search_batch (device delta-mask join) == flex (numpy int64 masks),
+    bit for bit including postings_read / used_fallback / doc_only."""
+    eng = small_world["engine"]
+    results = eng.search_batch(_reqs(kword_queries))
+    for (q, w, _src), r in zip(kword_queries, results):
+        assert _same_result(
+            eng.search(SearchRequest(q, mode=MODE_KWORD, window=w)), r), (q, w)
+
+
+def test_kword_plans_use_multi_key_cover(small_world, kword_queries):
+    """The planner's cover must actually reach the additional indexes: a
+    large share of the stop-heavy workload's supported kword subplans carry
+    pair/triple multi-key fetches (the rest have no stop slot adjacent to a
+    stored key and ride expanded/basic fetches)."""
+    eng = small_world["engine"]
+    n_kword = n_multi = 0
+    for q, w, _src in kword_queries:
+        plan = eng.plan_request(SearchRequest(q, mode=MODE_KWORD, window=w))
+        sps = [sp for sp in plan.subplans if sp.supported]
+        if not sps:
+            continue
+        assert all(sp.qtype == QTYPE_KWORD for sp in sps), q
+        n_kword += 1
+        n_multi += int(any(f.stream == "multi" for sp in sps
+                           for g in sp.groups for f in g.fetches))
+    assert n_kword >= 150, n_kword
+    assert n_multi >= 60, n_multi      # the cover is exercised, not vestigial
+
+
+def test_kword_cover_reads_fewer_postings(small_world, kword_queries):
+    """Acceptance: the multi-key cover plan reads measurably fewer postings
+    than the ordinary-index plan over the suite (mirrors the
+    kword_postings_ratio counter in BENCH_search.json)."""
+    eng, ordi = small_world["engine"], small_world["ordinary"]
+    add = ord_ = 0
+    for q, w, _src in kword_queries[:60]:
+        req = SearchRequest(q, mode=MODE_KWORD, window=w)
+        add += eng.search(req).postings_read
+        ord_ += ordi.search(req).postings_read
+    assert ord_ >= 1.5 * add, (add, ord_)
+
+
+# ---------------------------------------------------------------------------
+# ranked kword (arXiv:2108.00410 accumulation over the span join)
+# ---------------------------------------------------------------------------
+
+
+def test_ranked_kword_matches_oracle_and_flex(small_world, kword_queries):
+    """Ranked kword on a 60-query slice: batched == flex bit-identical, and
+    anchor scores / doc scores / rank order match the nested-loop
+    reference."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    sample = kword_queries[:60]
+    reqs = _reqs(sample, rank=True)
+    results = eng.search_batch(reqs)
+    rtol = 1e-4
+    for req, r in zip(reqs, results):
+        assert _ranked_same(eng.search(req), r), req
+        a_sc, d_sc, d_lvl = brute_force_kword_ranked(
+            corpus, index, req.surface_ids, req.window, ranking=req.ranking)
+        if r.doc_only:
+            assert set(r.doc.tolist()) == d_lvl, req
+            continue
+        got = dict(zip(zip(r.doc.tolist(), r.pos.tolist()),
+                       r.anchor_scores.tolist()))
+        assert set(got) == set(a_sc), (req, sorted(set(got) ^ set(a_sc))[:5])
+        for k, v in got.items():
+            assert abs(v - a_sc[k]) <= rtol * max(1.0, abs(a_sc[k])), (req, k)
+        assert set(r.doc_ids.tolist()) == set(d_sc), req
+        for d, s in zip(r.doc_ids.tolist(), r.doc_scores.tolist()):
+            assert abs(s - d_sc[d]) <= rtol * max(1.0, abs(d_sc[d])), (req, d)
+        for i in range(len(r.doc_ids) - 1):
+            s0, s1 = float(r.doc_scores[i]), float(r.doc_scores[i + 1])
+            assert s0 > s1 or (s0 == s1
+                               and r.doc_ids[i] < r.doc_ids[i + 1]), req
+
+
+# ---------------------------------------------------------------------------
+# serve path: bit-identical to the engine, ranked included
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def kword_serve(small_world):
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.search_serve import SearchServe, SearchServeConfig
+    cfg = SearchServeConfig(queries=16, postings_pad=4096, seed_pad=1024,
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1,
+                            n_multi=1)
+    return SearchServe(small_world["index"], cfg, make_host_mesh(data=1,
+                                                                 model=1))
+
+
+def test_serve_matches_engine_kword(small_world, kword_serve, kword_queries):
+    """SearchServe on the full suite: bit-identical to the engine (which the
+    tests above pin to the oracle), plus a direct oracle slice so serve
+    parity can't hide behind a hypothetical engine bug."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    reqs = _reqs(kword_queries)
+    got = kword_serve.search_batch(reqs)
+    want = eng.search_batch(reqs)
+    for (q, w, _src), wr, gr in zip(kword_queries, want, got):
+        assert _same_result(wr, gr), (q, w)
+    for (q, w, _src), gr in list(zip(kword_queries, got))[:40]:
+        _assert_kword_oracle(corpus, index, q, w, gr)
+
+
+def test_serve_matches_engine_kword_ranked(small_world, kword_serve,
+                                           kword_queries):
+    eng = small_world["engine"]
+    sample = kword_queries[:40]
+    reqs = _reqs(sample, rank=True)
+    for req, wr, gr in zip(reqs, eng.search_batch(reqs),
+                           kword_serve.search_batch(reqs)):
+        assert _ranked_same(wr, gr), req
+
+
+# ---------------------------------------------------------------------------
+# semantics edges: wide windows, all-stop combos, source-doc recall
+# ---------------------------------------------------------------------------
+
+
+def test_wide_window_rides_flex_and_matches_oracle(small_world,
+                                                   kword_queries):
+    """Windows beyond the device int32 delta-mask reach (W > 15) must route
+    to the flexible executor and still match the oracle bit for bit."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    be = eng.batch_executor
+    wide = [(q, w) for q, w, _src in kword_queries
+            if w > KW_DEVICE_MAX_WINDOW]
+    assert len(wide) >= 10, len(wide)     # the fixture promises ~10%
+    plans = [eng.plan_request(SearchRequest(q, mode=MODE_KWORD, window=w))
+             for q, w in wide]
+    n_flex = 0
+    for i, p in enumerate(plans):
+        if not any(sp.supported for sp in p.subplans):
+            continue        # all-stop combo: empty plan, nothing to route
+        assert not be._build_tasks(i, p, []), wide[i]
+        n_flex += 1
+    assert n_flex >= 8, n_flex
+    for (q, w), r in zip(wide, be.execute_batch(plans)):
+        assert _same_result(
+            eng.search(SearchRequest(q, mode=MODE_KWORD, window=w)), r), q
+        _assert_kword_oracle(corpus, index, q, w, r)
+
+
+def test_all_stop_kword_unsupported_matches_oracle(small_world):
+    """A query whose every slot is stop-only has no anchor: the planner
+    marks the combo unsupported and the oracle skips it — both sides must
+    agree (empty positional result, no phantom fallback docs)."""
+    lex, ana = small_world["lex"], small_world["ana"]
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    all_stop = [s for s in range(400)
+                if bool(lex.is_stop(np.asarray(ana.forms_of(s))).all())][:3]
+    if len(all_stop) < 3:
+        pytest.skip("lexicon seed yields < 3 stop-only surfaces")
+    r = eng.search(SearchRequest(all_stop, mode=MODE_KWORD, window=4))
+    _assert_kword_oracle(corpus, index, all_stop, 4, r)
+    truth_pos, _ = brute_force_kword(corpus, index, all_stop, 4)
+    assert not truth_pos and len(r.pos) == 0
+
+
+def test_kword_source_doc_recall(small_world, kword_queries):
+    """Every query was sampled from a real document span of width <= W, so
+    a non-doc-only result missing its source doc must be missing it in the
+    oracle too (i.e. only when the sampled span's tier combo was all-stop,
+    which the additional engine does not serve)."""
+    eng = small_world["engine"]
+    corpus, index = small_world["corpus"], small_world["index"]
+    checked = 0
+    for (q, w, src), r in zip(kword_queries,
+                              eng.search_batch(_reqs(kword_queries))):
+        if src not in set(r.doc.tolist()):
+            truth_pos, truth_doc = brute_force_kword(corpus, index, q, w)
+            assert src not in {d for d, _p in truth_pos}, (q, w, src)
+            if r.doc_only:
+                assert src not in truth_doc, (q, w, src)
+        checked += 1
+    assert checked == 200
+
+
+# ---------------------------------------------------------------------------
+# API validation
+# ---------------------------------------------------------------------------
+
+
+def test_kword_request_validation():
+    with pytest.raises(ValueError):
+        SearchRequest([1], mode=MODE_KWORD, window=4)       # K < 2
+    with pytest.raises(ValueError):
+        SearchRequest([1, 2, 3], mode=MODE_KWORD)           # window required
+    with pytest.raises(ValueError):
+        SearchRequest([1, 2, 3], mode=MODE_KWORD, window=0)
+    with pytest.raises(ValueError):
+        SearchRequest([1, 2, 3], mode=MODE_KWORD, window=32)  # > flex reach
+    SearchRequest([1, 2, 3], mode=MODE_KWORD, window=31)    # max OK
+
+
+# ---------------------------------------------------------------------------
+# satellite: serve tier-ladder persistence (warm restarts)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_tier_ladder_round_trip(small_world, kword_serve,
+                                      kword_queries, tmp_path):
+    """dump_tiers/load_tiers: a fresh _ServeBatchExecutor warmed from file
+    carries the learned (G, F, P0, P) ladder verbatim and answers the same
+    workload bit-identically; stale entries beyond the config caps are
+    clipped, junk entries dropped."""
+    import json
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.search_serve import SearchServe, SearchServeConfig
+    sample = kword_queries[:24]
+    reqs = _reqs(sample)
+    want = kword_serve.search_batch(reqs)     # learns the ladder
+    be = kword_serve.executor
+    assert be._tiers, "serve executor never derived a tier ladder"
+    path = tmp_path / "tiers.json"
+    assert be.dump_tiers(path)
+    cfg = SearchServeConfig(queries=16, postings_pad=4096, seed_pad=1024,
+                            n_basic=1, n_expanded=1, n_stop=1, n_first=1,
+                            n_multi=1)
+    fresh = SearchServe(small_world["index"], cfg,
+                        make_host_mesh(data=1, model=1))
+    assert fresh.executor._tiers is None
+    assert fresh.executor.load_tiers(path)
+    assert fresh.executor._tiers == be._tiers
+    for (q, w, _src), wr, gr in zip(sample, want, fresh.search_batch(reqs)):
+        assert _same_result(wr, gr), (q, w)
+    # corrupt/stale files degrade warmth, never correctness
+    assert not fresh.executor.load_tiers(tmp_path / "missing.json")
+    oversized = {"tiers": [[9999, 9999, 99999, 99999], [0, 1, 1, 1], [2, 1]]}
+    (tmp_path / "stale.json").write_text(json.dumps(oversized))
+    assert fresh.executor.load_tiers(tmp_path / "stale.json")
+    cap = (cfg.groups, cfg.fetch_slots, cfg.p_seed, cfg.postings_pad)
+    assert fresh.executor._tiers == [cap]          # clipped to caps, junk dropped

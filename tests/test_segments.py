@@ -302,3 +302,90 @@ def test_serve_union_parity(small_world, manager):
     got = manager.search_batch(reqs, backends=backends, plan_index=index)
     for q, (r, g) in zip(reqs, zip(ref, got)):
         _assert_identical(r, g, accounting=True, ctx=q)
+
+
+# ---------------------------------------------------------------------------
+# K-word proximity across the segment lifecycle (arXiv:2009.02684)
+# ---------------------------------------------------------------------------
+
+
+def _kword_requests(corpus, n=24, seed=27):
+    """K in {3,4,5} contiguous windows from indexed docs, span-wide window,
+    every third ranked — the segment-union kword population."""
+    rng = np.random.default_rng(seed)
+    out = []
+    while len(out) < n:
+        d = int(rng.integers(corpus.n_docs))
+        toks = corpus.doc(d)
+        k = int(rng.integers(3, 6))
+        if len(toks) <= k + 4:
+            continue
+        st = int(rng.integers(0, len(toks) - k - 1))
+        i = len(out)
+        out.append(SearchRequest(tuple(int(x) for x in toks[st:st + k]),
+                                 mode="kword", window=min(k + 1, 15),
+                                 rank=(i % 3 == 0)))
+    return out
+
+
+def test_kword_union_and_merge_parity(small_world, manager):
+    """K-word spans across 4 live segments (global doc grid, cluster-global
+    occ pivots) are bit-identical to the one-shot engine; after the merge
+    the manager's OWN planner matches with accounting, and positional
+    anchors match the nested-loop oracle."""
+    from repro.core import brute_force_kword
+
+    corpus, index = small_world["corpus"], small_world["index"]
+    for b in corpus_batches(corpus, 4):
+        manager.ingest(b)
+    reqs = _kword_requests(corpus, n=24)
+    ref = small_world["engine"].search_batch(reqs)
+    got = manager.search_batch(reqs, plan_index=index)
+    for q, (r, g) in zip(reqs, zip(ref, got)):
+        _assert_identical(r, g, accounting=True, ctx=q)
+    own = manager.search_batch(reqs)
+    for q, (r, g) in zip(reqs, zip(ref, own)):
+        _assert_identical(r, g, accounting=False, ctx=q)
+
+    assert manager.merge_now()
+    merged = manager.search_batch(reqs)
+    for q, (r, g) in zip(reqs, zip(ref, merged)):
+        _assert_identical(r, g, accounting=True, ctx=q)
+    for q, g in list(zip(reqs, merged))[:8]:
+        positional, doc_level = brute_force_kword(
+            corpus, index, list(q.surface_ids), q.window)
+        if g.doc_only:
+            assert set(g.doc.tolist()) == doc_level, q
+        else:
+            assert set(zip(g.doc.tolist(), g.pos.tolist())) == positional, q
+
+
+def test_kword_search_during_background_merge(small_world):
+    """kword queries racing a live background merge return EXACT
+    post-ingest answers at every poll — never a pre-merge/pre-ingest
+    partial — and the post-merge steady state matches the one-shot
+    engine with accounting."""
+    corpus = small_world["corpus"]
+    mgr = SegmentManager(small_world["lex"], small_world["ana"],
+                         small_world["index"].params,
+                         merge_threshold=2, auto_merge=True)
+    try:
+        for b in corpus_batches(corpus, 4):
+            mgr.ingest(b)
+        reqs = _kword_requests(corpus, n=8, seed=29)
+        ref = small_world["engine"].search_batch(reqs)
+        deadline = time.monotonic() + 60.0
+        polls = 0
+        while time.monotonic() < deadline:
+            for q, (r, g) in zip(reqs, zip(ref, mgr.search_batch(reqs))):
+                _assert_identical(r, g, accounting=False, ctx=q)
+            polls += 1
+            if len(mgr.segments) == 1 and mgr.merges_completed >= 1:
+                break
+            time.sleep(0.05)
+        assert len(mgr.segments) == 1, [s.state for s in mgr.segments]
+        assert polls >= 1
+        for q, (r, g) in zip(reqs, zip(ref, mgr.search_batch(reqs))):
+            _assert_identical(r, g, accounting=True, ctx=q)
+    finally:
+        mgr.close()
